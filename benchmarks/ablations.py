@@ -1,0 +1,136 @@
+"""Paper §5 ablations: modality-aware partitioning (§5.1), adaptive updates +
+flash quantization (§5.2), hybrid fusion components (§5.3)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import (Decoupled, build_hmgi, load_corpus,
+                               make_queries, primary_mod, timeit)
+from repro.core import delta as delta_mod
+from repro.core import ivf as ivf_mod
+from repro.core import partitioner
+from repro.data.synthetic import ground_truth_topk, recall_at_k
+
+
+def _corpus_q(ds="mm-codex-s", n=64):
+    corpus = load_corpus(ds)
+    mod = primary_mod(ds)
+    q = make_queries(corpus, mod, n)
+    truth = ground_truth_topk(corpus.vectors[mod], corpus.node_ids[mod], q, 10)
+    return corpus, mod, q, truth
+
+
+def ablation_partitioning(report):
+    """§5.1: modality-aware K-means vs monolithic vs random partitions."""
+    corpus, mod, q, truth = _corpus_q()
+    v = corpus.vectors[mod]
+    v = v / np.maximum(np.linalg.norm(v, axis=1, keepdims=True), 1e-9)
+    ids = jnp.asarray(corpus.node_ids[mod])
+    key = jax.random.PRNGKey(0)
+    n, d = v.shape
+    kparts = 32
+
+    # modality-aware K-means partitions (ours)
+    km, _ = ivf_mod.build(key, jnp.asarray(v), ids, n_partitions=kparts, bits=8)
+    # random partitioning (same structure, random centroids)
+    rand_cent = jax.random.normal(jax.random.PRNGKey(7), (kparts, d))
+    rnd, _ = ivf_mod.build(key, jnp.asarray(v), ids, n_partitions=kparts,
+                           bits=8, centroids=rand_cent)
+
+    for name, idx in (("kmeans", km), ("random", rnd)):
+        t = timeit(lambda: ivf_mod.search(idx, jnp.asarray(q), n_probe=4, k=10))
+        r = recall_at_k(np.asarray(
+            ivf_mod.search(idx, jnp.asarray(q), n_probe=4, k=10)[1]), truth)
+        # search-space fraction actually scanned
+        frac = 4 / kparts
+        report(f"a51_partition_{name}", t / len(q) * 1e6,
+               f"recall={r:.3f} scanned={frac:.2f}")
+    # monolithic: n_probe = all partitions (full scan)
+    t = timeit(lambda: ivf_mod.search(km, jnp.asarray(q), n_probe=kparts, k=10))
+    r = recall_at_k(np.asarray(
+        ivf_mod.search(km, jnp.asarray(q), n_probe=kparts, k=10)[1]), truth)
+    report("a51_partition_monolithic", t / len(q) * 1e6,
+           f"recall={r:.3f} scanned=1.00")
+
+
+def ablation_updates(report):
+    """§5.2: MVCC delta vs full rebuild on a 10% churn batch; flash-quant
+    memory/recall trade."""
+    corpus, mod, q, truth = _corpus_q()
+    v = corpus.vectors[mod]
+    v = v / np.maximum(np.linalg.norm(v, axis=1, keepdims=True), 1e-9)
+    n, d = v.shape
+    ids = jnp.asarray(corpus.node_ids[mod])
+    key = jax.random.PRNGKey(0)
+    idx, _ = ivf_mod.build(key, jnp.asarray(v), ids, n_partitions=32, bits=8)
+    churn = max(n // 10, 1)
+    newv = jnp.asarray(v[:churn] * 0.99)
+    new_ids = jnp.arange(churn, dtype=jnp.int32) + corpus.n_nodes
+
+    # delta-store ingestion (ours)
+    def with_delta():
+        d_ = delta_mod.init(2 * churn, d, max_ids=corpus.n_nodes + 2 * churn)
+        d_ = delta_mod.insert(d_, newv, new_ids)
+        return delta_mod.search_with_delta(idx, d_, jnp.asarray(q), n_probe=4, k=10)
+
+    t_delta = timeit(with_delta, trials=3)
+
+    # full rebuild baseline
+    allv = jnp.concatenate([jnp.asarray(v), newv])
+    allids = jnp.concatenate([ids, new_ids])
+
+    def rebuild():
+        i2, _ = ivf_mod.build(key, allv, allids, n_partitions=32, bits=8)
+        return ivf_mod.search(i2, jnp.asarray(q), n_probe=4, k=10)
+
+    t_rebuild = timeit(rebuild, trials=3)
+    report("a52_update_delta", t_delta * 1e3,
+           f"rebuild_ms={t_rebuild*1e3:.1f} speedup={t_rebuild/t_delta:.1f}x")
+
+    # flash quantization: memory + recall at 16/8/4 bits
+    for bits in (16, 8, 4):
+        ib, _ = ivf_mod.build(key, jnp.asarray(v), ids, n_partitions=32,
+                              bits=bits)
+        r = recall_at_k(np.asarray(
+            ivf_mod.search(ib, jnp.asarray(q), n_probe=8, k=10)[1]), truth)
+        report(f"a52_quant_{bits}bit", ib.nbytes / 2 ** 20,
+               f"recall={r:.3f} MiB={ib.nbytes/2**20:.2f}")
+
+
+def ablation_fusion(report):
+    """§5.3: fused hybrid vs sequential decoupled; adaptive vs fixed weights;
+    community boost on/off."""
+    corpus, mod, q, truth = _corpus_q()
+    hmgi = build_hmgi(corpus)
+    dec = Decoupled(corpus, hmgi)
+
+    t_fused = timeit(lambda: hmgi.hybrid_search(q, mod, k=10, n_hops=2))
+    t_seq = timeit(lambda: dec.hybrid_search(q, mod, k=10, n_hops=2))
+    report("a53_fused", t_fused / len(q) * 1e6, f"qps={len(q)/t_fused:.0f}")
+    report("a53_sequential", t_seq / len(q) * 1e6,
+           f"qps={len(q)/t_seq:.0f} fused_speedup={t_seq/t_fused:.2f}x")
+
+    # adaptive vs fixed fusion weights: recall of known-item queries
+    hmgi_fixed = build_hmgi(corpus, adaptive=False)
+    r_adapt = recall_at_k(np.asarray(hmgi.hybrid_search(q, mod, k=10)[1]), truth)
+    r_fixed = recall_at_k(np.asarray(hmgi_fixed.hybrid_search(q, mod, k=10)[1]),
+                          truth)
+    report("a53_adaptive_weights", r_adapt * 1000, f"recall={r_adapt:.3f}")
+    report("a53_fixed_weights", r_fixed * 1000, f"recall={r_fixed:.3f}")
+
+    # community-boosted traversal on/off
+    boosted = hmgi.boosted_weights
+    hmgi.boosted_weights = None
+    r_plain = recall_at_k(np.asarray(hmgi.hybrid_search(q, mod, k=10)[1]), truth)
+    hmgi.boosted_weights = boosted
+    report("a53_no_community_boost", r_plain * 1000, f"recall={r_plain:.3f}")
+
+
+def run(report):
+    ablation_partitioning(report)
+    ablation_updates(report)
+    ablation_fusion(report)

@@ -1,0 +1,129 @@
+"""Shared benchmark utilities: corpora registry, timing, baseline systems.
+
+"Systems" compared (the paper's Table 4-7 competitors are closed-source
+servers; we implement the *algorithmic* baselines they represent):
+  hmgi        — full system: modality-aware IVF + delta + hybrid fusion
+  monolithic  — single brute-force index (pure-vector-DB stand-in)
+  decoupled   — separate vector search then graph filter, two round trips
+                (the dual-database / federation baseline)
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import HMGIIndex
+from repro.core import ivf as ivf_mod
+from repro.core import traversal as trav_mod
+from repro.data.synthetic import MultimodalCorpus, ground_truth_topk, make_corpus, recall_at_k
+
+# scaled-down stand-ins for the paper's datasets (name -> (n_nodes, dims))
+DATASETS: Dict[str, dict] = {
+    "sift1b-s": dict(n_nodes=8192, modality_dims={"image": 128}, primary="image"),
+    "deep1b-s": dict(n_nodes=8192, modality_dims={"image": 96}, primary="image"),
+    "dec-10k": dict(n_nodes=10_000, modality_dims={"text": 64, "audio": 80},
+                    primary="text"),
+    "mm-codex-s": dict(n_nodes=6144, modality_dims={"text": 64, "image": 96},
+                       primary="text"),
+}
+
+
+def load_corpus(name: str, seed: int = 0) -> MultimodalCorpus:
+    spec = dict(DATASETS[name])
+    spec.pop("primary")
+    return make_corpus(seed=seed, **spec)
+
+
+def primary_mod(name: str) -> str:
+    return DATASETS[name]["primary"]
+
+
+def timeit(fn: Callable, *args, trials: int = 5, warmup: int = 2, **kw) -> float:
+    """Median wall seconds per call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def build_hmgi(corpus, *, bits=8, n_partitions=32, n_probe=8, seed=0,
+               adaptive=True, **over):
+    cfg = get_config("hmgi").replace(
+        n_partitions=n_partitions, n_probe=n_probe, kmeans_iters=8,
+        quant_bits=bits, adaptive_weights=adaptive, delta_capacity=512, **over)
+    idx = HMGIIndex(cfg, seed=seed)
+    idx.ingest({m: (corpus.node_ids[m], corpus.vectors[m])
+                for m in corpus.vectors}, n_nodes=corpus.n_nodes,
+               edges=(corpus.src, corpus.dst, corpus.edge_type))
+    return idx
+
+
+@dataclass
+class Monolithic:
+    """All modalities in one flat brute-force matrix (pure-vector baseline)."""
+    vectors: jax.Array
+    ids: jax.Array
+    valid: jax.Array
+
+    @classmethod
+    def build(cls, corpus):
+        vs, ids = [], []
+        dmax = max(v.shape[1] for v in corpus.vectors.values())
+        for m, v in corpus.vectors.items():
+            v = v / np.maximum(np.linalg.norm(v, axis=1, keepdims=True), 1e-9)
+            pad = np.zeros((len(v), dmax - v.shape[1]), np.float32)
+            vs.append(np.concatenate([v, pad], 1))
+            ids.append(corpus.node_ids[m])
+        vs = np.concatenate(vs)
+        ids = np.concatenate(ids)
+        return cls(jnp.asarray(vs), jnp.asarray(ids),
+                   jnp.ones((len(ids),), bool))
+
+    def search(self, q, k=10):
+        d = q.shape[1]
+        qp = jnp.pad(jnp.asarray(q), ((0, 0), (0, self.vectors.shape[1] - d)))
+        qp = qp / jnp.maximum(jnp.linalg.norm(qp, axis=1, keepdims=True), 1e-9)
+        return ivf_mod.brute_force(self.vectors, self.valid, self.ids, qp, k=k)
+
+
+class Decoupled:
+    """Two-stage federation baseline: vector search round trip, then a
+    separate graph-system round trip (sequential, unfused scores — the
+    paper's dual-database architecture)."""
+
+    def __init__(self, corpus, hmgi: HMGIIndex):
+        self.hmgi = hmgi
+        self.graph = hmgi.graph
+
+    def hybrid_search(self, q, modality, k=10, n_hops=2):
+        # round trip 1: vector store
+        vs, vi = self.hmgi.search(q, modality, k=k)
+        jax.block_until_ready(vs)          # federation boundary (serialize)
+        # round trip 2: graph store expansion, unweighted re-rank
+        gs = trav_mod.multi_hop_batch(self.graph, vi, vs, n_hops=n_hops)
+        jax.block_until_ready(gs)
+        # naive post-hoc combine (no adaptive fusion)
+        rows = jnp.arange(q.shape[0])[:, None]
+        base = jnp.full((q.shape[0], self.graph.n_nodes), -jnp.inf)
+        base = base.at[rows, jnp.clip(vi, 0, self.graph.n_nodes - 1)].set(vs)
+        comb = jnp.where(jnp.isfinite(base), base, 0.0) + gs
+        comb = jnp.where(jnp.isfinite(base) | (gs > 0), comb, -jnp.inf)
+        vals, ids = jax.lax.top_k(comb, k)
+        return vals, ids
+
+
+def make_queries(corpus, modality, n=64, seed=3, noise=0.05):
+    rng = np.random.default_rng(seed)
+    v = corpus.vectors[modality]
+    sel = rng.integers(0, len(v), n)
+    return (v[sel] + noise * rng.normal(size=(n, v.shape[1]))).astype(np.float32)

@@ -1,0 +1,56 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT TPU-predictive;
+the derived column carries the analytic bytes/flops that the roofline uses —
+the comparison of interest on CPU is kernel-vs-oracle agreement + the scan's
+arithmetic-intensity accounting)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.core.quantization import quantize
+from repro.kernels.ivf_topk.ops import scan_topk_quantized
+from repro.kernels.ivf_topk.ref import scan_topk_ref, topk_from_chunks
+from repro.kernels.segment_reduce.ops import segment_sum_mm
+from repro.kernels.segment_reduce.ref import segment_sum_ref
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+
+    # ivf_topk: HBM bytes per query at int8 vs bf16 storage
+    n, d, q = 8192, 128, 64
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    qv = quantize(jnp.asarray(v), 8)
+    queries = jnp.asarray(v[:q])
+    valid = jnp.ones((n,), bool)
+    t_k = timeit(lambda: scan_topk_quantized(queries, qv.data, qv.vmin[:, 0],
+                                             qv.scale[:, 0], valid, k=10),
+                 trials=3)
+    int8_bytes = n * d
+    bf16_bytes = n * d * 2
+    report("k_ivf_topk_int8", t_k / q * 1e6,
+           f"hbm_bytes_per_scan={int8_bytes} vs_bf16={bf16_bytes} (2x saved)")
+
+    # segment_reduce: one-hot-matmul MXU formulation
+    e, dd, nn = 8192, 64, 1024
+    msg = jnp.asarray(rng.normal(size=(e, dd)).astype(np.float32))
+    seg = jnp.asarray(rng.integers(0, nn, e).astype(np.int32))
+    t_k = timeit(lambda: segment_sum_mm(msg, seg, nn), trials=3)
+    t_r = timeit(lambda: segment_sum_ref(msg, seg, nn), trials=3)
+    mxu_flops = 2 * e * nn * dd   # the one-hot matmul the TPU would run
+    report("k_segment_reduce", t_k * 1e6,
+           f"ref_us={t_r*1e6:.0f} mxu_flops={mxu_flops:.2e}")
+
+    # decode_attention: flash-decode bytes per token
+    b, hkv, g, hd, s = 4, 8, 8, 128, 4096
+    qa = jnp.asarray(rng.normal(size=(b, hkv * g, hd)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+    vv = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+    valid = jnp.ones((b, s), bool)
+    t_k = timeit(lambda: decode_attention(qa, k, vv, valid), trials=3)
+    kv_bytes = 2 * b * s * hkv * hd * 4
+    report("k_decode_attention", t_k * 1e6,
+           f"kv_bytes={kv_bytes:.2e} tokens={b}")

@@ -1,0 +1,55 @@
+"""Paper-table reproductions (Tables 4-7): QPS, Recall@10, memory, latency
+across datasets x systems, on scaled-down stand-in corpora."""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+import jax
+
+from benchmarks.common import (DATASETS, Decoupled, Monolithic, build_hmgi,
+                               load_corpus, make_queries, primary_mod, timeit)
+from repro.data.synthetic import ground_truth_topk, recall_at_k
+
+
+def run(report) -> None:
+    k = 10
+    for ds in DATASETS:
+        corpus = load_corpus(ds)
+        mod = primary_mod(ds)
+        q = make_queries(corpus, mod)
+        truth = ground_truth_topk(corpus.vectors[mod], corpus.node_ids[mod], q, k)
+
+        hmgi = build_hmgi(corpus)
+        mono = Monolithic.build(corpus)
+
+        # Table 7 (latency) + Table 4 (QPS): batched vector search
+        t_h = timeit(lambda: hmgi.search(q, mod, k=k))
+        t_m = timeit(lambda: mono.search(q, k=k))
+        report(f"t7_latency_hmgi[{ds}]", t_h / len(q) * 1e6,
+               f"qps={len(q)/t_h:.0f}")
+        report(f"t7_latency_monolithic[{ds}]", t_m / len(q) * 1e6,
+               f"qps={len(q)/t_m:.0f}")
+
+        # Table 5: recall@10
+        r_h = recall_at_k(np.asarray(hmgi.search(q, mod, k=k)[1]), truth)
+        r_m = recall_at_k(np.asarray(mono.search(q, k=k)[1]), truth)
+        report(f"t5_recall_hmgi[{ds}]", r_h * 1000, f"recall@10={r_h:.3f}")
+        report(f"t5_recall_monolithic[{ds}]", r_m * 1000, f"recall@10={r_m:.3f}")
+
+        # Table 6: memory (index bytes)
+        mem_h = hmgi.memory_usage()["total"]
+        mem_m = int(mono.vectors.size * mono.vectors.dtype.itemsize)
+        report(f"t6_memory_hmgi[{ds}]", mem_h / 2 ** 20,
+               f"MiB={mem_h/2**20:.1f}")
+        report(f"t6_memory_monolithic[{ds}]", mem_m / 2 ** 20,
+               f"MiB={mem_m/2**20:.1f}")
+
+        # hybrid workload: fused vs decoupled (the paper's 3x QPS claim)
+        dec = Decoupled(corpus, hmgi)
+        t_fused = timeit(lambda: hmgi.hybrid_search(q, mod, k=k, n_hops=2))
+        t_dec = timeit(lambda: dec.hybrid_search(q, mod, k=k, n_hops=2))
+        report(f"t4_hybrid_qps_hmgi[{ds}]", t_fused / len(q) * 1e6,
+               f"qps={len(q)/t_fused:.0f}")
+        report(f"t4_hybrid_qps_decoupled[{ds}]", t_dec / len(q) * 1e6,
+               f"qps={len(q)/t_dec:.0f} speedup={t_dec/t_fused:.2f}x")

@@ -1,0 +1,50 @@
+"""Benchmark harness — one module per paper table/figure.
+
+  paper_tables  — Tables 4-7: QPS / recall@10 / memory / latency,
+                  HMGI vs monolithic vs decoupled baselines
+  ablations     — §5.1 partitioning, §5.2 updates+quantization, §5.3 fusion
+  scaling       — §4.5 sub-linear query scaling
+  kernels_bench — Pallas kernel accounting
+
+Prints ``name,us_per_call,derived`` CSV.
+Usage: PYTHONPATH=src python -m benchmarks.run [--only <module>]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["paper_tables", "ablations", "scaling",
+                             "kernels_bench"])
+    args = ap.parse_args()
+
+    rows = []
+
+    def report(name: str, us_per_call: float, derived: str = ""):
+        rows.append((name, us_per_call, derived))
+        print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+    from benchmarks import ablations, kernels_bench, paper_tables, scaling
+    mods = {"paper_tables": paper_tables, "ablations": ablations,
+            "scaling": scaling, "kernels_bench": kernels_bench}
+    selected = [mods[args.only]] if args.only else list(mods.values())
+
+    print("name,us_per_call,derived")
+    failed = 0
+    for mod in selected:
+        try:
+            mod.run(report)
+        except Exception:  # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+    print(f"# done: {len(rows)} rows, {failed} module failures", flush=True)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

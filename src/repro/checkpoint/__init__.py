@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpoint import (
+    CheckpointManager, restore_checkpoint, save_checkpoint,
+)

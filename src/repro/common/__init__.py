@@ -1,0 +1,1 @@
+from repro.common.tree import count_params, tree_bytes, tree_finite

@@ -1,0 +1,85 @@
+"""Parameter construction: arrays + logical sharding axes built together.
+
+Every ``init_*`` function uses a ``Builder`` so the parameter pytree and the
+logical-axes pytree (same structure, tuples of logical axis names at leaves)
+can never drift apart. ``jax.eval_shape`` over an init function yields the
+abstract parameter tree used by the multi-pod dry-run (no allocation).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Builder:
+    """Collects (params, logical_axes) pairs under split PRNG keys."""
+
+    def __init__(self, key: jax.Array, dtype=jnp.float32):
+        self._key = key
+        self.dtype = dtype
+        self.params: dict = {}
+        self.axes: dict = {}
+
+    def key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def dense(self, name: str, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+              fan_in: Optional[int] = None, scale: float = 1.0, dtype=None):
+        assert len(shape) == len(axes), (name, shape, axes)
+        fi = fan_in if fan_in is not None else shape[0]
+        std = scale / math.sqrt(max(fi, 1))
+        self.params[name] = (jax.random.normal(self.key(), shape, jnp.float32) * std
+                             ).astype(dtype or self.dtype)
+        self.axes[name] = axes
+        return self
+
+    def zeros(self, name, shape, axes, dtype=None):
+        self.params[name] = jnp.zeros(shape, dtype or self.dtype)
+        self.axes[name] = axes
+        return self
+
+    def ones(self, name, shape, axes, dtype=None):
+        self.params[name] = jnp.ones(shape, dtype or self.dtype)
+        self.axes[name] = axes
+        return self
+
+    def child(self, name: str, sub: "Builder"):
+        self.params[name] = sub.params
+        self.axes[name] = sub.axes
+        return self
+
+    def sub(self) -> "Builder":
+        return Builder(self.key(), self.dtype)
+
+    def build(self):
+        return self.params, self.axes
+
+
+def abstract_init(init_fn, *args):
+    """Abstract (no-allocation) init: returns (ShapeDtypeStruct tree, axes tree).
+
+    ``init_fn(*args) -> (params, axes)``; the axes tree (strings) is captured
+    by side effect since eval_shape can only return JAX types.
+    """
+    box = {}
+
+    def capture(*a):
+        p, ax = init_fn(*a)
+        box["axes"] = ax
+        return p
+
+    abs_params = jax.eval_shape(capture, *args)
+    return abs_params, box["axes"]
+
+
+def stack_layers(per_layer: list):
+    """Stack a list of (params, axes) into scanned (L, ...) params."""
+    params = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *[p for p, _ in per_layer])
+    axes = jax.tree.map(lambda a: (None,) + tuple(a), per_layer[0][1],
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            e is None or isinstance(e, str) for e in x))
+    return params, axes

@@ -1,0 +1,39 @@
+"""Pytree utilities shared across the framework."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def count_params(tree) -> int:
+    """Total number of scalar parameters in a pytree of arrays."""
+    leaves = jax.tree.leaves(tree)
+    return int(sum(np.prod(l.shape) for l in leaves if hasattr(l, "shape")))
+
+
+def tree_bytes(tree) -> int:
+    """Total bytes of a pytree of (concrete or abstract) arrays."""
+    total = 0
+    for l in jax.tree.leaves(tree):
+        if hasattr(l, "shape") and hasattr(l, "dtype"):
+            total += int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+    return total
+
+
+def tree_finite(tree) -> jax.Array:
+    """Scalar bool: every float leaf is finite (used by smoke tests / fault guard)."""
+    leaves = [l for l in jax.tree.leaves(tree) if jnp.issubdtype(jnp.asarray(l).dtype, jnp.floating)]
+    if not leaves:
+        return jnp.asarray(True)
+    oks = [jnp.all(jnp.isfinite(l)) for l in leaves]
+    out = oks[0]
+    for o in oks[1:]:
+        out = jnp.logical_and(out, o)
+    return out
+
+
+def global_norm(tree) -> jax.Array:
+    """L2 norm over all leaves (gradient clipping)."""
+    sq = sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)

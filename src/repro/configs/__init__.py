@@ -1,0 +1,76 @@
+"""Architecture registry: ``--arch <id>`` resolution for every assigned config."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List, Tuple
+
+from repro.configs.base import (
+    ArchConfig, GNNConfig, HMGIConfig, LMConfig, RecsysConfig, ShapeSpec,
+)
+
+_MODULES = {
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "phi4-mini-3.8b": "repro.configs.phi4_mini",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite",
+    "dimenet": "repro.configs.dimenet",
+    "egnn": "repro.configs.egnn",
+    "nequip": "repro.configs.nequip",
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    "xdeepfm": "repro.configs.xdeepfm",
+    "hmgi": "repro.configs.hmgi",
+}
+
+ASSIGNED_ARCHS: Tuple[str, ...] = tuple(a for a in _MODULES if a != "hmgi")
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).CONFIG
+
+
+def get_shapes(arch_id: str) -> List[ShapeSpec]:
+    return importlib.import_module(_MODULES[arch_id]).SHAPES
+
+
+def all_cells(include_skipped: bool = True):
+    """Yield every (arch_id, ShapeSpec) cell of the assignment (40 total)."""
+    for arch in ASSIGNED_ARCHS:
+        for shape in get_shapes(arch):
+            if include_skipped or not shape.skip:
+                yield arch, shape
+
+
+def smoke_config(arch_id: str) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests (small widths/layers)."""
+    cfg = get_config(arch_id)
+    if isinstance(cfg, LMConfig):
+        kw = dict(
+            n_layers=2, d_model=64, n_heads=4, head_dim=16,
+            n_kv_heads=min(cfg.n_kv_heads, 2), d_ff=128, vocab_size=512,
+            scan_layers=True, remat=False,
+        )
+        if cfg.moe:
+            kw.update(n_experts=min(cfg.n_experts, 4), top_k=min(cfg.top_k, 2),
+                      moe_d_ff=64, dense_d_ff=128,
+                      n_shared_experts=min(cfg.n_shared_experts, 1))
+        if cfg.attention == "mla":
+            kw.update(kv_lora_rank=32, qk_nope_head_dim=16, qk_rope_head_dim=8,
+                      v_head_dim=16)
+        if cfg.sliding_window:
+            kw.update(sliding_window=32)
+        return cfg.replace(**kw)
+    if isinstance(cfg, GNNConfig):
+        return cfg.replace(n_layers=2, d_hidden=16, n_heads=2,
+                           l_max=min(cfg.l_max, 2), m_max=min(cfg.m_max, 1),
+                           n_spherical=min(cfg.n_spherical, 4),
+                           n_radial=min(cfg.n_radial, 4), n_bilinear=4, n_rbf=4)
+    if isinstance(cfg, RecsysConfig):
+        return cfg.replace(n_sparse=8, embed_dim=4, vocab_per_field=64,
+                           cin_layers=(8, 8), mlp_layers=(16, 16))
+    if isinstance(cfg, HMGIConfig):
+        return cfg.replace(dim=16, modality_dims={}, n_partitions=4, n_probe=2,
+                           kmeans_iters=4, delta_capacity=64, nsw_degree=4, nsw_ef=8)
+    raise TypeError(type(cfg))

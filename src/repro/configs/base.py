@@ -1,0 +1,222 @@
+"""Config system: dataclasses for architectures, input shapes, meshes, and training.
+
+Every assigned architecture gets a ``src/repro/configs/<id>.py`` exporting
+``CONFIG`` (an ``ArchConfig`` subclass instance) and ``SHAPES`` (its own
+shape set). The registry in ``configs/__init__.py`` resolves ``--arch <id>``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+
+# ---------------------------------------------------------------------------
+# Input shapes
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    """One (input-shape) cell for an architecture.
+
+    kind:
+      lm:     "train" | "prefill" | "decode"   (decode => serve_step w/ KV cache)
+      gnn:    "full_graph" | "minibatch" | "molecule"
+      recsys: "train" | "serve" | "retrieval"
+    """
+    name: str
+    kind: str
+    dims: Dict[str, int] = field(default_factory=dict)
+    skip: bool = False           # documented-skip cells (long_500k on full attn)
+    skip_reason: str = ""
+
+    def __getitem__(self, k: str) -> int:
+        return self.dims[k]
+
+
+# ---------------------------------------------------------------------------
+# Architecture configs
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ArchConfig:
+    arch_id: str = ""
+    family: str = ""             # "lm" | "gnn" | "recsys"
+    source: str = ""             # citation from the assignment block
+    # per-arch logical->mesh rule overrides (e.g. phi4 context parallelism)
+    sharding_overrides: Dict[str, Any] = field(default_factory=dict)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass(frozen=True)
+class LMConfig(ArchConfig):
+    family: str = "lm"
+    n_layers: int = 2
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    head_dim: int = 0            # 0 => d_model // n_heads
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    qkv_bias: bool = False       # qwen2
+    tie_embeddings: bool = False # phi4-mini
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-5
+    # attention variant
+    attention: str = "gqa"       # "gqa" | "mla"
+    sliding_window: int = 0      # >0 => SWA (mixtral)
+    # MLA (deepseek-v2)
+    kv_lora_rank: int = 0
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0            # per-expert hidden (dsv2); mixtral uses d_ff
+    first_dense_layers: int = 0  # dsv2-lite: first layer is a dense FFN
+    dense_d_ff: int = 0          # hidden of those dense layers
+    capacity_factor: float = 1.25
+    # execution
+    dtype: str = "bfloat16"
+    scan_layers: bool = True
+    remat: bool = True
+    remat_policy: str = "nothing"   # "nothing" | "dots" | "full"
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches init; used for 6ND roofline)."""
+        d, L = self.d_model, self.n_layers
+        hd = self.resolved_head_dim
+        if self.attention == "mla":
+            # kv down + rope k + kv up (nope k + v per head) + q proj
+            attn = (d * self.kv_lora_rank + d * self.qk_rope_head_dim
+                    + self.kv_lora_rank * self.n_heads * (self.qk_nope_head_dim + self.v_head_dim)
+                    + d * self.n_heads * (self.qk_nope_head_dim + self.qk_rope_head_dim)
+                    + self.n_heads * self.v_head_dim * d)
+        else:
+            attn = d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+            if self.qkv_bias:
+                attn += (self.n_heads + 2 * self.n_kv_heads) * hd
+        ffn_dense = 3 * d * self.d_ff
+        total = 0
+        for layer in range(L):
+            total += attn + 2 * d  # two rmsnorm scales
+            if self.moe and layer >= self.first_dense_layers:
+                e_ff = self.moe_d_ff or self.d_ff
+                total += self.n_experts * 3 * d * e_ff
+                total += self.n_shared_experts * 3 * d * e_ff
+                total += d * self.n_experts  # router
+            elif self.moe and self.first_dense_layers:
+                total += 3 * d * (self.dense_d_ff or self.d_ff)
+            else:
+                total += ffn_dense
+        total += self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total += d  # final norm
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed top_k + shared)."""
+        if not self.moe:
+            return self.param_count()
+        d, L = self.d_model, self.n_layers
+        e_ff = self.moe_d_ff or self.d_ff
+        inactive = (L - self.first_dense_layers) * (self.n_experts - self.top_k) * 3 * d * e_ff
+        return self.param_count() - inactive
+
+
+@dataclass(frozen=True)
+class GNNConfig(ArchConfig):
+    family: str = "gnn"
+    model: str = ""              # "dimenet" | "egnn" | "nequip" | "equiformer_v2"
+    n_layers: int = 4
+    d_hidden: int = 64
+    # dimenet
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    # nequip / equiformer
+    l_max: int = 2
+    m_max: int = 0               # equiformer-v2 eSCN truncation
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    n_heads: int = 8
+    d_feat_in: int = 0           # input node-feature dim (0 => atom-type embed)
+    n_species: int = 32
+    dtype: str = "float32"
+
+    def param_count(self) -> int:  # approximate; exact count read from init
+        return 0
+
+
+@dataclass(frozen=True)
+class RecsysConfig(ArchConfig):
+    family: str = "recsys"
+    n_sparse: int = 39
+    n_dense: int = 0
+    embed_dim: int = 10
+    vocab_per_field: int = 100_000
+    cin_layers: Tuple[int, ...] = (200, 200, 200)
+    mlp_layers: Tuple[int, ...] = (400, 400)
+    dtype: str = "float32"
+
+    def param_count(self) -> int:
+        p = self.n_sparse * self.vocab_per_field * self.embed_dim
+        m = self.n_sparse
+        prev = m
+        d_in = self.n_sparse * self.embed_dim + self.n_dense
+        for h in self.cin_layers:
+            p += h * prev * m
+            prev = h
+        p += sum(self.cin_layers)  # cin -> logit
+        for h in self.mlp_layers:
+            p += d_in * h + h
+            d_in = h
+        p += d_in + 1  # mlp logit + linear part bias
+        return p
+
+
+# ---------------------------------------------------------------------------
+# HMGI (the paper's own system) config
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class HMGIConfig(ArchConfig):
+    """Configuration of the Hybrid Multimodal Graph Index itself."""
+    arch_id: str = "hmgi"
+    family: str = "index"
+    dim: int = 384                         # embedding dim (per modality override)
+    modalities: Tuple[str, ...] = ("text", "image", "audio", "video")
+    modality_dims: Dict[str, int] = field(default_factory=dict)
+    n_partitions: int = 64                 # K-means partitions per modality (Eq. 1)
+    kmeans_iters: int = 16
+    n_probe: int = 8                       # partitions scanned per query
+    top_k: int = 10
+    # quantization (Eq. 2)
+    quant_bits: int = 8                    # 16 | 8 | 4 ; "flash quantization"
+    adaptive_quant: bool = True            # memory-pressure driven bit switch
+    memory_budget_bytes: int = 0           # 0 = unlimited
+    # NSW graph refinement layer
+    nsw_degree: int = 16
+    nsw_ef: int = 64
+    use_nsw_refine: bool = False
+    # delta store (MVCC)
+    delta_capacity: int = 4096
+    compact_threshold: float = 0.5         # compact when delta half full
+    # hybrid fusion (Eq. 3)
+    w_vector: float = 0.6
+    w_graph: float = 0.4
+    adaptive_weights: bool = True          # DEG-inspired runtime weighting
+    max_hops: int = 2
+    # cost model (Eq. 5)
+    cost_alpha: float = 1.0
+    cost_beta: float = 0.01
+    cost_gamma: float = 0.1
+    dtype: str = "float32"

@@ -1,0 +1,37 @@
+"""deepseek-v2-lite-16b [moe] — MLA kv_lora=512, 64 routed top-6 + 2 shared.
+
+[arXiv:2405.04434; hf]. The assignment block lists "MoE 64e top-6" and
+"2 shared+160 routed"; 160 routed is the full V2 config — the lite model
+(16B) has 64 routed experts, which matches the primary "64e top-6" spec,
+so we use 64 routed + 2 shared (noted in DESIGN.md §4).
+"""
+from repro.configs.base import LMConfig
+from repro.configs.lm_shapes import lm_shapes
+
+CONFIG = LMConfig(
+    arch_id="deepseek-v2-lite-16b",
+    source="arXiv:2405.04434; hf",
+    n_layers=27,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=1408,           # per-expert hidden
+    vocab_size=102400,
+    attention="mla",
+    kv_lora_rank=512,
+    qk_nope_head_dim=128,
+    qk_rope_head_dim=64,
+    v_head_dim=128,
+    moe=True,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1408,
+    first_dense_layers=1,
+    dense_d_ff=10944,
+)
+
+# MLA latent KV cache (512+64 per token/layer) keeps the 500k decode cell's
+# memory term tractable (~16 GB at batch 1 before sharding); decode is O(seq)
+# per token. Run (justified in DESIGN.md §4).
+SHAPES = lm_shapes(long_ok=True, long_note="MLA compressed KV cache")

@@ -1,0 +1,16 @@
+"""dimenet [gnn] — directional message passing, triplet angular basis.  [arXiv:2003.03123]"""
+from repro.configs.base import GNNConfig
+from repro.configs.gnn_shapes import gnn_shapes
+
+CONFIG = GNNConfig(
+    arch_id="dimenet",
+    source="arXiv:2003.03123; unverified",
+    model="dimenet",
+    n_layers=6,            # n_blocks
+    d_hidden=128,
+    n_bilinear=8,
+    n_spherical=7,
+    n_radial=6,
+)
+
+SHAPES = gnn_shapes()

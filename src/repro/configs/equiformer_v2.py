@@ -1,0 +1,16 @@
+"""equiformer-v2 [gnn] — SO(2)-eSCN equivariant graph attention.  [arXiv:2306.12059]"""
+from repro.configs.base import GNNConfig
+from repro.configs.gnn_shapes import gnn_shapes
+
+CONFIG = GNNConfig(
+    arch_id="equiformer-v2",
+    source="arXiv:2306.12059; unverified",
+    model="equiformer_v2",
+    n_layers=12,
+    d_hidden=128,
+    l_max=6,
+    m_max=2,
+    n_heads=8,
+)
+
+SHAPES = gnn_shapes()

@@ -1,0 +1,21 @@
+"""phi4-mini-3.8b [dense] — RoPE SwiGLU GQA kv=8.  [arXiv:2412.08905; hf]"""
+from repro.configs.base import LMConfig
+from repro.configs.lm_shapes import lm_shapes
+
+CONFIG = LMConfig(
+    arch_id="phi4-mini-3.8b",
+    source="arXiv:2412.08905; hf",
+    n_layers=32,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=200064,
+    tie_embeddings=True,
+    rope_theta=10_000.0,
+    # 24 heads don't divide a 16-way "model" axis: phi4 uses context-parallel
+    # attention + TP mlp instead of head-sharding (DESIGN.md §5)
+    sharding_overrides={"heads": None, "kv_heads": None, "seq_attn": "model"},
+)
+
+SHAPES = lm_shapes(long_ok=False)

@@ -1,0 +1,19 @@
+"""xdeepfm [recsys] — CIN + MLP over sparse embedding fields.  [arXiv:1803.05170]"""
+from repro.configs.base import RecsysConfig, ShapeSpec
+
+CONFIG = RecsysConfig(
+    arch_id="xdeepfm",
+    source="arXiv:1803.05170; paper",
+    n_sparse=39,
+    embed_dim=10,
+    vocab_per_field=100_000,   # Criteo-like scale per field (assignment leaves it open)
+    cin_layers=(200, 200, 200),
+    mlp_layers=(400, 400),
+)
+
+SHAPES = [
+    ShapeSpec("train_batch", "train", {"batch": 65536}),
+    ShapeSpec("serve_p99", "serve", {"batch": 512}),
+    ShapeSpec("serve_bulk", "serve", {"batch": 262144}),
+    ShapeSpec("retrieval_cand", "retrieval", {"batch": 1, "n_candidates": 1_000_000}),
+]

@@ -1,0 +1,2 @@
+# The paper's primary contribution: the Hybrid Multimodal Graph Index.
+from repro.core.index import HMGIIndex, ModalityIndex

@@ -1,0 +1,121 @@
+"""Community detection for multi-hop reasoning (paper §3.4: "community-based
+multi-hop reasoning using Louvain").
+
+Index-build-time (host-side, numpy): one-level Louvain — greedy modularity
+moves until convergence — plus a JAX label-propagation fallback for very
+large graphs. Communities bias traversal (same-community hops get a weight
+boost) which is the paper's 20–30% relational-accuracy mechanism.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph_store import GraphStore
+
+
+def louvain_one_level(n_nodes: int, src: np.ndarray, dst: np.ndarray,
+                      weight: np.ndarray, max_sweeps: int = 10,
+                      seed: int = 0) -> np.ndarray:
+    """Greedy modularity optimisation, one level (no coarsening).
+
+    Returns (N,) community labels. Edges should be directed pairs; the graph
+    is treated as undirected (weights summed both ways).
+    """
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.asarray(weight, np.float64)
+    # symmetrise
+    s2 = np.concatenate([src, dst])
+    d2 = np.concatenate([dst, src])
+    w2 = np.concatenate([w, w])
+    m2 = w2.sum()  # = 2m
+    if m2 <= 0:
+        return np.zeros(n_nodes, np.int32)
+
+    # CSR for neighbor iteration
+    order = np.argsort(s2, kind="stable")
+    s2, d2, w2 = s2[order], d2[order], w2[order]
+    indptr = np.zeros(n_nodes + 1, np.int64)
+    np.cumsum(np.bincount(s2, minlength=n_nodes), out=indptr[1:])
+
+    k = np.zeros(n_nodes, np.float64)       # weighted degree
+    np.add.at(k, s2, w2)
+    labels = np.arange(n_nodes, dtype=np.int64)
+    sigma_tot = k.copy()                    # community total degree
+
+    rng = np.random.default_rng(seed)
+    nodes = np.arange(n_nodes)
+    for _ in range(max_sweeps):
+        moved = 0
+        rng.shuffle(nodes)
+        for u in nodes:
+            lo, hi = indptr[u], indptr[u + 1]
+            if lo == hi:
+                continue
+            nbr, nw = d2[lo:hi], w2[lo:hi]
+            cu = labels[u]
+            # weights from u to each neighboring community
+            comms, inv = np.unique(labels[nbr], return_inverse=True)
+            w_to = np.zeros(len(comms))
+            np.add.at(w_to, inv, nw)
+            # remove u from its community
+            sigma_tot[cu] -= k[u]
+            w_cu = w_to[comms == cu].sum() if (comms == cu).any() else 0.0
+            # modularity gain of joining community c: w_uc - k_u * sigma_c / m2
+            gains = w_to - k[u] * sigma_tot[comms] / m2
+            base = w_cu - k[u] * sigma_tot[cu] / m2
+            best = int(np.argmax(gains))
+            if gains[best] > base + 1e-12 and comms[best] != cu:
+                labels[u] = comms[best]
+                moved += 1
+            sigma_tot[labels[u]] += k[u]
+        if moved == 0:
+            break
+    # relabel densely
+    _, dense = np.unique(labels, return_inverse=True)
+    return dense.astype(np.int32)
+
+
+def modularity(n_nodes: int, src, dst, weight, labels) -> float:
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    w = np.asarray(weight, np.float64)
+    labels = np.asarray(labels)
+    s2 = np.concatenate([src, dst])
+    d2 = np.concatenate([dst, src])
+    w2 = np.concatenate([w, w])
+    m2 = w2.sum()
+    if m2 <= 0:
+        return 0.0
+    k = np.zeros(n_nodes)
+    np.add.at(k, s2, w2)
+    intra = w2[labels[s2] == labels[d2]].sum() / m2
+    sig = np.zeros(labels.max() + 1)
+    np.add.at(sig, labels, k)
+    return float(intra - np.sum((sig / m2) ** 2))
+
+
+def label_propagation(g: GraphStore, n_iters: int = 10) -> jax.Array:
+    """JAX min-label propagation (connected-component flavored fallback for
+    graphs too large for the host sweep): O(E) per iter, fully on device."""
+    n = g.n_nodes
+    labels = jnp.arange(n, dtype=jnp.int32)
+
+    def step(labels, _):
+        neigh_min = jax.ops.segment_min(labels[g.src], g.indices, num_segments=n)
+        new = jnp.minimum(labels, neigh_min)
+        return new, None
+
+    labels, _ = jax.lax.scan(step, labels, None, length=n_iters)
+    return labels
+
+
+def community_edge_boost(g: GraphStore, labels, boost: float = 1.5) -> jax.Array:
+    """Edge weights boosted within communities (traversal bias, §3.4)."""
+    lab = jnp.asarray(labels)
+    same = lab[g.src] == lab[g.indices]
+    return g.edge_weight * jnp.where(same, boost, 1.0)

@@ -1,0 +1,80 @@
+"""Learned cost model and plan selection (paper Eq. 5 + §3.6).
+
+    C = α·log N + β·(d·h) + γ·p·log(N/p)
+
+α, β, γ are calibrated by least squares against measured query latencies
+(the benchmark harness emits (features, latency) pairs). ``select_plan``
+greedily picks the cheapest plan satisfying the recall constraint — the
+paper's "greedy plan selection with optimality bounds".
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class CostModel:
+    alpha: float = 1.0
+    beta: float = 0.01
+    gamma: float = 0.1
+
+    def cost(self, n: int, d: int, h: int, p: int) -> float:
+        """Eq. 5. n=corpus size, d=dim, h=hops, p=partitions probed."""
+        p = max(p, 1)
+        return (self.alpha * math.log(max(n, 2))
+                + self.beta * (d * h)
+                + self.gamma * p * math.log(max(n / p, 2)))
+
+    def features(self, n, d, h, p) -> np.ndarray:
+        p = max(p, 1)
+        return np.array([math.log(max(n, 2)), d * h, p * math.log(max(n / p, 2))])
+
+    def fit(self, samples: Sequence[Tuple[int, int, int, int]],
+            latencies: Sequence[float]) -> "CostModel":
+        """Least-squares calibration of (α, β, γ) on measured latencies."""
+        X = np.stack([self.features(*s) for s in samples])
+        y = np.asarray(latencies, np.float64)
+        coef, *_ = np.linalg.lstsq(X, y, rcond=None)
+        self.alpha, self.beta, self.gamma = (float(c) for c in coef)
+        return self
+
+    def r2(self, samples, latencies) -> float:
+        X = np.stack([self.features(*s) for s in samples])
+        y = np.asarray(latencies, np.float64)
+        pred = X @ np.array([self.alpha, self.beta, self.gamma])
+        ss_res = float(np.sum((y - pred) ** 2))
+        ss_tot = float(np.sum((y - y.mean()) ** 2)) + 1e-12
+        return 1.0 - ss_res / ss_tot
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    name: str
+    n_probe: int
+    n_hops: int
+    use_nsw_refine: bool = False
+    use_rerank: bool = False
+    expected_recall: float = 0.9
+
+
+DEFAULT_PLANS: Tuple[QueryPlan, ...] = (
+    QueryPlan("vector_fast", n_probe=2, n_hops=0, expected_recall=0.80),
+    QueryPlan("vector_std", n_probe=8, n_hops=0, expected_recall=0.95),
+    QueryPlan("hybrid_1hop", n_probe=4, n_hops=1, expected_recall=0.93),
+    QueryPlan("hybrid_2hop", n_probe=8, n_hops=2, expected_recall=0.97),
+    QueryPlan("hybrid_deep", n_probe=16, n_hops=3, use_rerank=True,
+              expected_recall=0.99),
+)
+
+
+def select_plan(model: CostModel, *, n: int, d: int, min_recall: float,
+                plans: Sequence[QueryPlan] = DEFAULT_PLANS) -> QueryPlan:
+    """Greedy: cheapest plan whose expected recall clears the floor."""
+    feasible = [p for p in plans if p.expected_recall >= min_recall]
+    if not feasible:
+        feasible = [max(plans, key=lambda p: p.expected_recall)]
+    return min(feasible, key=lambda p: model.cost(n, d, p.n_hops, p.n_probe))

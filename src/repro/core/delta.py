@@ -1,0 +1,126 @@
+"""MVCC delta store (paper §3.5): insertions/updates/deletions land in a
+fixed-capacity brute-force buffer; queries hybridise ANNS-on-stable with
+exact scan-on-delta; asynchronous compaction merges the delta into the IVF
+partitions without a full rebuild.
+
+Versioning: every write bumps ``version``. Visibility rules per read:
+  stable row visible  iff  not tombstoned and not superseded
+  delta  row visible  iff  not tombstoned
+``superseded`` marks ids whose latest version lives in the delta (an update =
+supersede(old) + insert(new)); compaction folds the latest versions back into
+the stable index and clears the mask. Readers are wait-free: search takes a
+consistent (stable, delta) snapshot pair.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ivf as ivf_mod
+from repro.core.ivf import IVFIndex
+
+
+class DeltaStore(NamedTuple):
+    vectors: jax.Array      # (cap, d) fp32
+    ids: jax.Array          # (cap,) int32, -1 empty
+    count: jax.Array        # () int32
+    version: jax.Array      # () int32 — MVCC write counter
+    tombstones: jax.Array   # (max_ids,) bool — user deletes
+    superseded: jax.Array   # (max_ids,) bool — stale stable rows (updates)
+
+
+def init(capacity: int, dim: int, max_ids: int) -> DeltaStore:
+    return DeltaStore(
+        vectors=jnp.zeros((capacity, dim), jnp.float32),
+        ids=jnp.full((capacity,), -1, jnp.int32),
+        count=jnp.zeros((), jnp.int32),
+        version=jnp.zeros((), jnp.int32),
+        tombstones=jnp.zeros((max_ids,), bool),
+        superseded=jnp.zeros((max_ids,), bool),
+    )
+
+
+def _clip_ids(delta: DeltaStore, ids):
+    return jnp.clip(ids, 0, delta.tombstones.shape[0] - 1)
+
+
+@jax.jit
+def insert(delta: DeltaStore, vecs: jax.Array, new_ids: jax.Array) -> DeltaStore:
+    """Appends a batch (drops silently if full — caller checks ``should_compact``
+    first). Clears tombstones for re-inserted ids."""
+    cap = delta.vectors.shape[0]
+    n = vecs.shape[0]
+    base = delta.count
+    slots = jnp.clip(base + jnp.arange(n), 0, cap - 1)
+    fits = (base + jnp.arange(n)) < cap
+    vectors = delta.vectors.at[slots].set(
+        jnp.where(fits[:, None], vecs.astype(jnp.float32), delta.vectors[slots]))
+    ids = delta.ids.at[slots].set(jnp.where(fits, new_ids.astype(jnp.int32),
+                                            delta.ids[slots]))
+    ts = delta.tombstones.at[_clip_ids(delta, new_ids)].set(False)
+    return DeltaStore(vectors, ids, base + jnp.sum(fits.astype(jnp.int32)),
+                      delta.version + 1, ts, delta.superseded)
+
+
+@jax.jit
+def supersede(delta: DeltaStore, old_ids: jax.Array) -> DeltaStore:
+    """Marks stable rows stale (the update path: supersede + insert)."""
+    sp = delta.superseded.at[_clip_ids(delta, old_ids)].set(True)
+    return delta._replace(superseded=sp, version=delta.version + 1)
+
+
+@jax.jit
+def delete(delta: DeltaStore, dead_ids: jax.Array) -> DeltaStore:
+    ts = delta.tombstones.at[_clip_ids(delta, dead_ids)].set(True)
+    return delta._replace(tombstones=ts, version=delta.version + 1)
+
+
+def search_with_delta(index: IVFIndex, delta: DeltaStore, queries: jax.Array, *,
+                      n_probe: int, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Stable-ANNS ∪ delta-brute-force, visibility-filtered, dedup-merged."""
+    sv, si = ivf_mod.search(index, queries, n_probe=n_probe, k=k)
+    dead = jnp.logical_or(delta.tombstones, delta.superseded)
+    sv = jnp.where(dead[_clip_ids(delta, si)] | (si < 0), -jnp.inf, sv)
+    valid = jnp.logical_and(delta.ids >= 0,
+                            ~delta.tombstones[_clip_ids(delta, delta.ids)])
+    dv, di = ivf_mod.brute_force(delta.vectors, valid, delta.ids, queries, k=k)
+    if dv.shape[1] < k:
+        pad = k - dv.shape[1]
+        dv = jnp.pad(dv, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        di = jnp.pad(di, ((0, 0), (0, pad)), constant_values=-1)
+    # delta may hold multiple versions of an id (insert-after-insert): dedup
+    return ivf_mod.dedup_merge_topk(sv, si, dv, di, k)
+
+
+def should_compact(delta: DeltaStore, threshold: float = 0.5) -> bool:
+    return int(delta.count) >= int(threshold * delta.vectors.shape[0])
+
+
+def compact(key, index: IVFIndex, delta: DeltaStore,
+            all_vectors: jax.Array, all_ids: jax.Array) -> Tuple[IVFIndex, DeltaStore]:
+    """Asynchronous-vacuum analogue: merge live delta rows into the stable
+    index by re-running the (cheap) assignment against *existing* centroids —
+    no K-means refit, no full rebuild (paper: "incremental merges into
+    snapshots"). Centroid drift is handled by the workload-aware repartitioner.
+
+    all_vectors/all_ids: the full live corpus with one latest row per id
+    (facade-provided); returns (new_index, fresh_delta)."""
+    live = ~delta.tombstones[_clip_ids(delta, all_ids)]
+    vecs = jnp.where(live[:, None], all_vectors, 0.0)
+    ids = jnp.where(live, all_ids, -1)
+    new_index, overflow = ivf_mod.build(key, vecs, ids,
+                                        n_partitions=index.n_partitions,
+                                        capacity=index.capacity, bits=index.bits,
+                                        centroids=index.centroids)
+    fresh = init(delta.vectors.shape[0], delta.vectors.shape[1],
+                 delta.tombstones.shape[0])
+    fresh = fresh._replace(version=delta.version + 1, tombstones=delta.tombstones)
+    # rows that didn't fit their partition stay queryable via the fresh delta
+    over = jnp.logical_and(overflow, live)
+    n_over = int(jnp.sum(over))
+    if n_over:
+        sel = jnp.where(over)[0][: fresh.vectors.shape[0]]
+        fresh = insert(fresh, all_vectors[sel], all_ids[sel])
+    return new_index, fresh

@@ -1,0 +1,60 @@
+"""Hybrid score fusion (paper Eq. 3) with DEG-inspired adaptive weights.
+
+    S = w_v · (1 − d_v) + w_g · (1/h) · Σ_g s_g
+
+``d_v`` is the normalised vector distance (cosine distance for unit-norm
+embeddings), the graph term is the mean per-hop traversal mass from
+``core/traversal.py``. Adaptive weighting (paper §3.4 "dynamic DEG-inspired
+weights") shifts weight toward the vector side when the ANN margin is
+confident and toward the graph side when it is ambiguous (polysemy — the
+paper's Apple-fruit vs Apple-company case).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class FusionWeights(NamedTuple):
+    w_vector: jax.Array   # (Q,) or scalar
+    w_graph: jax.Array
+
+
+def adaptive_weights(vector_scores: jax.Array, *, base_wv: float = 0.6,
+                     base_wg: float = 0.4, sensitivity: float = 4.0) -> FusionWeights:
+    """vector_scores: (Q, k) descending. Margin = s1 − s2 (top-1 confidence);
+    w_v = σ(sensitivity·(margin − m̄)) blended around the configured base."""
+    s = vector_scores
+    margin = s[:, 0] - jnp.where(s.shape[1] > 1, s[:, min(1, s.shape[1] - 1)], s[:, 0])
+    margin = jnp.nan_to_num(margin, nan=0.0, posinf=1.0, neginf=0.0)
+    conf = jax.nn.sigmoid(sensitivity * (margin - 0.05))
+    wv = base_wv * (0.5 + conf)             # in [0.5·wv, 1.5·wv]
+    wg = base_wg * (1.5 - conf)
+    tot = wv + wg
+    return FusionWeights(w_vector=wv / tot, w_graph=wg / tot)
+
+
+def fuse(vector_sim: jax.Array, graph_score: jax.Array,
+         weights: FusionWeights) -> jax.Array:
+    """Eq. 3 over per-candidate terms.
+
+    vector_sim: (Q, N) cosine similarity in [-1, 1] (−inf for non-candidates);
+    graph_score: (Q, N) mean per-hop mass (already (1/h)·Σ s_g).
+    """
+    d_v = 0.5 * (1.0 - vector_sim)                    # cosine distance -> [0,1]
+    s_v = 1.0 - d_v
+    g = graph_score / jnp.maximum(jnp.max(graph_score, axis=-1, keepdims=True), 1e-12)
+    wv = jnp.asarray(weights.w_vector).reshape(-1, 1)
+    wg = jnp.asarray(weights.w_graph).reshape(-1, 1)
+    fused = wv * s_v + wg * g
+    return jnp.where(jnp.isfinite(vector_sim), fused, wg * g)
+
+
+def fuse_topk(vector_sim_full: jax.Array, graph_score: jax.Array,
+              weights: FusionWeights, k: int) -> Tuple[jax.Array, jax.Array]:
+    """Fused scores -> top-k (ids are positions in the candidate axis)."""
+    fused = fuse(vector_sim_full, graph_score, weights)
+    vals, ids = jax.lax.top_k(fused, k)
+    return vals, ids

@@ -1,0 +1,68 @@
+"""Knowledge-graph store: CSR adjacency + typed/weighted edges + node payloads.
+
+This is HMGI's relational side (the paper's Neo4j role): entities are nodes,
+relationships are typed weighted edges, and each node carries the id of its
+embedding in the vector side of the index. Traversal operators live in
+``core/traversal.py`` and run as fixed-hop masked frontier pushes over these
+arrays (DESIGN.md §2.3).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class GraphStore(NamedTuple):
+    indptr: jax.Array       # (N+1,) int32 CSR row pointers (by src)
+    indices: jax.Array      # (E,) int32 dst node per edge
+    src: jax.Array          # (E,) int32 src node per edge (COO twin for segment ops)
+    edge_type: jax.Array    # (E,) int32
+    edge_weight: jax.Array  # (E,) fp32
+    node_modality: jax.Array  # (N,) int32 — modality id of each node's embedding
+
+    @property
+    def n_nodes(self) -> int:
+        return self.indptr.shape[0] - 1
+
+    @property
+    def n_edges(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.size) * a.dtype.itemsize for a in self)
+
+
+def from_edges(n_nodes: int, src: np.ndarray, dst: np.ndarray,
+               edge_type: Optional[np.ndarray] = None,
+               edge_weight: Optional[np.ndarray] = None,
+               node_modality: Optional[np.ndarray] = None,
+               make_undirected: bool = False) -> GraphStore:
+    """Host-side construction: sorts edges by src into CSR."""
+    src = np.asarray(src, np.int32)
+    dst = np.asarray(dst, np.int32)
+    et = np.zeros_like(src) if edge_type is None else np.asarray(edge_type, np.int32)
+    ew = np.ones(len(src), np.float32) if edge_weight is None else np.asarray(edge_weight, np.float32)
+    if make_undirected:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        et = np.concatenate([et, et])
+        ew = np.concatenate([ew, ew])
+    order = np.argsort(src, kind="stable")
+    src, dst, et, ew = src[order], dst[order], et[order], ew[order]
+    counts = np.bincount(src, minlength=n_nodes)
+    indptr = np.zeros(n_nodes + 1, np.int32)
+    np.cumsum(counts, out=indptr[1:])
+    nm = (np.zeros(n_nodes, np.int32) if node_modality is None
+          else np.asarray(node_modality, np.int32))
+    return GraphStore(
+        indptr=jnp.asarray(indptr), indices=jnp.asarray(dst), src=jnp.asarray(src),
+        edge_type=jnp.asarray(et), edge_weight=jnp.asarray(ew),
+        node_modality=jnp.asarray(nm),
+    )
+
+
+def degree(g: GraphStore) -> jax.Array:
+    return g.indptr[1:] - g.indptr[:-1]

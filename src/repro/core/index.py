@@ -1,0 +1,253 @@
+"""HMGIIndex — the unified facade (paper Fig. 1): modality-aware partitioned
+vector indexes + knowledge-graph store + MVCC delta + hybrid fusion engine +
+learned optimisation, behind one ingest/search/update API.
+
+Host-side orchestration (builds, compaction scheduling, plan selection) wraps
+jitted device kernels (assignment, IVF scan, traversal, fusion). Ids are
+global graph-node ids across all modalities, so vector hits seed traversals
+directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import HMGIConfig
+from repro.core import delta as delta_mod
+from repro.core import ivf as ivf_mod
+from repro.core import nsw as nsw_mod
+from repro.core import traversal as trav_mod
+from repro.core import community as comm_mod
+from repro.core import rerank as rerank_mod
+from repro.core.cost_model import CostModel, DEFAULT_PLANS, QueryPlan, select_plan
+from repro.core.fusion import FusionWeights, adaptive_weights, fuse_topk
+from repro.core.graph_store import GraphStore
+from repro.core.partitioner import WorkloadStats, assign_topk
+from repro.core.quantization import AdaptiveQuantPolicy
+
+
+@dataclasses.dataclass
+class ModalityIndex:
+    ivf: ivf_mod.IVFIndex
+    delta: delta_mod.DeltaStore
+    vectors: jax.Array          # fp32 master copy (compaction + NSW refine)
+    ids: jax.Array              # (N,) global node ids
+    nsw: Optional[nsw_mod.NSWGraph] = None
+    workload: Optional[WorkloadStats] = None
+
+
+class HMGIIndex:
+    """The Hybrid Multimodal Graph Index."""
+
+    def __init__(self, cfg: HMGIConfig, mesh=None, seed: int = 0):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.key = jax.random.PRNGKey(seed)
+        self.modalities: Dict[str, ModalityIndex] = {}
+        self.graph: Optional[GraphStore] = None
+        self.communities: Optional[np.ndarray] = None
+        self.boosted_weights: Optional[jax.Array] = None
+        self.sparse_docs: Optional[rerank_mod.SparseVectors] = None
+        self.cost_model = CostModel(cfg.cost_alpha, cfg.cost_beta, cfg.cost_gamma)
+        self.quant_policy = AdaptiveQuantPolicy(cfg.memory_budget_bytes)
+        self.n_nodes = 0
+        self._metrics: Dict[str, float] = {}
+
+    # ------------------------------------------------------------------ build
+    def _split(self):
+        self.key, k = jax.random.split(self.key)
+        return k
+
+    def ingest(self, embeddings: Dict[str, Tuple[np.ndarray, np.ndarray]],
+               n_nodes: int, edges: Optional[Tuple] = None,
+               build_nsw: bool = False):
+        """embeddings: modality -> (node_ids (N_m,), vectors (N_m, d_m)).
+        edges: (src, dst[, edge_type[, edge_weight]]) arrays."""
+        self.n_nodes = n_nodes
+        for mod, (ids, vecs) in embeddings.items():
+            vecs = jnp.asarray(vecs, jnp.float32)
+            vecs = vecs / jnp.maximum(
+                jnp.linalg.norm(vecs, axis=-1, keepdims=True), 1e-12)
+            ids = jnp.asarray(ids, jnp.int32)
+            bits = self.quant_policy.choose_bits(
+                int(vecs.size * 4), default_bits=self.cfg.quant_bits)
+            k = min(self.cfg.n_partitions, vecs.shape[0])
+            index, overflow = ivf_mod.build(
+                self._split(), vecs, ids, n_partitions=k, bits=bits,
+                kmeans_iters=self.cfg.kmeans_iters)
+            dstore = delta_mod.init(self.cfg.delta_capacity, vecs.shape[1],
+                                    max_ids=max(n_nodes, 1))
+            # overflow rows go to the delta store (capacity-bounded build)
+            n_over = int(jnp.sum(overflow))
+            if n_over:
+                ov = jnp.where(overflow)[0]
+                dstore = delta_mod.insert(dstore, vecs[ov], ids[ov])
+            m = ModalityIndex(ivf=index, delta=dstore, vectors=vecs, ids=ids,
+                              workload=WorkloadStats(k))
+            if build_nsw or self.cfg.use_nsw_refine:
+                m.nsw = nsw_mod.build(self._split(), vecs,
+                                      degree=min(self.cfg.nsw_degree, vecs.shape[0] - 1))
+            self.modalities[mod] = m
+        if edges is not None:
+            src, dst = edges[0], edges[1]
+            et = edges[2] if len(edges) > 2 else None
+            ew = edges[3] if len(edges) > 3 else None
+            self.graph = GraphStore.from_edges(n_nodes, src, dst, et, ew) \
+                if hasattr(GraphStore, "from_edges") else None
+            from repro.core.graph_store import from_edges
+            self.graph = from_edges(n_nodes, src, dst, et, ew)
+            self.communities = comm_mod.louvain_one_level(
+                n_nodes, np.asarray(src), np.asarray(dst),
+                np.ones(len(src)) if ew is None else np.asarray(ew))
+            self.boosted_weights = comm_mod.community_edge_boost(
+                self.graph, self.communities)
+
+    def set_sparse_docs(self, docs: rerank_mod.SparseVectors):
+        self.sparse_docs = docs
+
+    # ----------------------------------------------------------------- search
+    def _norm_queries(self, queries) -> jax.Array:
+        q = jnp.asarray(queries, jnp.float32)
+        return q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
+
+    def search(self, queries, modality: str, k: Optional[int] = None,
+               n_probe: Optional[int] = None):
+        """Pure vector search (ANNS on stable index + delta), tombstone-aware."""
+        m = self.modalities[modality]
+        q = self._norm_queries(queries)
+        n_probe = n_probe or self.cfg.n_probe
+        k = k or self.cfg.top_k
+        if m.workload is not None:
+            probes, _ = assign_topk(q, m.ivf.centroids,
+                                    min(n_probe, m.ivf.n_partitions))
+            m.workload.record(np.asarray(probes))
+        scores, ids = delta_mod.search_with_delta(
+            m.ivf, m.delta, q, n_probe=min(n_probe, m.ivf.n_partitions), k=k)
+        if self.cfg.use_nsw_refine and m.nsw is not None:
+            ns, ni = nsw_mod.search(m.nsw, q, ef=self.cfg.nsw_ef, k=k)
+            ni = jnp.where(ni >= 0, m.ids[jnp.clip(ni, 0, m.ids.shape[0] - 1)], -1)
+            scores, ids = ivf_mod.merge_topk(scores, ids, ns, ni, k)
+        return scores, ids
+
+    def hybrid_search(self, queries, modality: str, k: Optional[int] = None,
+                      n_hops: Optional[int] = None,
+                      n_probe: Optional[int] = None,
+                      edge_type_mask=None,
+                      min_recall: Optional[float] = None,
+                      use_rerank: bool = False,
+                      q_terms=None, q_term_weights=None):
+        """The paper's hybrid query (Eq. 3): ANNS seeds -> h-hop traversal ->
+        adaptive fusion -> (optional sparse-dense rerank). Returns (scores, ids)."""
+        assert self.graph is not None, "hybrid_search needs a graph"
+        cfg = self.cfg
+        k = k or cfg.top_k
+        if min_recall is not None:
+            plan = select_plan(self.cost_model,
+                               n=int(self.modalities[modality].ids.shape[0]),
+                               d=int(self.modalities[modality].vectors.shape[1]),
+                               min_recall=min_recall)
+            n_probe = plan.n_probe
+            n_hops = plan.n_hops
+            use_rerank = use_rerank or plan.use_rerank
+        n_hops = cfg.max_hops if n_hops is None else n_hops
+        q = self._norm_queries(queries)
+
+        # stage 1: vector candidates (oversampled for fusion headroom)
+        k_seed = max(2 * k, k + 8)
+        vs, vi = self.search(q, modality, k=k_seed, n_probe=n_probe)
+
+        if n_hops == 0:
+            return vs[:, :k], vi[:, :k]
+
+        # stage 2: graph traversal from seeds (community-boosted weights)
+        g = self.graph
+        if self.boosted_weights is not None:
+            g = g._replace(edge_weight=self.boosted_weights)
+        graph_scores = trav_mod.multi_hop_batch(
+            g, vi, vs, n_hops=n_hops, edge_type_mask=edge_type_mask)   # (Q, N)
+
+        # stage 3: fusion (Eq. 3) over the union candidate set
+        sim_full = jnp.full((q.shape[0], self.n_nodes), -jnp.inf)
+        rows = jnp.arange(q.shape[0])[:, None]
+        sim_full = sim_full.at[rows, jnp.clip(vi, 0, self.n_nodes - 1)].set(
+            jnp.where(vi >= 0, vs, -jnp.inf))
+        w = (adaptive_weights(vs, base_wv=cfg.w_vector, base_wg=cfg.w_graph)
+             if cfg.adaptive_weights else
+             FusionWeights(jnp.full((q.shape[0],), cfg.w_vector),
+                           jnp.full((q.shape[0],), cfg.w_graph)))
+        k_fuse = max(k, min(4 * k, self.n_nodes))
+        fvals, fids = fuse_topk(sim_full, graph_scores, w, k_fuse)
+
+        # stage 4: optional sparse-dense rerank
+        if use_rerank and self.sparse_docs is not None and q_terms is not None:
+            sp = rerank_mod.sparse_overlap_scores(self.sparse_docs, q_terms,
+                                                  q_term_weights, fids)
+            fvals, fids = rerank_mod.rrf_rerank(fvals, sp, fids, k=k)
+            return fvals, fids
+        return fvals[:, :k], fids[:, :k]
+
+    # ----------------------------------------------------------------- update
+    def insert(self, modality: str, ids, vectors):
+        """Insert-or-update: existing ids are superseded (MVCC update path)."""
+        m = self.modalities[modality]
+        v = self._norm_queries(vectors)
+        ids32 = jnp.asarray(ids, jnp.int32)
+        ids_np = np.asarray(ids32)
+        existing_np = np.asarray(m.ids)
+        row_of = {int(i): r for r, i in enumerate(existing_np)}
+        upd_mask = np.array([int(i) in row_of for i in ids_np])
+        if upd_mask.any():
+            m.delta = delta_mod.supersede(m.delta, ids32[jnp.asarray(upd_mask)])
+            rows = np.array([row_of[int(i)] for i in ids_np[upd_mask]])
+            m.vectors = m.vectors.at[jnp.asarray(rows)].set(v[jnp.asarray(upd_mask)])
+        if (~upd_mask).any():
+            sel = jnp.asarray(~upd_mask)
+            m.vectors = jnp.concatenate([m.vectors, v[sel]], axis=0)
+            m.ids = jnp.concatenate([m.ids, ids32[sel]])
+        m.delta = delta_mod.insert(m.delta, v, ids32)
+        if delta_mod.should_compact(m.delta, self.cfg.compact_threshold):
+            self.compact(modality)
+
+    def delete(self, modality: str, ids):
+        m = self.modalities[modality]
+        m.delta = delta_mod.delete(m.delta, jnp.asarray(ids, jnp.int32))
+
+    def compact(self, modality: str):
+        """Merge delta into stable (async-vacuum analogue; see core/delta.py)."""
+        m = self.modalities[modality]
+        m.ivf, m.delta = delta_mod.compact(self._split(), m.ivf, m.delta,
+                                           m.vectors, m.ids)
+
+    def maybe_repartition(self, modality: str):
+        """Workload-aware online adjustment (paper §3.2)."""
+        from repro.core.partitioner import KMeansState, split_hot_partition
+        m = self.modalities[modality]
+        if m.workload is None or not m.workload.should_repartition():
+            return False
+        hot = int(np.argmax(m.workload.hits))
+        st = KMeansState(m.ivf.centroids, jnp.asarray(m.ivf.counts, jnp.float32),
+                         jnp.zeros(()))
+        new = split_hot_partition(self._split(), m.vectors, st, hot)
+        index, overflow = ivf_mod.build(
+            self._split(), m.vectors, m.ids,
+            n_partitions=m.ivf.n_partitions, bits=m.ivf.bits,
+            capacity=m.ivf.capacity, centroids=new.centroids)
+        m.ivf = index
+        m.workload.reset()
+        return True
+
+    # ------------------------------------------------------------------ stats
+    def memory_usage(self) -> Dict[str, int]:
+        out = {}
+        for mod, m in self.modalities.items():
+            out[mod] = m.ivf.nbytes
+            out[f"{mod}_delta"] = int(m.delta.vectors.size * 4)
+        if self.graph is not None:
+            out["graph"] = self.graph.nbytes
+        out["total"] = sum(out.values())
+        return out

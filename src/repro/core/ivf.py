@@ -1,0 +1,214 @@
+"""Partitioned ANNS — the TPU-native realisation of the paper's search layer.
+
+Two-level search (DESIGN.md §2.1): centroid scoring (small matmul) selects
+``n_probe`` partitions per query; probed partitions are gathered and scored
+as dense (dequantised) matmuls; exact top-k over the probed candidates.
+Cost ∝ n_probe·N/K + K instead of N — the paper's sub-linear claim, with
+every FLOP on the MXU.
+
+Storage is fixed-shape: (K, cap, d) quantized buckets + (K, cap) ids with -1
+sentinels, so search jits once per (K, cap, n_probe, k) and shards cleanly.
+
+``search_sharded`` distributes over the ("pod","data") mesh axes: the corpus
+is row-sharded (each shard owns its own partitioning of its rows), every
+shard emits a local top-k, and one small all-gather + merge produces the
+global result (k ≪ N ⇒ collective-light).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import partitioner
+from repro.core.quantization import QuantizedVectors, quantize
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["centroids", "data", "vmin", "scale", "ids", "counts"],
+    meta_fields=["bits"],
+)
+@dataclasses.dataclass
+class IVFIndex:
+    centroids: jax.Array     # (K, d) fp32
+    data: jax.Array          # (K, cap, d) int8 | (K, cap, d//2) int4-packed | bf16
+    vmin: jax.Array          # (K, cap) fp32
+    scale: jax.Array         # (K, cap) fp32
+    ids: jax.Array           # (K, cap) int32, -1 = empty slot
+    counts: jax.Array        # (K,) int32
+    bits: int = 8
+
+    @property
+    def n_partitions(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def capacity(self) -> int:
+        return self.ids.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.size) * a.dtype.itemsize
+                   for a in (self.centroids, self.data, self.vmin, self.scale, self.ids))
+
+    def _replace(self, **kw) -> "IVFIndex":
+        return dataclasses.replace(self, **kw)
+
+
+def build(key, vectors: jax.Array, ids: jax.Array, *, n_partitions: int,
+          capacity: Optional[int] = None, bits: int = 8, kmeans_iters: int = 16,
+          centroids: Optional[jax.Array] = None) -> Tuple[IVFIndex, jax.Array]:
+    """Builds an IVF index. Returns (index, overflow_mask) — True rows did not
+    fit their partition's capacity and belong in the delta store."""
+    n, d = vectors.shape
+    k = n_partitions
+    cap = capacity or max(int(2 * n / k) + 1, 8)
+    if centroids is None:
+        st = partitioner.fit(key, vectors, k, kmeans_iters)
+        centroids = st.centroids
+    a = partitioner.assign(vectors, centroids)                    # (N,)
+
+    onehot = jax.nn.one_hot(a, k, dtype=jnp.int32)                # (N, K)
+    pos = jnp.sum((jnp.cumsum(onehot, axis=0) - onehot) * onehot, axis=-1)
+    keep = pos < cap
+    slot = jnp.where(keep, a * cap + pos, k * cap)
+
+    qv = quantize(vectors, bits)
+    dstore = jnp.zeros((k * cap + 1,) + qv.data.shape[1:], qv.data.dtype)
+    dstore = dstore.at[slot].set(jnp.where(keep[:, None], qv.data, 0))
+    vmin = jnp.zeros((k * cap + 1,), jnp.float32).at[slot].set(qv.vmin[:, 0])
+    scale = jnp.ones((k * cap + 1,), jnp.float32).at[slot].set(qv.scale[:, 0])
+    id_store = jnp.full((k * cap + 1,), -1, jnp.int32)
+    id_store = id_store.at[slot].set(jnp.where(keep, ids.astype(jnp.int32), -1))
+    counts = jax.ops.segment_sum(keep.astype(jnp.int32), a, num_segments=k)
+
+    idx = IVFIndex(
+        centroids=centroids,
+        data=dstore[:-1].reshape(k, cap, -1),
+        vmin=vmin[:-1].reshape(k, cap),
+        scale=scale[:-1].reshape(k, cap),
+        ids=id_store[:-1].reshape(k, cap),
+        counts=counts,
+        bits=bits,
+    )
+    return idx, ~keep
+
+
+def _dequant_rows(index: IVFIndex, rows_data, rows_vmin, rows_scale):
+    """rows_data: (..., d') quantized — returns (..., d) fp32."""
+    if index.bits == 16:
+        return rows_data.astype(jnp.float32)
+    if index.bits == 8:
+        q = rows_data.astype(jnp.float32) + 128.0
+    else:  # 4-bit packed
+        u = rows_data.astype(jnp.uint8)
+        lo = (u & 0xF).astype(jnp.float32)
+        hi = (u >> 4).astype(jnp.float32)
+        q = jnp.stack([lo, hi], axis=-1).reshape(*u.shape[:-1], -1)
+    return q * rows_scale[..., None] + rows_vmin[..., None]
+
+
+@functools.partial(jax.jit, static_argnames=("n_probe", "k", "query_block"))
+def search(index: IVFIndex, queries: jax.Array, *, n_probe: int, k: int,
+           query_block: int = 64) -> Tuple[jax.Array, jax.Array]:
+    """Returns (scores (Q, k), ids (Q, k)) — dot-product similarity, descending."""
+    q = queries.astype(jnp.float32)
+    nq = q.shape[0]
+    n_probe = min(n_probe, index.n_partitions)
+    probe, _ = partitioner.assign_topk(q, index.centroids, n_probe)   # (Q, P)
+
+    qb = min(query_block, nq)
+    pad = (-nq) % qb
+    qp = jnp.pad(q, ((0, pad), (0, 0)))
+    pp = jnp.pad(probe, ((0, pad), (0, 0)))
+    nblocks = qp.shape[0] // qb
+
+    def block(carry, i):
+        qs = jax.lax.dynamic_slice_in_dim(qp, i * qb, qb, axis=0)      # (qb, d)
+        ps = jax.lax.dynamic_slice_in_dim(pp, i * qb, qb, axis=0)      # (qb, P)
+        bdata = index.data[ps]                                          # (qb,P,cap,d')
+        bmin = index.vmin[ps]
+        bscale = index.scale[ps]
+        bids = index.ids[ps]                                            # (qb,P,cap)
+        vecs = _dequant_rows(index, bdata, bmin, bscale)                # (qb,P,cap,d)
+        scores = jnp.einsum("qd,qpcd->qpc", qs, vecs)
+        scores = jnp.where(bids >= 0, scores, -jnp.inf)
+        flat = scores.reshape(qb, -1)
+        fids = bids.reshape(qb, -1)
+        vals, pos = jax.lax.top_k(flat, k)
+        return carry, (vals, jnp.take_along_axis(fids, pos, axis=1))
+
+    _, (vals, ids) = jax.lax.scan(block, None, jnp.arange(nblocks))
+    return vals.reshape(-1, k)[:nq], ids.reshape(-1, k)[:nq]
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def brute_force(vectors: jax.Array, valid: jax.Array, ids: jax.Array,
+                queries: jax.Array, *, k: int):
+    """Monolithic-baseline / delta-store scoring: exact matmul + top-k."""
+    scores = queries.astype(jnp.float32) @ vectors.astype(jnp.float32).T
+    scores = jnp.where(valid[None, :], scores, -jnp.inf)
+    vals, pos = jax.lax.top_k(scores, min(k, vectors.shape[0]))
+    return vals, ids[pos]
+
+
+def merge_topk(scores_a, ids_a, scores_b, ids_b, k: int):
+    """Exact merge of two descending top-k lists (associative — distributed
+    tournament merges use this pairwise). Assumes disjoint id sets."""
+    s = jnp.concatenate([scores_a, scores_b], axis=-1)
+    i = jnp.concatenate([ids_a, ids_b], axis=-1)
+    vals, pos = jax.lax.top_k(s, k)
+    return vals, jnp.take_along_axis(i, pos, axis=-1)
+
+
+def dedup_merge_topk(scores_a, ids_a, scores_b, ids_b, k: int):
+    """Merge of possibly-overlapping top-k lists: keeps one entry per id
+    (progressive rounds re-probe earlier partitions)."""
+    s = jnp.concatenate([scores_a, scores_b], axis=-1)
+    i = jnp.concatenate([ids_a, ids_b], axis=-1)
+    order = jnp.argsort(-s, axis=-1)
+    s = jnp.take_along_axis(s, order, axis=-1)
+    i = jnp.take_along_axis(i, order, axis=-1)
+    # mask entries whose id appeared at any earlier (higher-score) position
+    dup = (i[..., :, None] == i[..., None, :])
+    earlier = jnp.tril(jnp.ones((s.shape[-1], s.shape[-1]), bool), k=-1)
+    is_dup = jnp.any(jnp.logical_and(dup, earlier[None, :, :]), axis=-1)
+    s = jnp.where(jnp.logical_or(is_dup, i < 0), -jnp.inf, s)
+    vals, pos = jax.lax.top_k(s, k)
+    return vals, jnp.take_along_axis(i, pos, axis=-1)
+
+
+def search_sharded(index: IVFIndex, queries: jax.Array, mesh, *, n_probe: int,
+                   k: int, query_block: int = 64):
+    """Distributed search: index leaves carry a leading shard dim (S, ...)
+    row-sharded over ("pod","data"); queries replicated; local top-k then
+    all-gather(k)+merge. Local ids must already be globally unique."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+    def local(cent, data, vmin, scale, ids, counts, q):
+        loc = IVFIndex(cent[0], data[0], vmin[0], scale[0], ids[0], counts[0],
+                       index.bits)
+        vals, lids = search(loc, q, n_probe=n_probe, k=k, query_block=query_block)
+        allv = jax.lax.all_gather(vals, data_axes, axis=0, tiled=False)   # (S,Q,k)
+        alli = jax.lax.all_gather(lids, data_axes, axis=0, tiled=False)
+        ns = allv.shape[0]
+        allv = jnp.moveaxis(allv, 0, 1).reshape(q.shape[0], ns * k)
+        alli = jnp.moveaxis(alli, 0, 1).reshape(q.shape[0], ns * k)
+        mv, pos = jax.lax.top_k(allv, k)
+        return mv, jnp.take_along_axis(alli, pos, axis=1)
+
+    shard_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(shard_spec, shard_spec, shard_spec, shard_spec, shard_spec,
+                  shard_spec, P(None, None)),
+        out_specs=(P(None, None), P(None, None)),
+        check_vma=False,
+    )
+    return fn(index.centroids, index.data, index.vmin, index.scale, index.ids,
+              index.counts, queries)

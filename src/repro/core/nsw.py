@@ -1,0 +1,98 @@
+"""Navigable-small-world graph index — the paper's HNSW component, re-expressed
+for TPU (DESIGN.md §2.2): fixed out-degree adjacency + fixed-width beam search
+(`ef` candidates) as batched gathers inside ``lax.while_loop``; vmapped over
+queries. Validates the paper's graph-index semantics (recall vs ef) even
+though the production hot path is the IVF scan.
+
+Build is IVF-accelerated: each node's M approximate nearest neighbours come
+from an IVF search over the corpus (classic NN-descent seeding), which keeps
+construction a batch of matmuls rather than pointer insertion.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ivf as ivf_mod
+
+
+class NSWGraph(NamedTuple):
+    vectors: jax.Array      # (N, d) fp32 (or bf16)
+    neighbors: jax.Array    # (N, M) int32, -1 padded
+    entry: jax.Array        # () int32 — fixed entry point (medoid-ish)
+
+
+def build(key, vectors: jax.Array, *, degree: int = 16,
+          n_partitions: int = 16, bits: int = 16) -> NSWGraph:
+    n, d = vectors.shape
+    m = min(degree, n - 1)
+    index, _ = ivf_mod.build(key, vectors, jnp.arange(n), n_partitions=min(n_partitions, n),
+                             bits=bits, capacity=max(2 * n // min(n_partitions, n) + 1, 8))
+    # each node's approx m+1 nearest (self included) via the IVF index
+    _, ids = ivf_mod.search(index, vectors, n_probe=min(4, n_partitions), k=m + 1)
+    # drop self-matches
+    self_id = jnp.arange(n)[:, None]
+    neigh = jnp.where(ids == self_id, -1, ids)
+    # compact: move -1s to the end by sorting on (is_pad, position)
+    order = jnp.argsort(jnp.where(neigh < 0, 1, 0), axis=1, stable=True)
+    neigh = jnp.take_along_axis(neigh, order, axis=1)[:, :m]
+    entry = jnp.argmin(jnp.sum((vectors - vectors.mean(0)) ** 2, axis=1)).astype(jnp.int32)
+    return NSWGraph(vectors=vectors.astype(jnp.float32), neighbors=neigh, entry=entry)
+
+
+@functools.partial(jax.jit, static_argnames=("ef", "k", "max_steps"))
+def search(graph: NSWGraph, queries: jax.Array, *, ef: int = 32, k: int = 10,
+           max_steps: int = 64) -> Tuple[jax.Array, jax.Array]:
+    """Beam search. Returns (scores (Q,k), ids (Q,k)), dot-product similarity."""
+    n, d = graph.vectors.shape
+    m = graph.neighbors.shape[1]
+
+    def one(q):
+        def score(ids):
+            v = graph.vectors[jnp.clip(ids, 0, n - 1)]
+            s = v @ q
+            return jnp.where(ids >= 0, s, -jnp.inf)
+
+        beam_ids = jnp.full((ef,), -1, jnp.int32).at[0].set(graph.entry)
+        beam_scores = jnp.full((ef,), -jnp.inf).at[0].set(score(graph.entry[None])[0])
+        expanded = jnp.zeros((ef,), bool)
+        visited = jnp.zeros((n,), bool).at[graph.entry].set(True)
+
+        def cond(state):
+            _, beam_scores, expanded, _, steps = state
+            frontier = jnp.logical_and(~expanded, beam_scores > -jnp.inf)
+            return jnp.logical_and(jnp.any(frontier), steps < max_steps)
+
+        def body(state):
+            beam_ids, beam_scores, expanded, visited, steps = state
+            # pick best unexpanded beam entry
+            cand = jnp.where(expanded, -jnp.inf, beam_scores)
+            pick = jnp.argmax(cand)
+            expanded = expanded.at[pick].set(True)
+            node = beam_ids[pick]
+            neigh = graph.neighbors[jnp.clip(node, 0, n - 1)]          # (M,)
+            neigh = jnp.where(node >= 0, neigh, -1)
+            fresh = jnp.logical_and(neigh >= 0, ~visited[jnp.clip(neigh, 0, n - 1)])
+            neigh = jnp.where(fresh, neigh, -1)
+            visited = visited.at[jnp.clip(neigh, 0, n - 1)].set(
+                jnp.logical_or(visited[jnp.clip(neigh, 0, n - 1)], neigh >= 0))
+            ns = score(neigh)                                           # (M,)
+            all_ids = jnp.concatenate([beam_ids, neigh])
+            all_scores = jnp.concatenate([beam_scores, ns])
+            all_expanded = jnp.concatenate([expanded, jnp.zeros((m,), bool)])
+            vals, pos = jax.lax.top_k(all_scores, ef)
+            return (all_ids[pos], vals, all_expanded[pos], visited, steps + 1)
+
+        state = (beam_ids, beam_scores, expanded, visited, jnp.zeros((), jnp.int32))
+        beam_ids, beam_scores, *_ = jax.lax.while_loop(cond, body, state)
+        vals, pos = jax.lax.top_k(beam_scores, min(k, ef))
+        out_ids = beam_ids[pos]
+        if k > ef:
+            out_ids = jnp.pad(out_ids, (0, k - ef), constant_values=-1)
+            vals = jnp.pad(vals, (0, k - ef), constant_values=-jnp.inf)
+        return vals, out_ids
+
+    return jax.vmap(one)(queries.astype(jnp.float32))

@@ -1,0 +1,107 @@
+"""Modality-aware K-means partitioning (paper Eq. 1) + workload-aware repartitioning.
+
+``Cluster Assignment = argmin_c ||e - mu_c||^2``  — fitted per modality, so each
+modality gets its own centroid set and per-partition index (DESIGN.md C2). On
+TPU the assignment is a single matmul: argmin_c ||e-mu||² = argmax_c (e·mu -
+||mu||²/2), which is how both ``fit`` and ``assign`` are written here.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class KMeansState(NamedTuple):
+    centroids: jax.Array        # (K, d)
+    counts: jax.Array           # (K,) assignment counts from the last fit
+    inertia: jax.Array          # scalar: mean squared distance
+
+
+def assign(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Eq. 1: nearest-centroid ids for x (N, d). One matmul + argmax."""
+    half_sq = 0.5 * jnp.sum(centroids * centroids, axis=-1)       # (K,)
+    scores = x @ centroids.T - half_sq[None, :]                   # (N, K)
+    return jnp.argmax(scores, axis=-1).astype(jnp.int32)
+
+
+def assign_topk(x: jax.Array, centroids: jax.Array, k: int):
+    """Top-k nearest centroids (used for n_probe partition selection)."""
+    half_sq = 0.5 * jnp.sum(centroids * centroids, axis=-1)
+    scores = x @ centroids.T - half_sq[None, :]
+    vals, idx = jax.lax.top_k(scores, k)
+    return idx.astype(jnp.int32), vals
+
+
+@functools.partial(jax.jit, static_argnames=("n_clusters", "n_iters"))
+def fit(key: jax.Array, x: jax.Array, n_clusters: int, n_iters: int = 16) -> KMeansState:
+    """Lloyd's K-means (k-means++-lite seeding: random distinct samples)."""
+    n = x.shape[0]
+    idx0 = jax.random.choice(key, n, (n_clusters,), replace=n < n_clusters)
+    cents = x[idx0]
+
+    def step(cents, _):
+        a = assign(x, cents)
+        onehot_sum = jax.ops.segment_sum(x, a, num_segments=n_clusters)
+        counts = jax.ops.segment_sum(jnp.ones((n,), x.dtype), a, num_segments=n_clusters)
+        new = onehot_sum / jnp.maximum(counts[:, None], 1.0)
+        # empty clusters keep their previous centroid
+        new = jnp.where(counts[:, None] > 0, new, cents)
+        return new, counts
+
+    cents, counts = jax.lax.scan(step, cents, None, length=n_iters)
+    counts = counts[-1]
+    a = assign(x, cents)
+    d = x - cents[a]
+    inertia = jnp.mean(jnp.sum(d * d, axis=-1))
+    return KMeansState(centroids=cents, counts=counts, inertia=inertia)
+
+
+# ---------------------------------------------------------------------------
+# workload-aware repartitioning (paper §3.2: online adjustment on imbalance)
+# ---------------------------------------------------------------------------
+
+class WorkloadStats:
+    """Host-side probe-frequency tracker driving online repartitioning."""
+
+    def __init__(self, n_partitions: int, imbalance_threshold: float = 4.0):
+        self.hits = np.zeros(n_partitions, np.int64)
+        self.threshold = imbalance_threshold
+
+    def record(self, probed_partitions: np.ndarray):
+        np.add.at(self.hits, np.asarray(probed_partitions).reshape(-1), 1)
+
+    @property
+    def imbalance(self) -> float:
+        mean = self.hits.mean() + 1e-9
+        return float(self.hits.max() / mean)
+
+    def should_repartition(self) -> bool:
+        return self.hits.sum() > 0 and self.imbalance > self.threshold
+
+    def reset(self):
+        self.hits[:] = 0
+
+
+def split_hot_partition(key, x, state: KMeansState, hot: int) -> KMeansState:
+    """Online adjustment: split the hottest partition's centroid in two by
+    re-fitting K=2 on its members and replacing (hot, coldest) centroids —
+    incremental, no full rebuild (paper: "zero-downtime incremental migration")."""
+    a = assign(x, state.centroids)
+    members = x[a == hot] if isinstance(x, np.ndarray) else x[jnp.where(a == hot, size=x.shape[0], fill_value=0)[0]]
+    # host-side convenience path (numpy)
+    xs = np.asarray(x)
+    an = np.asarray(a)
+    members = xs[an == hot]
+    if len(members) < 2:
+        return state
+    sub = fit(key, jnp.asarray(members), 2, 8)
+    cents = np.asarray(state.centroids).copy()
+    cold = int(np.asarray(state.counts).argmin())
+    cents[hot] = np.asarray(sub.centroids[0])
+    cents[cold] = np.asarray(sub.centroids[1])
+    new = KMeansState(jnp.asarray(cents), state.counts, state.inertia)
+    return new

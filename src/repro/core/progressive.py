@@ -1,0 +1,47 @@
+"""Progressive (anytime) query execution (paper §3.4): deliver a coarse
+result immediately and refine within a latency budget — n_probe doubles per
+round; every round's result is exact over the partitions probed so far, so
+quality is monotone (each round's candidate set is a superset).
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterator, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ivf as ivf_mod
+from repro.core.ivf import IVFIndex
+
+
+class AnytimeResult(NamedTuple):
+    scores: jax.Array
+    ids: jax.Array
+    n_probe: int
+    round: int
+    elapsed_s: float
+
+
+def progressive_search(index: IVFIndex, queries: jax.Array, *, k: int,
+                       probe_schedule: Sequence[int] = (1, 2, 4, 8, 16),
+                       budget_s: Optional[float] = None
+                       ) -> Iterator[AnytimeResult]:
+    """Yields monotonically improving results; stops at budget or schedule end."""
+    t0 = time.perf_counter()
+    best = None
+    for rnd, np_ in enumerate(probe_schedule):
+        np_ = min(np_, index.n_partitions)
+        sv, si = ivf_mod.search(index, queries, n_probe=np_, k=k)
+        if best is None:
+            best = (sv, si)
+        else:
+            best = ivf_mod.dedup_merge_topk(best[0], best[1], sv, si, k)
+        sv, si = best
+        jax.block_until_ready(sv)
+        el = time.perf_counter() - t0
+        yield AnytimeResult(sv, si, np_, rnd, el)
+        if budget_s is not None and el >= budget_s:
+            return
+        if np_ >= index.n_partitions:
+            return

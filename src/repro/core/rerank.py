@@ -1,0 +1,57 @@
+"""Sparse–dense reranking (paper §3.4: "+20% recall uplift via sparse matrix
+fusion").
+
+Dense candidates from the IVF/NSW search are re-scored with a sparse lexical
+signal: hashed-term vectors (a CSR-free fixed-width representation — each doc
+keeps its ``nnz`` strongest hashed terms) combined with the dense score by
+reciprocal-rank fusion (robust to score-scale mismatch, per Exp4Fuse).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SparseVectors(NamedTuple):
+    term_ids: jax.Array      # (N, nnz) int32, -1 padded — hashed term ids
+    term_weights: jax.Array  # (N, nnz) fp32
+
+
+def sparse_overlap_scores(docs: SparseVectors, q_terms: jax.Array,
+                          q_weights: jax.Array, cand_ids: jax.Array) -> jax.Array:
+    """Sparse dot-product between a query's hashed terms and candidate docs.
+
+    q_terms: (T,) int32; cand_ids: (Q, k) rows into docs. Returns (Q, k)."""
+    d_ids = docs.term_ids[jnp.clip(cand_ids, 0, docs.term_ids.shape[0] - 1)]
+    d_w = docs.term_weights[jnp.clip(cand_ids, 0, docs.term_ids.shape[0] - 1)]
+    # (Q, k, nnz, T) match matrix — nnz and T are small (≤32)
+    match = (d_ids[..., :, None] == q_terms[None, None, None, :])
+    match = jnp.logical_and(match, d_ids[..., :, None] >= 0)
+    contrib = d_w[..., :, None] * q_weights[None, None, None, :]
+    s = jnp.sum(jnp.where(match, contrib, 0.0), axis=(-1, -2))
+    return jnp.where(cand_ids >= 0, s, -jnp.inf)
+
+
+def rrf_rerank(dense_scores: jax.Array, sparse_scores: jax.Array,
+               cand_ids: jax.Array, *, k: int, c: float = 60.0,
+               w_dense: float = 1.0, w_sparse: float = 1.0
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Reciprocal-rank fusion of the two orderings; returns (scores, ids)."""
+    def ranks(s):
+        order = jnp.argsort(-s, axis=-1)
+        rk = jnp.argsort(order, axis=-1).astype(jnp.float32)
+        return rk
+    rd = ranks(dense_scores)
+    rs = ranks(sparse_scores)
+    fused = w_dense / (c + rd) + w_sparse / (c + rs)
+    fused = jnp.where(cand_ids >= 0, fused, -jnp.inf)
+    vals, pos = jax.lax.top_k(fused, min(k, fused.shape[-1]))
+    return vals, jnp.take_along_axis(cand_ids, pos, axis=-1)
+
+
+def hash_terms(tokens: jax.Array, n_buckets: int) -> jax.Array:
+    """Cheap multiplicative hash of token ids into term buckets."""
+    return ((tokens.astype(jnp.uint32) * jnp.uint32(2654435761)) >>
+            jnp.uint32(16)).astype(jnp.int32) % n_buckets

@@ -1,0 +1,192 @@
+"""Real spherical harmonics via stable associated-Legendre recurrence.
+
+Layout: flat (l, m) with index l² + (m + l), m ∈ [-l, l]; real convention
+  Y_{l,-|m|} ∝ P_l^{|m|}(cosθ)·sin(|m|φ),  Y_{l,+|m|} ∝ P_l^{|m|}(cosθ)·cos(|m|φ)
+orthonormalised over the sphere (∫ Y² dΩ = 1). Differentiable away from the
+poles/origin; inputs are unit-safe (r=0 maps to ẑ).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def sh_dim(l_max: int) -> int:
+    return (l_max + 1) ** 2
+
+
+def sh_index(l: int, m: int) -> int:
+    return l * l + (m + l)
+
+
+def real_sph_harm(vectors: jax.Array, l_max: int) -> jax.Array:
+    """vectors (..., 3) -> (..., (l_max+1)^2) orthonormal real SH."""
+    x, y, z = vectors[..., 0], vectors[..., 1], vectors[..., 2]
+    r = jnp.sqrt(x * x + y * y + z * z)
+    safe = r > 1e-12
+    rs = jnp.where(safe, r, 1.0)
+    ct = jnp.where(safe, z / rs, 1.0)                      # cosθ
+    rho = jnp.sqrt(jnp.maximum(x * x + y * y, 1e-24))      # sinθ·r
+    st = jnp.where(safe, rho / rs, 0.0)                    # sinθ ≥ 0
+    cphi = jnp.where(rho > 1e-12, x / rho, 1.0)
+    sphi = jnp.where(rho > 1e-12, y / rho, 0.0)
+
+    # associated Legendre P_l^m(ct) with Condon–Shortley, m >= 0, recurrence:
+    #   P_m^m = (-1)^m (2m-1)!! st^m
+    #   P_{m+1}^m = ct (2m+1) P_m^m
+    #   P_l^m = ((2l-1) ct P_{l-1}^m - (l+m-1) P_{l-2}^m) / (l - m)
+    P = {}
+    pmm = jnp.ones_like(ct)
+    for m in range(l_max + 1):
+        if m > 0:
+            pmm = pmm * (-(2 * m - 1)) * st
+        P[(m, m)] = pmm
+        if m + 1 <= l_max:
+            P[(m + 1, m)] = ct * (2 * m + 1) * pmm
+        for l in range(m + 2, l_max + 1):
+            P[(l, m)] = ((2 * l - 1) * ct * P[(l - 1, m)]
+                         - (l + m - 1) * P[(l - 2, m)]) / (l - m)
+
+    # cos(mφ), sin(mφ) by recurrence
+    cos_m = [jnp.ones_like(cphi), cphi]
+    sin_m = [jnp.zeros_like(sphi), sphi]
+    for m in range(2, l_max + 1):
+        cos_m.append(2 * cphi * cos_m[-1] - cos_m[-2])
+        sin_m.append(2 * cphi * sin_m[-1] - sin_m[-2])
+
+    out = []
+    for l in range(l_max + 1):
+        for m in range(-l, l + 1):
+            am = abs(m)
+            # orthonormal normalisation; (-1)^m cancels Condon–Shortley so the
+            # real SH are the standard (positive) tesseral harmonics
+            norm = math.sqrt((2 * l + 1) / (4 * math.pi)
+                             * math.factorial(l - am) / math.factorial(l + am))
+            if m != 0:
+                norm *= math.sqrt(2.0)
+            sign = (-1.0) ** am
+            base = sign * norm * P[(l, am)]
+            if m < 0:
+                out.append(base * sin_m[am])
+            elif m == 0:
+                out.append(base)
+            else:
+                out.append(base * cos_m[am])
+    return jnp.stack(out, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Real-basis Wigner D via the Ivanic–Ruedenberg recurrence
+# ---------------------------------------------------------------------------
+
+def _p_func(i, l, a, b, D1, Dl1):
+    """Ivanic–Ruedenberg helper P_i(l; a, b) (vectorised over leading dims)."""
+    # D1 indexed by [i+1, j+1] for i,j in {-1,0,1}; Dl1 is D^{l-1}
+    def d1(i_, j_):
+        return D1[..., i_ + 1, j_ + 1]
+
+    def dl(a_, b_):
+        return Dl1[..., a_ + (l - 1), b_ + (l - 1)]
+
+    if b == l:
+        return d1(i, 1) * dl(a, l - 1) - d1(i, -1) * dl(a, -(l - 1))
+    if b == -l:
+        return d1(i, 1) * dl(a, -(l - 1)) + d1(i, -1) * dl(a, l - 1)
+    return d1(i, 0) * dl(a, b)
+
+
+def _uvw(l, m, n):
+    """Ivanic–Ruedenberg (1996, with 1998 errata) u, v, w coefficients."""
+    d = 1.0 if m == 0 else 0.0
+    denom = (l + n) * (l - n) if abs(n) < l else (2 * l) * (2 * l - 1)
+    u = math.sqrt((l + m) * (l - m) / denom)
+    v = 0.5 * math.sqrt((1 + d) * (l + abs(m) - 1) * (l + abs(m)) / denom) * (1 - 2 * d)
+    w = -0.5 * math.sqrt((l - abs(m) - 1) * (l - abs(m)) / denom) * (1 - d)
+    return u, v, w
+
+
+def _u_func(l, m, n, D1, Dl1):
+    return _p_func(0, l, m, n, D1, Dl1)
+
+
+def _v_func(l, m, n, D1, Dl1):
+    if m == 0:
+        return _p_func(1, l, 1, n, D1, Dl1) + _p_func(-1, l, -1, n, D1, Dl1)
+    if m > 0:
+        d1 = 1.0 if m == 1 else 0.0
+        return (_p_func(1, l, m - 1, n, D1, Dl1) * math.sqrt(1 + d1)
+                - _p_func(-1, l, -m + 1, n, D1, Dl1) * (1 - d1))
+    d1 = 1.0 if m == -1 else 0.0
+    return (_p_func(1, l, m + 1, n, D1, Dl1) * (1 - d1)
+            + _p_func(-1, l, -m - 1, n, D1, Dl1) * math.sqrt(1 + d1))
+
+
+def _w_func(l, m, n, D1, Dl1):
+    if m == 0:
+        raise AssertionError("w term vanishes for m == 0")
+    if m > 0:
+        return (_p_func(1, l, m + 1, n, D1, Dl1)
+                + _p_func(-1, l, -m - 1, n, D1, Dl1))
+    return (_p_func(1, l, m - 1, n, D1, Dl1)
+            - _p_func(-1, l, -m + 1, n, D1, Dl1))
+
+
+def wigner_d_from_rotation(R: jax.Array, l_max: int):
+    """Real-basis Wigner-D blocks for rotation matrices R (..., 3, 3).
+
+    Returns list [D^0 (...,1,1), D^1 (...,3,3), ..., D^{l_max}]. Equivariance:
+    real_sph_harm(v @ R.T)_l == D^l @ real_sph_harm(v)_l.
+    """
+    batch = R.shape[:-2]
+    D0 = jnp.ones(batch + (1, 1), R.dtype)
+    # real-SH order (m = -1, 0, 1) ~ (y, z, x): D^1 = permuted R
+    perm = [1, 2, 0]
+    D1 = R[..., perm, :][..., :, perm]
+    Ds = [D0, D1]
+    for l in range(2, l_max + 1):
+        Dl1 = Ds[-1]
+        size = 2 * l + 1
+        rows = []
+        for m in range(-l, l + 1):
+            row = []
+            for n in range(-l, l + 1):
+                u, v, w = _uvw(l, m, n)
+                term = jnp.zeros(batch, R.dtype)
+                if abs(u) > 1e-14:
+                    term = term + u * _u_func(l, m, n, D1, Dl1)
+                if abs(v) > 1e-14:
+                    term = term + v * _v_func(l, m, n, D1, Dl1)
+                if abs(w) > 1e-14:
+                    term = term + w * _w_func(l, m, n, D1, Dl1)
+                row.append(term)
+            rows.append(jnp.stack(row, axis=-1))
+        Ds.append(jnp.stack(rows, axis=-2))
+    if l_max == 0:
+        return [D0]
+    return Ds[: l_max + 1]
+
+
+def rotation_to_align_z(vec: jax.Array) -> jax.Array:
+    """R (..., 3, 3) with R @ v̂ = ẑ (eSCN edge-frame alignment)."""
+    v = vec / jnp.maximum(jnp.linalg.norm(vec, axis=-1, keepdims=True), 1e-12)
+    x, y, z = v[..., 0], v[..., 1], v[..., 2]
+    # axis = v × ẑ, angle = arccos(z); Rodrigues. Degenerate v ≈ ±ẑ handled.
+    ax = jnp.stack([y, -x, jnp.zeros_like(x)], axis=-1)
+    s = jnp.linalg.norm(ax, axis=-1)
+    c = z
+    safe = s > 1e-8
+    axn = ax / jnp.maximum(s, 1e-12)[..., None]
+    K = jnp.zeros(v.shape[:-1] + (3, 3), v.dtype)
+    a1, a2, a3 = axn[..., 0], axn[..., 1], axn[..., 2]
+    K = K.at[..., 0, 1].set(-a3).at[..., 0, 2].set(a2)
+    K = K.at[..., 1, 0].set(a3).at[..., 1, 2].set(-a1)
+    K = K.at[..., 2, 0].set(-a2).at[..., 2, 1].set(a1)
+    eye = jnp.broadcast_to(jnp.eye(3, dtype=v.dtype), K.shape)
+    R = eye + s[..., None, None] * K + (1 - c)[..., None, None] * (K @ K)
+    flip = jnp.broadcast_to(jnp.diag(jnp.asarray([1.0, -1.0, -1.0], v.dtype)), K.shape)
+    R = jnp.where(safe[..., None, None], R, jnp.where(c[..., None, None] > 0, eye, flip))
+    return R

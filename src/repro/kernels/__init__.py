@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for HMGI's compute hot spots.
+
+Each kernel package has: <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper; interpret=True on CPU), ref.py (pure-jnp oracle).
+
+  ivf_topk         — fused int8-dequant scan + per-chunk partial top-1
+                     (the paper's ANNS hot loop; ScaNN-on-TPU layout)
+  segment_reduce   — one-hot-matmul segment sum (GNN message passing,
+                     EmbeddingBag reduce; MXU-friendly scatter replacement)
+  decode_attention — GQA single-token flash-decode with online softmax
+                     (serving hot loop for the RAG engine)
+"""

@@ -1,0 +1,107 @@
+"""GQA single-token flash-decode Pallas kernel (serving hot loop).
+
+One query token per sequence attends over a long KV cache. The cache is
+streamed through VMEM in (block_s) slices; an online-softmax accumulator
+(m, l, acc) lives in VMEM scratch and persists across the sequence sweep —
+the classic flash-decoding layout, with the GQA head-group handled by a
+batched dot_general over the kv-head axis (no materialised KV repeat).
+
+Grid = (B, S // block_s); the S axis is the accumulation axis (sequential on
+TPU). Scratch is re-initialised at s==0 and the normalised output is written
+at the final s block.
+
+VMEM per step (block_s=512, Hkv=8, G=8, hd=128, fp32): K/V blocks 2·512·8·128
+·4 = 4 MB, scores 8·8·512·4 = 128 KB, acc 8·8·128·4 = 256 KB — fits; the
+dot_generals are (G×hd)·(hd×block_s) per kv head, MXU-shaped at hd=128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, k_ref, v_ref, valid_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_s: int):
+    # q_ref:    (1, Hkv, G, hd)
+    # k_ref:    (1, block_s, Hkv, hd)
+    # v_ref:    (1, block_s, Hkv, hd)
+    # valid_ref:(1, block_s) bool/int8
+    # o_ref:    (1, Hkv, G, hd)
+    # scratch:  m/l (Hkv, G) fp32;  acc (Hkv, G, hd) fp32
+    s = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    @pl.when(s == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)                          # (Hkv, G, hd)
+    k = k_ref[0].astype(jnp.float32)                          # (bs, Hkv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    ok = valid_ref[0] != 0                                    # (bs,)
+
+    # scores: (Hkv, G, bs) — batch over kv heads, contract hd
+    kt = jnp.transpose(k, (1, 0, 2))                          # (Hkv, bs, hd)
+    scores = jax.lax.dot_general(
+        q, kt, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32) * scale
+    scores = jnp.where(ok[None, None, :], scores, -jnp.inf)
+
+    m_prev = m_scr[...]                                       # (Hkv, G)
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    # guard: all -inf so far -> exp(0)=1 on nothing; use safe max
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(scores - m_safe[..., None])
+    p = jnp.where(ok[None, None, :], p, 0.0)                  # (Hkv, G, bs)
+    alpha = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+
+    vt = jnp.transpose(v, (1, 0, 2))                          # (Hkv, bs, hd)
+    pv = jax.lax.dot_general(
+        p, vt, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                   # (Hkv, G, hd)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv
+    m_scr[...] = m_new
+
+    @pl.when(s == ns - 1)
+    def _fini():
+        denom = jnp.maximum(l_scr[...], 1e-20)[..., None]
+        o_ref[...] = (acc_scr[...] / denom)[None].astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, valid, *, block_s: int = 512,
+                            interpret: bool = False):
+    """q (B, Hkv, G, hd); k/v (B, S, Hkv, hd); valid (B, S) -> (B, Hkv, G, hd)."""
+    b, hkv, g, hd = q.shape
+    s = k.shape[1]
+    assert s % block_s == 0, (s, block_s)
+    grid = (b, s // block_s)
+    return pl.pallas_call(
+        functools.partial(_kernel, scale=1.0 / (hd ** 0.5), block_s=block_s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, hkv, g, hd), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((1, block_s, hkv, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_s, hkv, hd), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_s), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, hkv, g, hd), lambda i, j: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, hd), q.dtype),
+        scratch_shapes=[
+            _vmem_scratch((hkv, g)),
+            _vmem_scratch((hkv, g)),
+            _vmem_scratch((hkv, g, hd)),
+        ],
+        interpret=interpret,
+    )(q, k, v, valid.astype(jnp.int8))
+
+
+def _vmem_scratch(shape):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, jnp.float32)

@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for flash-decode attention."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
+def decode_attention(q, k, v, valid, *, block_s: int = 512,
+                     interpret: bool | None = None):
+    """q (B, H, hd) with H = Hkv·G (GQA); k/v (B, S, Hkv, hd); valid (B, S).
+
+    Returns (B, H, hd)."""
+    interp = _on_cpu() if interpret is None else interpret
+    b, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    s = k.shape[1]
+    bs = min(block_s, s)
+    pad = (-s) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    qg = q.reshape(b, hkv, g, hd)
+    out = decode_attention_pallas(qg, k, v, valid, block_s=bs, interpret=interp)
+    return out.reshape(b, h, hd)

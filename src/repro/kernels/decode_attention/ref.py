@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for decode_attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, valid):
+    """q (B, Hkv, G, hd); k/v (B, S, Hkv, hd); valid (B, S) -> (B, Hkv, G, hd)."""
+    b, hkv, g, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qf, kf) * scale
+    scores = jnp.where(valid[:, None, None, :], scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isfinite(scores), p, 0.0)
+    return jnp.einsum("bhgs,bshd->bhgd", p, vf).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.ivf_topk.ops import scan_topk_quantized

@@ -1,0 +1,96 @@
+"""Fused quantized-scan + partial-top-k Pallas kernel (the IVF hot loop).
+
+Computes, for a query block against a quantized corpus slab:
+
+    score[q, n] = scale[n] · (Q[q] · D_int8[n]) + (128·scale[n] + vmin[n]) · Σ_d Q[q,d]
+
+(the affine-dequant identity — int8 rows never materialise as fp32 in HBM),
+then reduces each ``chunk`` of consecutive rows to its (max, argmax). The
+final exact top-k over (N/chunk) survivors happens outside in jnp — survivors
+are tiny. This is the TPU-native ANN layout (partial-reduce scan; cf.
+"TPU-KNN at Peak FLOP/s"): all FLOPs are one MXU matmul per (query-block ×
+row-block), HBM traffic is int8, and no sort runs inside the kernel.
+
+VMEM budget per grid step (defaults bq=256, bn=512, d≤1024, fp32 scores):
+  Q block 256·d·4 ≤ 1 MB, D block 512·d ≤ 0.5 MB (int8), scores 256·512·4
+  = 0.5 MB, outputs 2·256·(512/chunk)·4 — comfortably inside 16 MB VMEM,
+  MXU dims (256×d)·(d×512) aligned to the 128-lane systolic array.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, qsum_ref, d_ref, aff_ref, scale_ref, bias_ref,
+            smax_ref, sarg_ref, *, chunk: int, block_n: int):
+    # q_ref:    (bq, d)      fp32   — query block (resident across grid)
+    # qsum_ref: (bq, 1)      fp32   — per-query Σ_d q
+    # d_ref:    (bn, d)      int8   — corpus rows for this grid step
+    # aff_ref:  (bn, 1)      fp32   — 128·scale + vmin   (affine term)
+    # scale_ref:(bn, 1)      fp32
+    # bias_ref: (bn, 1)      fp32   — 0 for live rows, -3e38 for masked rows
+    # smax_ref: (bq, bn/chunk) fp32 — per-chunk max scores (output block)
+    # sarg_ref: (bq, bn/chunk) int32 — per-chunk argmax (row within slab)
+    n = pl.program_id(0)
+    q = q_ref[...]
+    d = d_ref[...].astype(jnp.float32)
+    dots = jax.lax.dot_general(q, d, (((1,), (1,)), ((), ())),
+                               preferred_element_type=jnp.float32)   # (bq, bn)
+    scores = (dots * scale_ref[...][:, 0][None, :]
+              + qsum_ref[...] * aff_ref[...][:, 0][None, :]
+              + bias_ref[...][:, 0][None, :])
+    bq = scores.shape[0]
+    nchunks = block_n // chunk
+    sc = scores.reshape(bq, nchunks, chunk)
+    smax_ref[...] = jnp.max(sc, axis=-1)
+    arg = jnp.argmax(sc, axis=-1).astype(jnp.int32)                  # (bq, nchunks)
+    base = n * block_n + jnp.arange(nchunks, dtype=jnp.int32) * chunk
+    sarg_ref[...] = arg + base[None, :]
+
+
+def scan_topk_pallas(queries, data_i8, vmin, scale, bias=None, *,
+                     chunk: int = 128, block_n: int = 512,
+                     interpret: bool = False):
+    """queries (Q, d) fp32; data_i8 (N, d) int8 (centered at -128);
+    vmin/scale (N,) fp32; bias (N,) fp32 or None (0 live, -3e38 masked).
+    Returns (chunk_max (Q, N/chunk), chunk_arg)."""
+    qn, d = queries.shape
+    n = data_i8.shape[0]
+    assert n % block_n == 0 and block_n % chunk == 0, (n, block_n, chunk)
+    nchunks_total = n // chunk
+    nblocks = n // block_n
+    per_block = block_n // chunk
+
+    qsum = jnp.sum(queries, axis=-1, keepdims=True)                  # (Q, 1)
+    aff = (128.0 * scale + vmin).reshape(n, 1)
+    scale2 = scale.reshape(n, 1)
+    bias2 = (jnp.zeros((n, 1), jnp.float32) if bias is None
+             else bias.reshape(n, 1).astype(jnp.float32))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((qn, nchunks_total), jnp.float32),
+        jax.ShapeDtypeStruct((qn, nchunks_total), jnp.int32),
+    )
+    grid = (nblocks,)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qn, d), lambda i: (0, 0)),                  # queries
+            pl.BlockSpec((qn, 1), lambda i: (0, 0)),                  # qsum
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),             # data
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),             # affine
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),             # scale
+            pl.BlockSpec((block_n, 1), lambda i: (i, 0)),             # bias
+        ],
+        out_specs=(
+            pl.BlockSpec((qn, per_block), lambda i: (0, i)),
+            pl.BlockSpec((qn, per_block), lambda i: (0, i)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(queries.astype(jnp.float32), qsum, data_i8, aff, scale2, bias2)

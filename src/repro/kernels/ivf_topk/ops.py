@@ -1,0 +1,51 @@
+"""Public jit'd wrapper for the fused quantized scan.
+
+On CPU (this container) the kernel body runs under ``interpret=True``; on a
+real TPU the same pallas_call compiles to Mosaic. The wrapper pads N to the
+block size and returns the exact top-k ids/scores over the chunk survivors.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ivf_topk.ivf_topk import scan_topk_pallas
+from repro.kernels.ivf_topk.ref import topk_from_chunks
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "block_n", "interpret"))
+def scan_topk_quantized(queries, data_i8, vmin, scale, valid, *, k: int,
+                        chunk: int = 128, block_n: int = 512,
+                        interpret: bool | None = None):
+    """Top-k over a quantized corpus slab.
+
+    queries (Q, d) fp32; data_i8 (N, d) int8; vmin/scale (N,); valid (N,) bool.
+    Returns (scores (Q, k), row_ids (Q, k)) — descending, -inf/-1 padded.
+    """
+    interp = _on_cpu() if interpret is None else interpret
+    n, d = data_i8.shape
+    pad = (-n) % block_n
+    if pad:
+        data_i8 = jnp.pad(data_i8, ((0, pad), (0, 0)))
+        vmin = jnp.pad(vmin, (0, pad))
+        scale = jnp.pad(scale, (0, pad), constant_values=1.0)
+        valid = jnp.pad(valid, (0, pad))
+    # invalid rows get a -3e38 additive bias inside the kernel (sign-safe)
+    NEG = jnp.float32(-3e38)
+    bias = jnp.where(valid, 0.0, NEG)
+    cmax, carg = scan_topk_pallas(queries, data_i8, vmin, scale, bias,
+                                  chunk=chunk, block_n=block_n, interpret=interp)
+    vals, ids = topk_from_chunks(cmax, carg, min(k, cmax.shape[1]))
+    dead = vals <= NEG * 0.5
+    vals = jnp.where(dead, -jnp.inf, vals)
+    ids = jnp.where(dead, -1, ids)
+    if k > vals.shape[1]:
+        vals = jnp.pad(vals, ((0, 0), (0, k - vals.shape[1])), constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, k - ids.shape[1])), constant_values=-1)
+    return vals, ids

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the ivf_topk kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def scan_topk_ref(queries, data_i8, vmin, scale, *, chunk: int = 128):
+    """Dequantize fully, exact scores, per-chunk (max, argmax)."""
+    q = queries.astype(jnp.float32)
+    e = (data_i8.astype(jnp.float32) + 128.0) * scale[:, None] + vmin[:, None]
+    scores = q @ e.T                                         # (Q, N)
+    qn, n = scores.shape
+    nchunks = n // chunk
+    sc = scores.reshape(qn, nchunks, chunk)
+    smax = jnp.max(sc, axis=-1)
+    sarg = jnp.argmax(sc, axis=-1).astype(jnp.int32) + \
+        (jnp.arange(nchunks, dtype=jnp.int32) * chunk)[None, :]
+    return smax, sarg
+
+
+def topk_from_chunks(chunk_max, chunk_arg, k: int):
+    """Exact top-k over the chunk survivors (second stage, tiny).
+
+    Clamps k to the available chunk count and pads (-inf, -1)."""
+    import jax
+    kk = min(k, chunk_max.shape[-1])
+    vals, pos = jax.lax.top_k(chunk_max, kk)
+    ids = jnp.take_along_axis(chunk_arg, pos, axis=-1)
+    if kk < k:
+        pad = k - kk
+        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+    return vals, ids

@@ -1,0 +1,35 @@
+"""Public jit'd wrapper for the one-hot-matmul segment sum."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_reduce.segment_reduce import segment_sum_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("n_segments", "block_n", "block_e",
+                                             "interpret"))
+def segment_sum_mm(messages, seg_ids, n_segments: int, *, block_n: int = 512,
+                   block_e: int = 1024, interpret: bool | None = None):
+    """messages (E, d) -> (n_segments, d); ids < 0 or >= n_segments drop."""
+    interp = _on_cpu() if interpret is None else interpret
+    e, d = messages.shape
+    block_n = min(block_n, max(128, n_segments))
+    block_e = min(block_e, max(128, e))
+    pad_e = (-e) % block_e
+    pad_n = (-n_segments) % block_n
+    seg = jnp.where(jnp.logical_and(seg_ids >= 0, seg_ids < n_segments),
+                    seg_ids, n_segments + pad_n)  # out of padded range -> drops
+    if pad_e:
+        messages = jnp.pad(messages, ((0, pad_e), (0, 0)))
+        seg = jnp.pad(seg, (0, pad_e), constant_values=n_segments + pad_n)
+    out = segment_sum_pallas(messages, seg.astype(jnp.int32),
+                             n_segments + pad_n, block_n=block_n,
+                             block_e=block_e, interpret=interp)
+    return out[:n_segments]

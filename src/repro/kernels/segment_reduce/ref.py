@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for segment_reduce."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(messages, seg_ids, n_segments: int):
+    ok = jnp.logical_and(seg_ids >= 0, seg_ids < n_segments)
+    msg = jnp.where(ok[:, None], messages, 0)
+    seg = jnp.where(ok, seg_ids, 0)
+    return jax.ops.segment_sum(msg, seg, num_segments=n_segments)

@@ -1,0 +1,589 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# (docstring below; the two lines above MUST precede any jax-importing code)
+_DOC = """Multi-pod dry-run: lower + compile every (arch x input-shape x mesh) cell.
+
+For each cell: jit(step).lower(**input_specs).compile() on the single-pod
+(16,16) and multi-pod (2,16,16) production meshes; record
+memory_analysis() / cost_analysis() / collective bytes (HLO text parse) to
+``results/dryrun/<mesh>/<arch>__<shape>.json``.
+
+Cost-analysis calibration (DESIGN.md §6): LM layer stacks lower with
+``unroll=n_layers`` so scan bodies are counted; GNN ring scans stay rolled
+(HLO size) and the true cost is extrapolated from two extra small lowerings
+(R=1 and R=2-unrolled ring variants): true = f(R1) + (R-1)·(f(R2) - f(R1)).
+"""
+
+import argparse
+import dataclasses
+import json
+import math
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.common.params import abstract_init
+from repro.configs import ASSIGNED_ARCHS, get_config, get_shapes
+from repro.configs.base import GNNConfig, LMConfig, RecsysConfig, ShapeSpec
+from repro.launch.mesh import data_shards, make_production_mesh
+from repro.models import lm
+from repro.models.gnn import driver as gnn_driver
+from repro.models.gnn import dimenet as dimenet_mod
+from repro.models.gnn.common import RingGraph
+from repro.models.recsys import xdeepfm
+from repro.roofline.hlo_parse import count_collective_ops, parse_collective_bytes
+from repro.sharding.rules import logical_to_spec, rule_overrides, shard_tree
+from repro.train.optimizer import AdamWConfig, init_adamw, opt_state_axes
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def _sh(mesh, logical, dims):
+    return NamedSharding(mesh, logical_to_spec(logical, mesh, None, dims))
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+
+def lm_cell(cfg: LMConfig, shape: ShapeSpec, mesh, fast: bool,
+            cost_variant: bool = False):
+    """fast/main: rolled scans (memory + sharding proof, quick compiles).
+    cost_variant: tiny-L unrolled, unblocked attention — the exact-cost probe
+    used by the layer-count extrapolation."""
+    if cost_variant:
+        opts = lm.ExecOpts(q_block=0, unroll_layers=True,
+                           unroll_attn_blocks=False, remat=True)
+    else:
+        opts = lm.ExecOpts(q_block=1024, unroll_layers=not fast,
+                           unroll_attn_blocks=not fast, remat=True)
+    abs_params, axes = abstract_init(lambda k: lm.init_lm(cfg, k),
+                                     jax.random.PRNGKey(0))
+    p_sh = shard_tree(axes, abs_params, mesh)
+    bsz = shape["global_batch"]
+    seq = shape["seq_len"]
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(init_adamw, abs_params)
+        o_sh = shard_tree(opt_state_axes(axes), opt_abs, mesh)
+        # microbatching bounds stored remat activations to ~1 sequence/device;
+        # the cost probes run accum=1 (total step FLOPs are accumulation-
+        # invariant, and the accum scan body would otherwise count once).
+        # batch capacity respects the ACTIVE rule variant (fsdp puts batch on
+        # the model axis too)
+        from repro.sharding.rules import batch_axes
+        baxes = batch_axes(mesh, bsz)
+        n_data = 1
+        for a in baxes:
+            n_data *= mesh.shape[a]
+        per_dev = max(bsz // max(n_data, 1), 1)
+        accum = 1 if cost_variant else min(per_dev, 8)
+        if accum > 1:
+            micro = bsz // accum
+            tok = _sds((accum, micro, seq), jnp.int32)
+            b_sh = _sh(mesh, (None, "batch", None), (accum, micro, seq))
+        else:
+            tok = _sds((bsz, seq), jnp.int32)
+            b_sh = _sh(mesh, ("batch", None), (bsz, seq))
+        step = lm.make_train_step(cfg, mesh, opts, AdamWConfig(),
+                                  grad_accum=accum)
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, {"tokens": b_sh, "labels": b_sh}),
+                     out_shardings=(p_sh, o_sh, None))
+        args = (abs_params, opt_abs, {"tokens": tok, "labels": tok})
+    elif shape.kind == "prefill":
+        tok = _sds((bsz, seq), jnp.int32)
+        b_sh = _sh(mesh, ("batch", None), (bsz, seq))
+        pf = lambda p, t: lm.prefill(cfg, p, t, mesh, opts)
+        fn = jax.jit(pf, in_shardings=(p_sh, b_sh))
+        args = (abs_params, tok)
+    elif shape.kind == "decode":
+        clen = lm.cache_len_for(cfg, seq)
+        cache_abs, cache_axes = abstract_init(
+            lambda: lm.init_cache(cfg, bsz, clen))
+        c_sh = shard_tree(cache_axes, cache_abs, mesh)
+        dstep = lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos, mesh, opts)
+        fn = jax.jit(dstep, in_shardings=(p_sh, c_sh, None, None),
+                     out_shardings=(None, c_sh))
+        args = (abs_params, cache_abs, _sds((bsz,), jnp.int32),
+                _sds((), jnp.int32))
+    else:
+        raise ValueError(shape.kind)
+
+    tokens = bsz * (seq if shape.kind != "decode" else 1)
+    mult = 3 if shape.kind == "train" else 1          # fwd+bwd ≈ 3x fwd
+    model_flops = 2 * cfg.active_param_count() * tokens * mult
+    if shape.kind == "decode":
+        # decode compute is attention-read dominated; 6ND counts matmuls only
+        model_flops = 2 * cfg.active_param_count() * tokens
+    meta = {"params": cfg.param_count(), "active_params": cfg.active_param_count(),
+            "model_flops": model_flops, "tokens": tokens}
+    return fn, args, meta, None
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+
+def _ring_specs(mesh, n_nodes, n_edges, d_feat, rounds: Optional[int] = None,
+                imbalance: float = 1.15, e_cap: Optional[int] = None):
+    s = data_shards(mesh)
+    r = rounds or s
+    n_pad = int(math.ceil(n_nodes / s) * s)
+    # per-(shard, round) capacity — the extrapolation probes override this so
+    # the per-round body cost matches the production cell exactly
+    e_cap = e_cap or max(int(math.ceil(n_edges / (s * s) * imbalance)), 8)
+    g = RingGraph(
+        feats=_sds((n_pad, d_feat)),
+        positions=_sds((n_pad, 3)),
+        esrc_local=_sds((s, r, e_cap), jnp.int32),
+        edst_local=_sds((s, r, e_cap), jnp.int32),
+        edge_mask=_sds((s, r, e_cap), jnp.bool_),
+        node_mask=_sds((n_pad,), jnp.bool_),
+        labels=_sds((n_pad,), jnp.int32),
+    )
+    nspec = _sh(mesh, ("nodes",), (n_pad,))
+    nspec2 = _sh(mesh, ("nodes", None), (n_pad, d_feat))
+    espec = _sh(mesh, ("edges", None, None), (s, r, e_cap))
+    shardings = RingGraph(
+        feats=nspec2, positions=nspec2, esrc_local=espec, edst_local=espec,
+        edge_mask=espec, node_mask=nspec, labels=nspec)
+    return g, shardings, {"n_pad": n_pad, "e_cap": e_cap, "rounds": r, "shards": s}
+
+
+def gnn_full_graph_cell(cfg: GNNConfig, shape: ShapeSpec, mesh, fast: bool,
+                        rounds_override: Optional[int] = None,
+                        e_cap_override: Optional[int] = None):
+    d_feat = shape.dims.get("d_feat", 16)
+    n_nodes, n_edges = shape["n_nodes"], shape["n_edges"]
+    abs_params, axes = abstract_init(
+        lambda k: gnn_driver.init_model(cfg, k, d_feat), jax.random.PRNGKey(0))
+    p_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), abs_params)
+    opt_abs = jax.eval_shape(init_adamw, abs_params)
+    o_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), opt_abs)
+
+    g, g_sh, ginfo = _ring_specs(mesh, n_nodes, n_edges, d_feat,
+                                 rounds=rounds_override, e_cap=e_cap_override)
+
+    if cfg.model == "dimenet":
+        s, r = ginfo["shards"], ginfo["rounds"]
+        t_cap = max(int(8 * n_edges / (s * s) * 1.15), 8)
+        tri = (_sds((s, r, t_cap), jnp.int32), _sds((s, r, t_cap), jnp.int32),
+               _sds((s, r, t_cap), jnp.bool_))
+        tri_sh = tuple(_sh(mesh, ("edges", None, None), (s, r, t_cap))
+                       for _ in range(3))
+
+        def loss_fn(params, g, ts, td, tm):
+            sums = dimenet_mod.ring_loss(cfg, params, g, ts, td, tm, mesh,
+                                         gnn_driver._ce_sums)
+            return sums["loss_sum"] / jnp.maximum(sums["count"], 1.0), sums
+
+        def step(params, opt_state, g, ts, td, tm):
+            from repro.train.optimizer import adamw_update
+            (l, sums), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, g, ts, td, tm)
+            params, opt_state, om = adamw_update(AdamWConfig(lr=1e-3), grads,
+                                                 opt_state, params)
+            return params, opt_state, {"loss": l, **om}
+
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, g_sh) + tri_sh,
+                     out_shardings=(p_sh, o_sh, None))
+        args = (abs_params, opt_abs, g) + tri
+    else:
+        def loss_fn(params, g):
+            sums = gnn_driver.full_graph_loss(cfg, params, g, mesh)
+            return sums["loss_sum"] / jnp.maximum(sums["count"], 1.0), sums
+
+        def step(params, opt_state, g):
+            from repro.train.optimizer import adamw_update
+            (l, sums), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, g)
+            params, opt_state, om = adamw_update(AdamWConfig(lr=1e-3), grads,
+                                                 opt_state, params)
+            return params, opt_state, {"loss": l, **om}
+
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, g_sh),
+                     out_shardings=(p_sh, o_sh, None))
+        args = (abs_params, opt_abs, g)
+
+    from repro.common.tree import count_params
+    meta = {"params": int(sum(np.prod(l.shape) for l in jax.tree.leaves(abs_params))),
+            "model_flops": _gnn_model_flops(cfg, n_edges, d_feat) * 3,
+            **ginfo}
+    return fn, args, meta, ginfo
+
+
+def _gnn_model_flops(cfg: GNNConfig, n_edges: int, d_feat: int) -> int:
+    """Analytic per-forward FLOPs (message matmuls dominate)."""
+    d = cfg.d_hidden
+    if cfg.model == "egnn":
+        per_edge = 2 * (2 * d + 1) * d + 2 * d * d + 2 * d * 1
+    elif cfg.model == "dimenet":
+        nb, ns, nr = cfg.n_bilinear, cfg.n_spherical, cfg.n_radial
+        per_edge = (2 * 3 * d * d                     # embed MLP
+                    + 8 * (2 * d * d + 2 * ns * nr * nb + 2 * d * nb * d))
+    elif cfg.model == "nequip":
+        dim = (cfg.l_max + 1) ** 2
+        n_paths = sum(1 for l1 in range(cfg.l_max + 1)
+                      for l2 in range(cfg.l_max + 1)
+                      for _ in range(abs(l1 - l2), min(l1 + l2, cfg.l_max) + 1))
+        per_edge = n_paths * 2 * d * dim * 3          # CG contractions
+    else:  # equiformer_v2
+        dim = (cfg.l_max + 1) ** 2
+        so2 = sum((2 if m else 1) * 2 * ((cfg.l_max + 1 - m) * d) ** 2
+                  for m in range(cfg.m_max + 1))
+        rot = 2 * sum((2 * l + 1) ** 2 * d for l in range(cfg.l_max + 1))
+        per_edge = 2 * (so2 + 2 * rot)                # two passes (attn)
+    return int(per_edge) * int(n_edges) * cfg.n_layers
+
+
+def gnn_dense_cell(cfg: GNNConfig, shape: ShapeSpec, mesh, fast: bool):
+    """molecule / minibatch cells: vmapped per-sample graphs, pure DP."""
+    if shape.kind == "molecule":
+        bsz, n, e = shape["batch"], shape["n_nodes"], shape["n_edges"]
+        d_feat = 4
+        kind = "molecule"
+    else:
+        bsz = shape["batch_nodes"]
+        from repro.sparse.sampler import sizes_for_fanout
+        n, e = sizes_for_fanout((shape["fanout0"], shape["fanout1"]))
+        d_feat = min(shape.dims.get("d_feat", 602), 602)
+        kind = "minibatch"
+    n_out = 1 if kind == "molecule" else gnn_driver.N_CLASSES
+    abs_params, axes = abstract_init(
+        lambda k: gnn_driver.init_model(cfg, k, d_feat, n_out),
+        jax.random.PRNGKey(0))
+    p_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), abs_params)
+    opt_abs = jax.eval_shape(init_adamw, abs_params)
+    o_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), opt_abs)
+
+    from repro.models.gnn.common import FlatGraph
+    g = FlatGraph(
+        feats=_sds((bsz, n, d_feat)), positions=_sds((bsz, n, 3)),
+        edge_src=_sds((bsz, e), jnp.int32), edge_dst=_sds((bsz, e), jnp.int32),
+        edge_mask=_sds((bsz, e), jnp.bool_), node_mask=_sds((bsz, n), jnp.bool_),
+        labels=_sds((bsz, n), jnp.int32))
+    g_sh = FlatGraph(
+        feats=_sh(mesh, ("batch", None, None), (bsz, n, d_feat)),
+        positions=_sh(mesh, ("batch", None, None), (bsz, n, 3)),
+        edge_src=_sh(mesh, ("batch", None), (bsz, e)),
+        edge_dst=_sh(mesh, ("batch", None), (bsz, e)),
+        edge_mask=_sh(mesh, ("batch", None), (bsz, e)),
+        node_mask=_sh(mesh, ("batch", None), (bsz, n)),
+        labels=_sh(mesh, ("batch", None), (bsz, n)))
+
+    batch = {"graph": g}
+    b_sh = {"graph": g_sh}
+    if kind == "molecule":
+        batch["energy"] = _sds((bsz,))
+        b_sh["energy"] = _sh(mesh, ("batch",), (bsz,))
+        if cfg.model == "dimenet":
+            t = 8 * e
+            batch["triplets"] = dimenet_mod.TripletIndex(
+                _sds((bsz, t), jnp.int32), _sds((bsz, t), jnp.int32),
+                _sds((bsz, t), jnp.bool_))
+            b_sh["triplets"] = dimenet_mod.TripletIndex(
+                *(_sh(mesh, ("batch", None), (bsz, t)) for _ in range(3)))
+    else:
+        batch["labels"] = _sds((bsz,), jnp.int32)
+        b_sh["labels"] = _sh(mesh, ("batch",), (bsz,))
+        if cfg.model == "dimenet":
+            t = 8 * e
+            batch["triplets"] = dimenet_mod.TripletIndex(
+                _sds((bsz, t), jnp.int32), _sds((bsz, t), jnp.int32),
+                _sds((bsz, t), jnp.bool_))
+            b_sh["triplets"] = dimenet_mod.TripletIndex(
+                *(_sh(mesh, ("batch", None), (bsz, t)) for _ in range(3)))
+
+    # minibatch dimenet uses per-sample triplets through minibatch_loss? the
+    # driver's minibatch/molecule losses pass triplets when present.
+    step = gnn_driver.make_train_step(cfg, kind, mesh=None)
+    fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                 out_shardings=(p_sh, o_sh, None))
+    args = (abs_params, opt_abs, batch)
+    meta = {"params": int(sum(np.prod(l.shape) for l in jax.tree.leaves(abs_params))),
+            "model_flops": _gnn_model_flops(cfg, bsz * e, d_feat) * 3}
+    return fn, args, meta, None
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+
+def recsys_cell(cfg: RecsysConfig, shape: ShapeSpec, mesh, fast: bool):
+    abs_params, axes = abstract_init(lambda k: xdeepfm.init(cfg, k),
+                                     jax.random.PRNGKey(0))
+    with rule_overrides(cfg.sharding_overrides):
+        p_sh = shard_tree(axes, abs_params, mesh)
+    f = cfg.n_sparse
+    if shape.kind == "train":
+        bsz = shape["batch"]
+        opt_abs = jax.eval_shape(init_adamw, abs_params)
+        o_sh = shard_tree(opt_state_axes(axes), opt_abs, mesh)
+
+        def step(params, opt_state, batch):
+            from repro.train.optimizer import adamw_update
+            (l, aux), grads = jax.value_and_grad(
+                lambda p: xdeepfm.loss_fn(cfg, p, batch, mesh), has_aux=True)(params)
+            params, opt_state, om = adamw_update(AdamWConfig(lr=1e-3), grads,
+                                                 opt_state, params)
+            return params, opt_state, {"loss": l, **aux, **om}
+
+        batch = {"ids": _sds((bsz, f), jnp.int32), "labels": _sds((bsz,), jnp.int32)}
+        b_sh = {"ids": _sh(mesh, ("batch", None), (bsz, f)),
+                "labels": _sh(mesh, ("batch",), (bsz,))}
+        fn = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                     out_shardings=(p_sh, o_sh, None))
+        args = (abs_params, opt_abs, batch)
+        mult = 3
+    elif shape.kind == "serve":
+        bsz = shape["batch"]
+        fwd = lambda p, ids: xdeepfm.forward(cfg, p, ids, mesh)
+        fn = jax.jit(fwd, in_shardings=(p_sh, _sh(mesh, ("batch", None), (bsz, f))))
+        args = (abs_params, _sds((bsz, f), jnp.int32))
+        mult = 1
+    else:  # retrieval
+        bsz = shape["n_candidates"]
+        sc = lambda p, u, c: xdeepfm.retrieval_score(cfg, p, u, c, mesh)
+        fn = jax.jit(sc, in_shardings=(p_sh, None,
+                                       _sh(mesh, ("batch", None), (bsz, f))))
+        args = (abs_params, _sds((f,), jnp.int32), _sds((bsz, f), jnp.int32))
+        mult = 1
+
+    # analytic flops: CIN + MLP per example
+    m, d = cfg.n_sparse, cfg.embed_dim
+    prev = m
+    per_ex = 0
+    for h in cfg.cin_layers:
+        per_ex += 2 * prev * m * d * h
+        prev = h
+    d_in = m * d
+    for h in cfg.mlp_layers:
+        per_ex += 2 * d_in * h
+        d_in = h
+    if shape.kind == "retrieval":
+        per_ex = 2 * m * d   # dot-product scoring per candidate
+    meta = {"params": cfg.param_count(), "model_flops": per_ex * bsz * mult}
+    return fn, args, meta, None
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+def build_cell(arch: str, shape: ShapeSpec, mesh, fast: bool, **kw):
+    cfg = get_config(arch)
+    if isinstance(cfg, LMConfig):
+        # main LM compile always rolled (memory/sharding proof); exact cost
+        # comes from the layer-count extrapolation probes
+        return lm_cell(cfg, shape, mesh, fast=True)
+    if isinstance(cfg, GNNConfig):
+        if shape.kind == "full_graph":
+            return gnn_full_graph_cell(cfg, shape, mesh, fast, **kw)
+        return gnn_dense_cell(cfg, shape, mesh, fast)
+    if isinstance(cfg, RecsysConfig):
+        return recsys_cell(cfg, shape, mesh, fast)
+    raise TypeError(type(cfg))
+
+
+# sharding-rule variants for §Perf hillclimbing (EXPERIMENTS.md):
+#   fsdp — pure ZeRO-3 data parallelism for dense LM training: batch over all
+#   mesh axes, weights 2-D sharded over ("data","model"), no tensor-parallel
+#   activation psums (they dominated the baseline collective term 10:1)
+RULE_VARIANTS = {
+    "baseline": {},
+    "fsdp": {
+        "batch": ("pod", "data", "model"),
+        "heads": None, "kv_heads": None, "mlp": None, "act_heads": None,
+        "embed_fsdp": ("data", "model"),
+        "vocab": ("data", "model"),
+        "vocab_act": None,
+        "embed_model": None,
+        "experts": None,
+    },
+    # serving: weights stay TP-resident (no ZeRO re-gather per token — the
+    # baseline decode cells were all-gathering the full parameter set per
+    # decoded token, which dominated their collective term)
+    "serve": {
+        "embed_fsdp": None,
+    },
+}
+
+
+def run_cell(arch: str, shape: ShapeSpec, mesh_name: str, fast: bool = False,
+             variant: str = "baseline") -> Dict[str, Any]:
+    mesh = make_production_mesh(multi_pod=(mesh_name == "multipod"))
+    cfg = get_config(arch)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+                           "kind": shape.kind, "dims": shape.dims,
+                           "variant": variant}
+    if shape.skip:
+        rec["status"] = "skipped"
+        rec["skip_reason"] = shape.skip_reason
+        return rec
+    t0 = time.time()
+    overrides = {**getattr(cfg, "sharding_overrides", {}),
+                 **RULE_VARIANTS[variant]}
+    with rule_overrides(overrides):
+        fn, args, meta, ginfo = build_cell(arch, shape, mesh, fast)
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    txt = compiled.as_text()
+    coll = parse_collective_bytes(txt)
+    ops = count_collective_ops(txt)
+    rec.update({
+        "status": "ok",
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+        },
+        "flops_per_device": ca.get("flops", 0.0),
+        "bytes_per_device": ca.get("bytes accessed", 0.0),
+        "collective_bytes_per_device": coll,
+        "collective_op_counts": ops,
+        "hlo_chars": len(txt),
+        "meta": meta,
+    })
+
+    # GNN ring extrapolation: two small extra lowerings (R=1, R=2)
+    if ginfo is not None:
+        rec["ring_extrapolation"] = _ring_extrapolate(arch, shape, mesh, ginfo)
+    # LM layer-count extrapolation: two tiny-L unrolled cost probes
+    if isinstance(cfg, LMConfig):
+        rec["layer_extrapolation"] = _lm_extrapolate(cfg, shape, mesh,
+                                                     overrides)
+    return rec
+
+
+def _lm_extrapolate(cfg: LMConfig, shape: ShapeSpec, mesh,
+                    overrides=None) -> Dict[str, Any]:
+    """True per-device cost = f(L_a) + (n_scan-1)·(f(L_b) - f(L_a)) with
+    L_a = first_dense+1, L_b = first_dense+2 (exact: the scanned layers are
+    homogeneous; outside-the-scan cost cancels in the difference)."""
+    fd = cfg.first_dense_layers
+    vals = {}
+    if overrides is None:
+        overrides = getattr(cfg, "sharding_overrides", {})
+    for li, lval in (("a", fd + 1), ("b", fd + 2)):
+        sub = cfg.replace(n_layers=lval)
+        with rule_overrides(overrides):
+            fn, args, _, _ = lm_cell(sub, shape, mesh, fast=False,
+                                     cost_variant=True)
+            comp = fn.lower(*args).compile()
+        ca = comp.cost_analysis() or {}
+        coll = parse_collective_bytes(comp.as_text())
+        vals[li] = {"flops": ca.get("flops", 0.0),
+                    "bytes": ca.get("bytes accessed", 0.0),
+                    "coll": coll.get("total", 0.0)}
+    n_scan = cfg.n_layers - fd
+    body = {k: max(vals["b"][k] - vals["a"][k], 0.0)
+            for k in ("flops", "bytes", "coll")}
+    return {
+        "n_scan_layers": n_scan,
+        "per_layer": body,
+        "true_flops_per_device": vals["a"]["flops"] + (n_scan - 1) * body["flops"],
+        "true_bytes_per_device": vals["a"]["bytes"] + (n_scan - 1) * body["bytes"],
+        "true_collective_bytes_per_device": (vals["a"]["coll"]
+                                             + (n_scan - 1) * body["coll"]),
+    }
+
+
+def _ring_extrapolate(arch, shape, mesh, ginfo) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    out = {"rounds": ginfo["rounds"]}
+    vals = {}
+    for r in (1, 2):
+        fn, args, _, _ = build_cell(arch, shape, mesh, fast=False,
+                                    rounds_override=r,
+                                    e_cap_override=ginfo["e_cap"])
+        comp = fn.lower(*args).compile()
+        ca = comp.cost_analysis() or {}
+        coll = parse_collective_bytes(comp.as_text())
+        vals[r] = {"flops": ca.get("flops", 0.0),
+                   "bytes": ca.get("bytes accessed", 0.0),
+                   "coll": coll.get("total", 0.0)}
+    R = ginfo["rounds"]
+    body = {k: vals[2][k] - vals[1][k] for k in ("flops", "bytes", "coll")}
+    out["true_flops_per_device"] = vals[1]["flops"] + (R - 1) * body["flops"]
+    out["true_bytes_per_device"] = vals[1]["bytes"] + (R - 1) * body["bytes"]
+    out["true_collective_bytes_per_device"] = (vals[1]["coll"]
+                                               + (R - 1) * body["coll"])
+    out["per_round"] = body
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["singlepod", "multipod", "both"])
+    ap.add_argument("--fast", action="store_true",
+                    help="rolled scans (quick check; roofline numbers undercount)")
+    ap.add_argument("--variant", default="baseline", choices=list(RULE_VARIANTS))
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    if args.variant != "baseline":
+        args.out = args.out.rstrip("/") + "_" + args.variant
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    meshes = (["singlepod", "multipod"] if args.mesh == "both" else [args.mesh])
+
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in get_shapes(arch):
+            if args.shape and shape.name != args.shape:
+                continue
+            for mesh_name in meshes:
+                os.makedirs(os.path.join(args.out, mesh_name), exist_ok=True)
+                path = os.path.join(args.out, mesh_name,
+                                    f"{arch}__{shape.name}.json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[cached] {mesh_name:9s} {arch:22s} {shape.name}")
+                    continue
+                try:
+                    rec = run_cell(arch, shape, mesh_name, fast=args.fast,
+                                   variant=args.variant)
+                    status = rec["status"]
+                    if status == "ok":
+                        n_ok += 1
+                        print(f"[ok]     {mesh_name:9s} {arch:22s} {shape.name:14s}"
+                              f" compile={rec['compile_s']:.1f}s"
+                              f" flops/dev={rec['flops_per_device']:.3e}"
+                              f" temp={rec['memory']['temp_bytes']/2**30:.2f}GiB")
+                    else:
+                        n_skip += 1
+                        print(f"[skip]   {mesh_name:9s} {arch:22s} {shape.name:14s}"
+                              f" ({rec['skip_reason'][:60]})")
+                except Exception as e:  # noqa: BLE001
+                    n_fail += 1
+                    rec = {"arch": arch, "shape": shape.name, "mesh": mesh_name,
+                           "status": "failed", "error": repr(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                    print(f"[FAIL]   {mesh_name:9s} {arch:22s} {shape.name:14s} {e!r}")
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=float)
+    print(f"\ndone: ok={n_ok} skipped={n_skip} failed={n_fail}")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,155 @@
+"""GQA/MHA attention with causal + sliding-window masking, blocked softmax,
+prefill KV-cache production and single-token decode (flash-decode layout).
+
+Blocking: training/prefill attention is computed per q-block (online softmax
+free — each q-block sees the full K prefix, masked), bounding the live score
+matrix to (B, H, q_block, S_kv). The q-block loop is a ``lax.scan`` whose
+``unroll`` the dry-run sets to the full trip count so cost_analysis counts
+every block (see DESIGN.md §6 calibration note).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Builder
+from repro.layers.rope import apply_rope
+from repro.sharding.rules import with_sharding
+
+
+def init_gqa(cfg, key):
+    b = Builder(key, dtype=jnp.dtype(cfg.dtype))
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    b.dense("wq", (d, hq, hd), ("embed_fsdp", "heads", "head_dim"), fan_in=d)
+    b.dense("wk", (d, hkv, hd), ("embed_fsdp", "kv_heads", "head_dim"), fan_in=d)
+    b.dense("wv", (d, hkv, hd), ("embed_fsdp", "kv_heads", "head_dim"), fan_in=d)
+    b.dense("wo", (hq, hd, d), ("heads", "head_dim", "embed_fsdp"), fan_in=hq * hd)
+    if cfg.qkv_bias:
+        b.zeros("bq", (hq, hd), ("heads", "head_dim"))
+        b.zeros("bk", (hkv, hd), ("kv_heads", "head_dim"))
+        b.zeros("bv", (hkv, hd), ("kv_heads", "head_dim"))
+    return b.build()
+
+
+def _repeat_kv(k, n_rep: int):
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)).reshape(b, s, h * n_rep, d)
+
+
+def _mask_bias(q_pos, k_pos, window: int, dtype):
+    """(qb, kv) additive mask: causal plus optional sliding window."""
+    ok = k_pos[None, :] <= q_pos[:, None]
+    if window:
+        ok = jnp.logical_and(ok, k_pos[None, :] > q_pos[:, None] - window)
+    return jnp.where(ok, 0.0, -jnp.inf).astype(dtype)
+
+
+def attend_full(q, k, v, q_positions, k_positions, *, window: int = 0,
+                q_block: int = 0, unroll: bool = False, mesh=None):
+    """Blocked masked attention.
+
+    q: (B, Sq, Hq, hd); k/v: (B, Skv, Hkv, hd) — already roped.
+    Returns (B, Sq, Hq, hd).
+    """
+    bsz, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    k = _repeat_kv(k, hq // hkv)
+    v = _repeat_kv(v, hq // hkv)
+    scale = 1.0 / math.sqrt(hd)
+
+    qb = q_block if (q_block and q_block < sq) else sq
+    n_blocks = max(sq // qb, 1)
+    if sq % qb:
+        qb, n_blocks = sq, 1
+
+    def one_block(carry, idx):
+        qi = jax.lax.dynamic_slice_in_dim(q, idx * qb, qb, axis=1)
+        pi = jax.lax.dynamic_slice_in_dim(q_positions, idx * qb, qb, axis=0)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qi, k) * scale
+        s = s.astype(jnp.float32) + _mask_bias(pi, k_positions, window, jnp.float32)
+        p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", p, v)
+        return carry, o
+
+    if n_blocks == 1:
+        _, out = one_block(None, jnp.asarray(0))
+        return out
+    _, outs = jax.lax.scan(one_block, None, jnp.arange(n_blocks),
+                           unroll=n_blocks if unroll else 1)
+    # (n_blocks, B, qb, H, dv) -> (B, Sq, H, dv)   (dv may differ from hd: MLA)
+    return jnp.moveaxis(outs, 0, 1).reshape(bsz, sq, hq, outs.shape[-1])
+
+
+def attend_decode(q, k_cache, v_cache, valid_mask, mesh=None):
+    """Single-token decode vs. a (B, S_cache, Hkv, hd) cache.
+
+    GQA groups are handled with einsum batch dims — NO materialised KV repeat:
+    a broadcast+reshape of the seq-sharded cache defeats GSPMD propagation and
+    silently all-gathers the entire cache (§Perf iteration log). The cache's
+    seq dim stays sharded over "model" (flash-decode split-K); the softmax
+    psum over the sharded dim is inserted by GSPMD.
+    """
+    bsz, one, hq, hd = q.shape
+    hkv = k_cache.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(hd)
+    qg = q.reshape(bsz, one, hkv, g, hd)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k_cache) * scale  # (B,Hkv,G,1,S)
+    s = s.astype(jnp.float32) + jnp.where(
+        valid_mask[:, None, None, None, :], 0.0, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, v_cache)         # (B,1,Hkv,G,hd)
+    return out.reshape(bsz, one, hq, hd)
+
+
+def gqa_forward(cfg, p, x, positions, *, mode: str, cache=None, cache_pos=None,
+                mesh=None, q_block: int = 1024, unroll_blocks: bool = False):
+    """One attention sublayer.
+
+    mode "full":    returns (out, (k, v))            — train / prefill
+    mode "decode":  returns (out, (k_cache, v_cache)) — x is (B, 1, D)
+    """
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dtype)
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if mode == "full":
+        q = with_sharding(q, ("batch", "seq_attn", "act_heads", None), mesh)
+        out = attend_full(q, k, v, positions[0] if positions.ndim > 1 else positions,
+                          positions[0] if positions.ndim > 1 else positions,
+                          window=cfg.sliding_window, q_block=q_block,
+                          unroll=unroll_blocks, mesh=mesh)
+        new_cache = (k, v)
+    elif mode == "decode":
+        k_cache, v_cache, slot_pos = cache                     # (B,S,Hkv,hd) x2, (S,)
+        slot = cache_pos % k_cache.shape[1]                    # rolling for SWA
+        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
+        slot_pos = jax.lax.dynamic_update_slice_in_dim(
+            slot_pos, positions.reshape(1).astype(slot_pos.dtype), slot, axis=0)
+        k_cache = with_sharding(k_cache, ("batch", "cache_seq", None, None), mesh)
+        v_cache = with_sharding(v_cache, ("batch", "cache_seq", None, None), mesh)
+        pos_now = positions.reshape(())
+        valid = jnp.logical_and(slot_pos >= 0, slot_pos <= pos_now)
+        if cfg.sliding_window:
+            valid = jnp.logical_and(valid, slot_pos > pos_now - cfg.sliding_window)
+        valid = jnp.broadcast_to(valid[None, :], (x.shape[0], slot_pos.shape[0]))
+        out = attend_decode(q, k_cache, v_cache, valid, mesh=mesh)
+        new_cache = (k_cache, v_cache, slot_pos)
+    else:
+        raise ValueError(mode)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return out, new_cache

@@ -1,0 +1,85 @@
+"""Multi-head Latent Attention (DeepSeek-V2), with the decode-time
+weight-absorption trick: the cache holds only (latent, roped-k) per token —
+(kv_lora + qk_rope) floats/token/layer — and w_uk/w_uv are folded into the
+query/output paths, so decode never materialises per-head K/V.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Builder
+from repro.layers.rope import apply_rope
+from repro.layers.attention import attend_full
+from repro.sharding.rules import with_sharding
+
+
+def init_mla(cfg, key):
+    b = Builder(key, dtype=jnp.dtype(cfg.dtype))
+    d, h = cfg.d_model, cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    b.dense("wq", (d, h, dn + dr), ("embed_fsdp", "heads", "head_dim"), fan_in=d)
+    b.dense("w_dkv", (d, r), ("embed_fsdp", "kv_lora"), fan_in=d)
+    b.dense("w_krope", (d, dr), ("embed_fsdp", "head_dim"), fan_in=d)
+    b.dense("w_uk", (r, h, dn), ("kv_lora", "heads", "head_dim"), fan_in=r)
+    b.dense("w_uv", (r, h, dv), ("kv_lora", "heads", "head_dim"), fan_in=r)
+    b.dense("wo", (h, dv, d), ("heads", "head_dim", "embed_fsdp"), fan_in=h * dv)
+    return b.build()
+
+
+def mla_forward(cfg, p, x, positions, *, mode: str, cache=None, cache_pos=None,
+                mesh=None, q_block: int = 1024, unroll_blocks: bool = False):
+    dtype = x.dtype
+    dn, dr = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    scale_dim = dn + dr
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dtype))       # (B,S,H,dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    latent = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dtype))  # (B,S,r)
+    k_rope = jnp.einsum("bsd,dk->bsk", x, p["w_krope"].astype(dtype))
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if mode == "full":
+        # materialised form (training / prefill)
+        k_nope = jnp.einsum("bsr,rhk->bshk", latent, p["w_uk"].astype(dtype))
+        v = jnp.einsum("bsr,rhk->bshk", latent, p["w_uv"].astype(dtype))
+        h = cfg.n_heads
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_rope.shape[:2], h, dr))],
+            axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        # pad v to qk dim so attend_full's hd matches? no — attend_full takes hd from q;
+        # v may have different last dim, which attend_full supports via einsum shapes.
+        out = attend_full(q_full, k_full, v, positions, positions,
+                          q_block=q_block, unroll=unroll_blocks, mesh=mesh)
+        new_cache = (latent, k_rope)
+    elif mode == "decode":
+        lat_cache, rope_cache, slot_pos = cache                # (B,S,r),(B,S,dr),(S,)
+        slot = cache_pos % lat_cache.shape[1]
+        lat_cache = jax.lax.dynamic_update_slice_in_dim(lat_cache, latent, slot, axis=1)
+        rope_cache = jax.lax.dynamic_update_slice_in_dim(rope_cache, k_rope, slot, axis=1)
+        slot_pos = jax.lax.dynamic_update_slice_in_dim(
+            slot_pos, positions.reshape(1).astype(slot_pos.dtype), slot, axis=0)
+        lat_cache = with_sharding(lat_cache, ("batch", "cache_seq", None), mesh)
+        rope_cache = with_sharding(rope_cache, ("batch", "cache_seq", None), mesh)
+        # absorbed scores: q_nope W_uk · latent  +  q_rope · k_rope
+        q_lat = jnp.einsum("bshk,rhk->bshr", q_nope, p["w_uk"].astype(dtype))
+        s = (jnp.einsum("bshr,btr->bhst", q_lat, lat_cache)
+             + jnp.einsum("bshk,btk->bhst", q_rope, rope_cache))
+        s = s.astype(jnp.float32) / math.sqrt(scale_dim)
+        pos_now = positions.reshape(())
+        valid = jnp.logical_and(slot_pos >= 0, slot_pos <= pos_now)
+        s = s + jnp.where(valid[None, None, None, :], 0.0, -jnp.inf)
+        pr = jax.nn.softmax(s, axis=-1).astype(dtype)
+        o_lat = jnp.einsum("bhst,btr->bshr", pr, lat_cache)    # (B,1,H,r)
+        out = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"].astype(dtype))
+        new_cache = (lat_cache, rope_cache, slot_pos)
+    else:
+        raise ValueError(mode)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dtype))
+    return out, new_cache

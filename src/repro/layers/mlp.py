@@ -1,0 +1,24 @@
+"""SwiGLU feed-forward (LLaMA convention: w1=gate, w3=up, w2=down)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Builder
+
+
+def init_swiglu(cfg, key, d_ff: int | None = None):
+    b = Builder(key, dtype=jnp.dtype(cfg.dtype))
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    b.dense("w1", (d, f), ("embed_fsdp", "mlp"), fan_in=d)
+    b.dense("w3", (d, f), ("embed_fsdp", "mlp"), fan_in=d)
+    b.dense("w2", (f, d), ("mlp", "embed_fsdp"), fan_in=f)
+    return b.build()
+
+
+def swiglu(p, x):
+    dtype = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p["w1"].astype(dtype))
+    u = jnp.einsum("bsd,df->bsf", x, p["w3"].astype(dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w2"].astype(dtype))

@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN: top-k routing, capacity-bounded local dispatch.
+
+Distribution (DESIGN.md §5): expert weights are laid out (E, D, F) with
+D sharded over "data" (ZeRO-3) and F over "model" (tensor parallel); the
+expert dim is *not* device-sharded (8 experts don't divide a 16-way axis, and
+keeping dispatch local to each data shard avoids the all-to-all entirely —
+tokens never leave their data shard). Inside ``shard_map``:
+
+    all-gather(W, "data")  —  ZeRO-3 weight gather, per layer
+    local top-k dispatch    —  capacity C = ceil(T_loc·k·cf/E), overflow drops
+    expert einsums          —  (E,C,D)x(E,D,F_loc): MXU-dense grouped GEMM
+    psum(out, "model")      —  tensor-parallel reduction (post-combine, so the
+                               reduced tensor is (T_loc, D), not (E,C,D))
+
+The MoE layer is therefore collective-light: one weight all-gather + one
+activation psum per layer; no token all-to-all.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.params import Builder
+
+
+def init_moe(cfg, key):
+    b = Builder(key, dtype=jnp.dtype(cfg.dtype))
+    d, e = cfg.d_model, cfg.n_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    b.dense("wr", (d, e), (None, None), fan_in=d, dtype=jnp.float32)
+    b.dense("w1", (e, d, f), ("experts", "embed_fsdp", "mlp"), fan_in=d)
+    b.dense("w3", (e, d, f), ("experts", "embed_fsdp", "mlp"), fan_in=d)
+    b.dense("w2", (e, f, d), ("experts", "mlp", "embed_fsdp"), fan_in=f)
+    return b.build()
+
+
+def _dispatch_combine(cfg, p, x, *, data_axes: Tuple[str, ...], model_axis,
+                      capacity_factor: float):
+    """Per-shard MoE body. x: (b_loc, s, d) local tokens, full D."""
+    dist = model_axis is not None
+    bsz, s, d = x.shape
+    t = bsz * s
+    e, k = cfg.n_experts, cfg.top_k
+    cap = max(int(math.ceil(t * k * capacity_factor / e)), 1)
+
+    if dist:
+        # ZeRO-3 weight gather: expert weights shard D over "data" only.
+        w1 = jax.lax.all_gather(p["w1"], "data", axis=1, tiled=True)
+        w3 = jax.lax.all_gather(p["w3"], "data", axis=1, tiled=True)
+        w2 = jax.lax.all_gather(p["w2"], "data", axis=2, tiled=True)
+    else:
+        w1, w3, w2 = p["w1"], p["w3"], p["w2"]
+
+    xf = x.reshape(t, d)
+    logits = (xf.astype(jnp.float32) @ p["wr"]).astype(jnp.float32)   # (t, e)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)                               # (t, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # position within each expert's capacity buffer (sort-free cumsum ranking)
+    oh = jax.nn.one_hot(idx, e, dtype=jnp.int32).reshape(t * k, e)
+    pos = jnp.sum((jnp.cumsum(oh, axis=0) - oh) * oh, axis=-1)        # (t*k,)
+    eid = idx.reshape(t * k)
+    keep = pos < cap
+    slot = jnp.where(keep, eid * cap + pos, e * cap)                  # OOB row drops
+
+    xrep = jnp.broadcast_to(xf[:, None, :], (t, k, d)).reshape(t * k, d)
+    buf = jnp.zeros((e * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(jnp.where(keep[:, None], xrep, 0.0), mode="drop")
+    xe = buf[: e * cap].reshape(e, cap, d)
+
+    h = jnp.einsum("ecd,edf->ecf", xe, w1.astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", xe, w3.astype(x.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u, w2.astype(x.dtype))
+
+    yflat = jnp.concatenate([ye.reshape(e * cap, d),
+                             jnp.zeros((1, d), x.dtype)], axis=0)
+    contrib = yflat[slot] * (gate.reshape(t * k, 1) * keep[:, None]).astype(x.dtype)
+    out = contrib.reshape(t, k, d).sum(axis=1)
+    if dist:
+        out = jax.lax.psum(out, model_axis)                           # TP reduce
+
+    # load-balance aux loss (Switch): E * sum_e f_e * P_e
+    frac = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    pmean = jnp.mean(probs, axis=0)
+    if data_axes:
+        frac = jax.lax.pmean(frac, data_axes)
+        pmean = jax.lax.pmean(pmean, data_axes)
+    aux = e * jnp.sum(frac * pmean)
+    return out.reshape(bsz, s, d), aux
+
+
+def moe_ffn(cfg, p, x, mesh=None, *, capacity_factor: float = 1.25):
+    """Returns (out, aux_loss). If ``mesh`` is None, runs unsharded (tests)."""
+    if mesh is None:
+        return _dispatch_combine(cfg, p, x, data_axes=(), model_axis=None,
+                                 capacity_factor=capacity_factor)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    # batch=1 decode cells can't shard tokens over data: replicate instead
+    shard_batch = bool(data_axes) and x.shape[0] % n_data == 0
+    bspec = (data_axes if len(data_axes) > 1 else data_axes[0]) if shard_batch else None
+    body = partial(_dispatch_combine, cfg,
+                   data_axes=data_axes if shard_batch else (),
+                   model_axis="model", capacity_factor=capacity_factor)
+    p_specs = {
+        "wr": P(None, None),
+        "w1": P(None, "data", "model"),
+        "w3": P(None, "data", "model"),
+        "w2": P(None, "model", "data"),
+    }
+    fn = jax.shard_map(
+        lambda pp, xx: body(pp, xx),
+        mesh=mesh,
+        in_specs=(p_specs, P(bspec, None, None)),
+        out_specs=(P(bspec, None, None), P()),
+        check_vma=False,
+    )
+    return fn(p, x)

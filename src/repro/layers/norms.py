@@ -1,0 +1,19 @@
+"""Normalization layers (fp32 statistics, cast back to input dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rms_norm(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    out = (xf - mu) * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)

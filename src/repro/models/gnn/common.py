@@ -1,0 +1,314 @@
+"""GNN execution substrate: flat graphs, a ring-distributed gather engine,
+and the generic train/serve steps shared by all four assigned archs.
+
+Execution layouts (DESIGN.md §5):
+
+  * ``FlatGraph`` — one (possibly huge) graph as flat padded arrays. Single
+    device: plain segment ops. Distributed: nodes block-sharded over the
+    ("pod","data") axes; edges live with their *destination* owner, grouped
+    by source-owner round; per layer, node features rotate around the data
+    ring (``lax.ppermute``) and each shard gathers the sources it needs that
+    round, computes messages, and segment-sums into its local destinations.
+    One feature rotation per round — the classic distributed-GNN halo
+    exchange expressed as a collective-friendly ring (bytes = N·d per layer),
+    with per-destination attention/softmax fully local (all in-edges of an
+    owned node are owned).
+
+  * ``(B, n, ...)`` dense per-sample trees/molecules — vmapped message
+    passing, pure data parallelism (minibatch_lg, molecule shapes).
+
+Geometric archs on non-geometric graphs (Cora/ogbn-products have no 3D
+coordinates) get synthetic unit-sphere positions — the assignment pairs
+molecular archs with citation graphs; the arch must still run (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sparse import segment as seg
+
+
+class FlatGraph(NamedTuple):
+    """Single-device flat layout. All arrays fixed-shape, -1/-False padded."""
+    feats: jax.Array        # (N, F)
+    positions: jax.Array    # (N, 3)
+    edge_src: jax.Array     # (E,) int32
+    edge_dst: jax.Array     # (E,) int32
+    edge_mask: jax.Array    # (E,) bool
+    node_mask: jax.Array    # (N,) bool
+    labels: jax.Array       # (N,) int32
+
+    @property
+    def n_nodes(self) -> int:
+        return self.feats.shape[0]
+
+
+class RingGraph(NamedTuple):
+    """Distributed flat layout (global arrays; leading dims shard over data).
+
+    Node arrays: (N, ...) block-sharded (owner = id // n_loc).
+    Edge arrays: (S, n_rounds, E_cap, ...) — shard s's edges grouped by
+    source-owner round r (src owner = (s - r) mod S); dst indices are local.
+    """
+    feats: jax.Array        # (N, F)
+    positions: jax.Array    # (N, 3)
+    esrc_local: jax.Array   # (S, R, E_cap) int32 — row in the rotating buffer
+    edst_local: jax.Array   # (S, R, E_cap) int32 — local destination row
+    edge_mask: jax.Array    # (S, R, E_cap) bool
+    node_mask: jax.Array    # (N,) bool
+    labels: jax.Array       # (N,) int32
+
+
+# ---------------------------------------------------------------------------
+# host-side conversion
+# ---------------------------------------------------------------------------
+
+def to_ring(g: "FlatGraph | dict", n_shards: int,
+            e_cap: Optional[int] = None) -> RingGraph:
+    """Host-side regrouping of a FlatGraph into the ring layout."""
+    feats = np.asarray(g.feats)
+    n = feats.shape[0]
+    assert n % n_shards == 0, (n, n_shards)
+    n_loc = n // n_shards
+    src = np.asarray(g.edge_src)
+    dst = np.asarray(g.edge_dst)
+    mask = np.asarray(g.edge_mask)
+    src, dst = src[mask], dst[mask]
+    s_own = src // n_loc
+    d_own = dst // n_loc
+    rounds = (d_own - s_own) % n_shards
+    if e_cap is None:
+        e_cap = 1
+        for s in range(n_shards):
+            for r in range(n_shards):
+                e_cap = max(e_cap, int(np.sum((d_own == s) & (rounds == r))))
+    esrc = np.zeros((n_shards, n_shards, e_cap), np.int32)
+    edst = np.zeros((n_shards, n_shards, e_cap), np.int32)
+    em = np.zeros((n_shards, n_shards, e_cap), bool)
+    for s in range(n_shards):
+        for r in range(n_shards):
+            sel = (d_own == s) & (rounds == r)
+            k = int(np.sum(sel))
+            k = min(k, e_cap)
+            idx = np.where(sel)[0][:k]
+            esrc[s, r, :k] = src[idx] % n_loc
+            edst[s, r, :k] = dst[idx] % n_loc
+            em[s, r, :k] = True
+    return RingGraph(
+        feats=jnp.asarray(feats), positions=jnp.asarray(g.positions),
+        esrc_local=jnp.asarray(esrc), edst_local=jnp.asarray(edst),
+        edge_mask=jnp.asarray(em), node_mask=jnp.asarray(g.node_mask),
+        labels=jnp.asarray(g.labels))
+
+
+# ---------------------------------------------------------------------------
+# execution engines — models code against this interface
+# ---------------------------------------------------------------------------
+
+class LocalExec:
+    """Single-device engine over a FlatGraph."""
+
+    def __init__(self, g: FlatGraph):
+        self.g = g
+        self.n = g.n_nodes
+
+    def edge_geometry(self):
+        rel = self.g.positions[self.g.edge_src] - self.g.positions[self.g.edge_dst]
+        dist = jnp.linalg.norm(rel, axis=-1)
+        return rel, jnp.where(self.g.edge_mask, dist, 0.0)
+
+    def push(self, node_payload, msg_fn, d_out: int):
+        """agg[dst] = Σ_edges msg_fn(payload[src], payload[dst]).
+
+        msg_fn: (src_rows (E, Dp), dst_rows (E, Dp)) -> (E, d_out); payload
+        carries whatever the model needs (features ++ positions ++ …).
+        """
+        srcs = node_payload[self.g.edge_src]
+        dsts = node_payload[self.g.edge_dst]
+        msgs = msg_fn(srcs, dsts)
+        msgs = jnp.where(self.g.edge_mask[:, None], msgs, 0.0)
+        return seg.segment_sum(msgs, self.g.edge_dst, self.n)
+
+    def gather_src(self, node_payload):
+        """Per-edge source rows (E, Dp) — remote fetch on the ring engine."""
+        srcs = node_payload[self.g.edge_src]
+        return jnp.where(self.g.edge_mask[:, None], srcs, 0.0)
+
+    def dst_index(self):
+        """Flat local destination index + mask (edge order matches gather_src)."""
+        return self.g.edge_dst, self.g.edge_mask
+
+    def push_attn(self, node_payload, logit_fn, msg_fn, d_out: int):
+        """Softmax-normalised (per destination) attention aggregation."""
+        srcs = node_payload[self.g.edge_src]
+        dsts = node_payload[self.g.edge_dst]
+        logits = logit_fn(srcs, dsts)                           # (E, H)
+        logits = jnp.where(self.g.edge_mask[:, None], logits, -jnp.inf)
+        w = seg.segment_softmax(logits, self.g.edge_dst, self.n)  # (E, H)
+        msgs = msg_fn(srcs, dsts)                               # (E, H, dh)
+        msgs = msgs * w[..., None]
+        msgs = jnp.where(self.g.edge_mask[:, None, None], msgs, 0.0)
+        return seg.segment_sum(msgs.reshape(msgs.shape[0], -1),
+                               self.g.edge_dst, self.n)
+
+
+class RingExec:
+    """Per-shard engine inside shard_map (see module docstring).
+
+    Local views: feats (n_loc, F), edge arrays (R, E_cap_loc, ...) — each
+    round's edges are additionally split across the "model" axis (16× edge
+    parallelism; features replicated over "model"). The payload rotates ``R``
+    times over the data ring; per-destination reductions psum over "model".
+    """
+
+    def __init__(self, esrc, edst, emask, n_loc: int, data_axes: Tuple[str, ...],
+                 model_axis: Optional[str] = None, ring_size: Optional[int] = None):
+        self.esrc = esrc          # (R, E_cap_loc)
+        self.edst = edst
+        self.emask = emask
+        self.n = n_loc
+        self.axes = data_axes
+        self.model_axis = model_axis
+        self.rounds = ring_size or esrc.shape[0]
+
+    def _mreduce(self, x, op="sum"):
+        if self.model_axis is None:
+            return x
+        if op == "sum":
+            return jax.lax.psum(x, self.model_axis)
+        # max via all_gather (pmax has no differentiation rule; the gathered
+        # tensor here is the small per-destination logit-max, not features)
+        g = jax.lax.all_gather(x, self.model_axis, axis=0)
+        return jnp.max(g, axis=0)
+
+    def _rotate(self, x):
+        # ring over the flattened data axes: shift by one
+        return jax.lax.ppermute(
+            x, self.axes,
+            [(i, (i + 1) % self.rounds) for i in range(self.rounds)])
+
+    def push(self, node_payload, msg_fn, d_out: int):
+        def body(carry, xs):
+            buf, acc = carry
+            esrc, edst, emask = xs
+            msgs = msg_fn(buf[esrc], node_payload[edst])
+            msgs = jnp.where(emask[:, None], msgs, 0.0)
+            acc = acc + seg.segment_sum(msgs, edst, self.n)
+            return (self._rotate(buf), acc), None
+
+        acc0 = jnp.zeros((self.n, d_out), node_payload.dtype)
+        (_, acc), _ = jax.lax.scan(body, (node_payload, acc0),
+                                   (self.esrc, self.edst, self.emask))
+        return self._mreduce(acc)
+
+    def gather_src(self, node_payload):
+        """Per-edge source rows: rotate the payload, take per round.
+
+        Returns (R·E_cap, Dp) in (round-major) edge order — matching
+        ``dst_index()``."""
+        def body(buf, xs):
+            esrc, emask = xs
+            take = jnp.where(emask[:, None], buf[esrc], 0.0)
+            return self._rotate(buf), take
+
+        _, out = jax.lax.scan(body, node_payload, (self.esrc, self.emask))
+        return out.reshape(-1, node_payload.shape[-1])
+
+    def dst_index(self):
+        return self.edst.reshape(-1), self.emask.reshape(-1)
+
+    def push_attn(self, node_payload, logit_fn, msg_fn, d_out: int):
+        # pass 1: logits per edge (small), rotating payload
+        def pass1(buf, xs):
+            esrc, edst, emask = xs
+            logits = logit_fn(buf[esrc], node_payload[edst])
+            logits = jnp.where(emask[:, None], logits, -jnp.inf)
+            return self._rotate(buf), logits
+
+        _, logits = jax.lax.scan(pass1, node_payload,
+                                 (self.esrc, self.edst, self.emask))
+        h = logits.shape[-1]
+        flat_dst = self.edst.reshape(-1)
+        # per-destination softmax across the data-local edges AND the model
+        # split (all in-edges of an owned node are data-local by layout).
+        # stop_gradient: the max shift is numerics-only (pmax has no VJP)
+        m = seg.segment_max(logits.reshape(-1, h), flat_dst, self.n)
+        m = jax.lax.stop_gradient(
+            self._mreduce(jnp.where(jnp.isfinite(m), m, -3e38), "max"))
+        shifted = logits.reshape(-1, h) - m[jnp.clip(flat_dst, 0, self.n - 1)]
+        e = jnp.where(jnp.isfinite(shifted), jnp.exp(shifted), 0.0)
+        z = self._mreduce(seg.segment_sum(e, flat_dst, self.n))
+        w = e / jnp.maximum(z[jnp.clip(flat_dst, 0, self.n - 1)], 1e-20)
+        w = w.reshape(logits.shape)
+
+        # pass 2: weighted messages, rotating payload again (flash-style
+        # recompute keeps the gathered features out of memory)
+        def pass2(carry, xs):
+            buf, acc = carry
+            esrc, edst, emask, wr = xs
+            msgs = msg_fn(buf[esrc], node_payload[edst])         # (E, H, dh)
+            msgs = msgs * wr[..., None]
+            msgs = jnp.where(emask[:, None, None], msgs, 0.0)
+            acc = acc + seg.segment_sum(msgs.reshape(msgs.shape[0], -1), edst, self.n)
+            return (self._rotate(buf), acc), None
+
+        acc0 = jnp.zeros((self.n, d_out), node_payload.dtype)
+        (_, acc), _ = jax.lax.scan(pass2, (node_payload, acc0),
+                                   (self.esrc, self.edst, self.emask, w))
+        return self._mreduce(acc)
+
+
+def run_flat(apply_local, g: "FlatGraph | RingGraph", params, mesh=None):
+    """Dispatch: single-device LocalExec, or shard_map ring over the mesh.
+
+    apply_local(params, feats, positions, node_mask, labels, exec) -> loss-like
+    pytree of per-shard results (psum-reduced over data axes by caller).
+    """
+    if mesh is None:
+        ex = LocalExec(g)
+        return apply_local(params, g.feats, g.positions, g.node_mask, g.labels, ex)
+
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+    msize = mesh.shape.get("model", 1)
+    nspec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+    # split each round's edges across the "model" axis
+    s, r, e_cap = g.esrc_local.shape
+    assert s == n_shards, (
+        f"RingGraph built for {s} shards but mesh has {n_shards} data shards")
+    pad = (-e_cap) % msize
+    def esplit(a, fill):
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)), constant_values=fill)
+        return a.reshape(s, r, msize, (e_cap + pad) // msize)
+    esrc = esplit(g.esrc_local, 0)
+    edst = esplit(g.edst_local, 0)
+    emask = esplit(g.edge_mask, False)
+    espec = P(nspec[0], None, "model", None)
+
+    def shard_fn(params, feats, pos, esrc, edst, emask, nmask, labels):
+        ex = RingExec(esrc[0, :, 0], edst[0, :, 0], emask[0, :, 0],
+                      feats.shape[0], data_axes,
+                      model_axis="model" if msize > 1 else None,
+                      ring_size=n_shards)
+        out = apply_local(params, feats, pos, nmask, labels, ex)
+        # convention: apply_local returns per-shard SUMS -> global psum
+        return jax.tree.map(lambda t: jax.lax.psum(t, data_axes), out)
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), nspec, nspec, espec, espec, espec, nspec, nspec),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(params, g.feats, g.positions, esrc, edst, emask,
+              g.node_mask, g.labels)

@@ -1,0 +1,298 @@
+"""DimeNet — directional message passing with triplet angular bases
+(Klicpera et al., arXiv:2003.03123).
+
+Messages live on *edges*; an interaction block aggregates over triplets
+(k→j→i): incoming messages m_kj are modulated by a joint spherical-Bessel ×
+Legendre basis of (d_kj, angle_kji) through a bilinear layer — the
+triplet-gather kernel regime (not expressible as SpMM).
+
+Triplet lists are host-precomputed and capacity-bounded
+(``max_triplets_per_edge``) so device shapes stay fixed; on the ring path the
+line graph (edges-as-entities) reuses the same RingExec engine.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.params import Builder
+from repro.equivariant.bessel import (angular_basis, radial_bessel_basis,
+                                      spherical_bessel_basis)
+from repro.sparse import segment as seg
+
+
+class TripletIndex(NamedTuple):
+    t_src: jax.Array    # (T,) int32 — index of edge kj
+    t_dst: jax.Array    # (T,) int32 — index of edge ji
+    t_mask: jax.Array   # (T,) bool
+
+
+def build_triplets(edge_src: np.ndarray, edge_dst: np.ndarray,
+                   edge_mask: np.ndarray, cap_per_edge: int = 8) -> TripletIndex:
+    """Host-side: for each edge ji, up to ``cap_per_edge`` incoming edges kj
+    (k≠i) at node j."""
+    e = len(edge_src)
+    in_edges: dict[int, list[int]] = {}
+    for idx in range(e):
+        if edge_mask[idx]:
+            in_edges.setdefault(int(edge_dst[idx]), []).append(idx)
+    t_src, t_dst = [], []
+    for ji in range(e):
+        if not edge_mask[ji]:
+            continue
+        j, i = int(edge_src[ji]), int(edge_dst[ji])
+        cnt = 0
+        for kj in in_edges.get(j, ()):
+            if cnt >= cap_per_edge:
+                break
+            if int(edge_src[kj]) == i:       # exclude backtracking k == i
+                continue
+            t_src.append(kj)
+            t_dst.append(ji)
+            cnt += 1
+    t = max(len(t_src), 1)
+    pad = (-t) % 8 or 0
+    ts = np.zeros(t + pad, np.int32)
+    td = np.zeros(t + pad, np.int32)
+    tm = np.zeros(t + pad, bool)
+    ts[: len(t_src)] = t_src
+    td[: len(t_dst)] = t_dst
+    tm[: len(t_src)] = True
+    return TripletIndex(jnp.asarray(ts), jnp.asarray(td), jnp.asarray(tm))
+
+
+def build_triplet_ring(g, n_shards: int, cap_per_edge: int = 8,
+                       t_cap: Optional[int] = None):
+    """Host prep for the distributed line-graph ring.
+
+    Edges are laid out per-shard as flat (R·E_cap) slots (the node-ring
+    order); triplets (kj -> ji) group by source-edge-owner round. Returns
+    (t_src, t_dst, t_mask) shaped (S, S, T_cap) with *local* edge slots.
+    """
+    import numpy as _np
+    from repro.models.gnn.common import to_ring
+    ring = to_ring(g, n_shards)
+    s_, r_, e_cap = ring.esrc_local.shape
+    n = int(_np.asarray(g.feats).shape[0])
+    n_loc = n // n_shards
+
+    # reconstruct each edge's (shard, slot) and global (src, dst)
+    esrc = _np.asarray(ring.esrc_local)
+    edst = _np.asarray(ring.edst_local)
+    emask = _np.asarray(ring.edge_mask)
+    instances = []    # (gsrc, gdst, shard, slot) per edge instance
+    by_dst_node = {}  # global dst node -> [(shard, slot, global_src)]
+    for s in range(s_):
+        for r in range(r_):
+            src_owner = (s - r) % n_shards
+            for k in range(e_cap):
+                if not emask[s, r, k]:
+                    continue
+                gsrc = src_owner * n_loc + esrc[s, r, k]
+                gdst = s * n_loc + edst[s, r, k]
+                slot = r * e_cap + k
+                by_dst_node.setdefault(gdst, []).append((s, slot, gsrc))
+                instances.append((gsrc, gdst, s, slot))
+
+    tri = [[[] for _ in range(n_shards)] for _ in range(n_shards)]  # [dst_shard][round]
+    for (j, i, s_ji, slot_ji) in instances:
+        cnt = 0
+        for (s_kj, slot_kj, k) in by_dst_node.get(j, ()):
+            if k == i or cnt >= cap_per_edge:
+                continue
+            rnd = (s_ji - s_kj) % n_shards
+            tri[s_ji][rnd].append((slot_kj, slot_ji))
+            cnt += 1
+    cap = t_cap or max(1, max(len(tri[s][r]) for s in range(n_shards)
+                              for r in range(n_shards)))
+    ts = _np.zeros((n_shards, n_shards, cap), _np.int32)
+    td = _np.zeros((n_shards, n_shards, cap), _np.int32)
+    tm = _np.zeros((n_shards, n_shards, cap), bool)
+    for s in range(n_shards):
+        for r in range(n_shards):
+            for k, (a, b) in enumerate(tri[s][r][:cap]):
+                ts[s, r, k] = a
+                td[s, r, k] = b
+                tm[s, r, k] = True
+    return ring, jnp.asarray(ts), jnp.asarray(td), jnp.asarray(tm)
+
+
+def ring_loss(cfg, params, ring, t_src, t_dst, t_mask, mesh, ce_sums_fn):
+    """Distributed full-graph loss for DimeNet (see node_logits_ring)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.models.gnn.common import RingExec
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_shards = 1
+    for a in data_axes:
+        n_shards *= mesh.shape[a]
+    msize = mesh.shape.get("model", 1)
+    nspec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+    # model-split the triplet work
+    s_, r_, t_cap = t_src.shape
+    pad = (-t_cap) % msize
+    def tsplit(a, fill):
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, 0), (0, pad)), constant_values=fill)
+        return a.reshape(s_, r_, msize, (t_cap + pad) // msize)
+    tspec = P(nspec[0], None, "model", None)
+
+    def shard_fn(params, feats, pos, esrc, edst, emask, nmask, labels,
+                 tsrc, tdst, tmask):
+        n_loc = feats.shape[0]
+        e_loc = esrc.shape[1] * esrc.shape[2]
+        ex_nodes = RingExec(esrc[0], edst[0], emask[0], n_loc, data_axes,
+                            model_axis=None, ring_size=n_shards)
+        ex_tri = RingExec(tsrc[0, :, 0], tdst[0, :, 0], tmask[0, :, 0], e_loc,
+                          data_axes, model_axis="model" if msize > 1 else None,
+                          ring_size=n_shards)
+        logits = node_logits_ring(cfg, params, feats, pos, nmask,
+                                  ex_nodes, ex_tri)
+        out = ce_sums_fn(logits, labels, nmask)
+        return jax.tree.map(lambda t: jax.lax.psum(t, data_axes), out)
+
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), nspec, nspec, nspec, nspec, nspec, nspec, nspec,
+                  tspec, tspec, tspec),
+        out_specs=P(),
+        check_vma=False,
+    )
+    return fn(params, ring.feats, ring.positions, ring.esrc_local,
+              ring.edst_local, ring.edge_mask, ring.node_mask, ring.labels,
+              tsplit(t_src, 0), tsplit(t_dst, 0), tsplit(t_mask, False))
+
+
+def _mlp(b: Builder, name: str, dims):
+    sub = b.sub()
+    for i, (di, do) in enumerate(zip(dims[:-1], dims[1:])):
+        sub.dense(f"w{i}", (di, do), (None, "hidden"), fan_in=di)
+        sub.zeros(f"b{i}", (do,), (None,))
+    b.child(name, sub)
+
+
+def _apply_mlp(p, x, n, act=jax.nn.silu, final_act=True):
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def init(cfg, key, d_feat_in: int, n_out: int):
+    d = cfg.d_hidden
+    nr, ns, nb = cfg.n_radial, cfg.n_spherical, cfg.n_bilinear
+    b = Builder(key, dtype=jnp.float32)
+    b.dense("enc", (d_feat_in, d), (None, "hidden"), fan_in=d_feat_in)
+    b.dense("rbf_lin", (nr, d), (None, "hidden"), fan_in=nr)
+    _mlp(b, "edge_embed", (3 * d, d, d))
+    blocks = []
+    for _ in range(cfg.n_layers):
+        lb = b.sub()
+        lb.dense("w_msg", (d, d), (None, "hidden"), fan_in=d)
+        lb.dense("w_sbf", (ns * nr, nb), (None, None), fan_in=ns * nr)
+        lb.dense("w_bilinear", (d, nb, d), (None, None, "hidden"), fan_in=d * nb)
+        _mlp(lb, "update", (d, d, d))
+        _mlp(lb, "out_node", (d, d, d))
+        blocks.append(lb.build())
+    b.params["blocks"] = [p for p, _ in blocks]
+    b.axes["blocks"] = [a for _, a in blocks]
+    b.dense("head", (d, n_out), (None, None), fan_in=d)
+    return b.build()
+
+
+def node_logits(cfg, params, feats, positions, node_mask, ex,
+                triplets: Optional[TripletIndex] = None):
+    """Single-graph path (LocalExec). Edge messages + triplet interactions."""
+    g = ex.g
+    d = cfg.d_hidden
+    h = feats @ params["enc"]                                   # (N, d)
+    rel, dist = ex.edge_geometry()
+    rbf = radial_bessel_basis(dist, cfg.n_radial, cfg.cutoff)   # (E, nr)
+    rbf_d = rbf @ params["rbf_lin"]                             # (E, d)
+    m = _apply_mlp(params["edge_embed"],
+                   jnp.concatenate([h[g.edge_src], h[g.edge_dst], rbf_d], -1), 2)
+    m = m * g.edge_mask[:, None]                                # (E, d)
+
+    if triplets is not None:
+        # joint (distance × angle) basis per triplet
+        ts, td, tm = triplets
+        v_kj = rel[ts]                                          # k -> j
+        v_ji = rel[td]                                          # j -> i
+        cos_a = jnp.sum(-v_kj * v_ji, axis=-1) / jnp.maximum(
+            jnp.linalg.norm(v_kj, axis=-1) * jnp.linalg.norm(v_ji, axis=-1), 1e-9)
+        angle = jnp.arccos(jnp.clip(cos_a, -1 + 1e-7, 1 - 1e-7))
+        sbf_r = spherical_bessel_basis(dist[ts], cfg.n_spherical, cfg.n_radial,
+                                       cfg.cutoff)              # (T, ns, nr)
+        cbf = angular_basis(angle, cfg.n_spherical)             # (T, ns)
+        sbf = (sbf_r * cbf[..., None]).reshape(ts.shape[0], -1)  # (T, ns*nr)
+
+    for bp in params["blocks"]:
+        if triplets is not None:
+            ts, td, tm = triplets
+            mk = m[ts] @ bp["w_msg"]                            # (T, d)
+            basis = sbf @ bp["w_sbf"]                           # (T, nb)
+            contrib = jnp.einsum("td,dbf,tb->tf", mk, bp["w_bilinear"], basis)
+            contrib = jnp.where(tm[:, None], contrib, 0.0)
+            t_agg = seg.segment_sum(contrib, td, m.shape[0])    # (E, d)
+            m = m + _apply_mlp(bp["update"], t_agg, 2)
+        # edge -> node
+        node_in = seg.segment_sum(m * g.edge_mask[:, None], g.edge_dst,
+                                  h.shape[0])
+        h = h + _apply_mlp(bp["out_node"], node_in, 2)
+        h = h * node_mask[:, None]
+    return h @ params["head"]
+
+
+# ---------------------------------------------------------------------------
+# distributed (ring) path: node ring for edge endpoints + line-graph ring for
+# triplets (edges are entities; triplet lists grouped by source-edge-owner
+# rounds). Edges live with their destination-node owner, so edge->node
+# aggregation is local. See DESIGN.md §5.
+# ---------------------------------------------------------------------------
+
+def node_logits_ring(cfg, params, feats, positions, node_mask, ex_nodes,
+                     ex_tri):
+    d = cfg.d_hidden
+    n = feats.shape[0]
+    h = feats @ params["enc"]
+
+    pos_src = ex_nodes.gather_src(positions)                   # (E_loc, 3)
+    edst, emask = ex_nodes.dst_index()
+    pos_dst = positions[edst]
+    rel = pos_src - pos_dst
+    dist = jnp.where(emask, jnp.linalg.norm(rel, axis=-1), 0.0)
+    rbf_d = radial_bessel_basis(dist, cfg.n_radial, cfg.cutoff) @ params["rbf_lin"]
+    h_src = ex_nodes.gather_src(h)
+    m = _apply_mlp(params["edge_embed"],
+                   jnp.concatenate([h_src, h[edst], rbf_d], -1), 2)
+    m = m * emask[:, None]                                     # (E_loc, d)
+
+    for bp in params["blocks"]:
+        payload = jnp.concatenate([m, rel, dist[:, None]], axis=-1)
+
+        def t_msg(srcs, dsts, bp=bp):
+            m_kj = srcs[:, :d]
+            rel_kj = srcs[:, d:d + 3]
+            dist_kj = srcs[:, d + 3]
+            rel_ji = dsts[:, d:d + 3]
+            cos_a = jnp.sum(-rel_kj * rel_ji, axis=-1) / jnp.maximum(
+                jnp.linalg.norm(rel_kj, axis=-1)
+                * jnp.linalg.norm(rel_ji, axis=-1), 1e-9)
+            angle = jnp.arccos(jnp.clip(cos_a, -1 + 1e-7, 1 - 1e-7))
+            sbf_r = spherical_bessel_basis(dist_kj, cfg.n_spherical,
+                                           cfg.n_radial, cfg.cutoff)
+            cbf = angular_basis(angle, cfg.n_spherical)
+            sbf = (sbf_r * cbf[..., None]).reshape(srcs.shape[0], -1)
+            mk = m_kj @ bp["w_msg"]
+            basis = sbf @ bp["w_sbf"]
+            return jnp.einsum("td,dbf,tb->tf", mk, bp["w_bilinear"], basis)
+
+        t_agg = ex_tri.push(payload, t_msg, d)                 # (E_loc, d)
+        m = m + _apply_mlp(bp["update"], t_agg, 2) * emask[:, None]
+        node_in = seg.segment_sum(m * emask[:, None], edst, n)
+        h = h + _apply_mlp(bp["out_node"], node_in, 2)
+        h = h * node_mask[:, None]
+    return h @ params["head"]

@@ -1,0 +1,150 @@
+"""GNN driver: synthetic graph builders per shape kind, model dispatch,
+loss/train steps for the three execution layouts (full_graph / minibatch /
+molecule)."""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.params import Builder
+from repro.models.gnn import dimenet as dimenet_mod
+from repro.models.gnn import egnn as egnn_mod
+from repro.models.gnn import equiformer_v2 as eqv2_mod
+from repro.models.gnn import nequip as nequip_mod
+from repro.models.gnn.common import FlatGraph, LocalExec, RingGraph, run_flat, to_ring
+from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+
+N_CLASSES = 16
+
+
+def make_flat_graph(n_nodes: int, n_edges: int, d_feat: int, seed: int = 0,
+                    n_classes: int = N_CLASSES) -> FlatGraph:
+    """Synthetic flat graph; unit-sphere positions (geometric archs on
+    non-geometric graphs — DESIGN.md §4)."""
+    rng = np.random.default_rng(seed)
+    feats = rng.normal(size=(n_nodes, d_feat)).astype(np.float32)
+    pos = rng.normal(size=(n_nodes, 3)).astype(np.float32)
+    pos /= np.linalg.norm(pos, axis=1, keepdims=True) + 1e-9
+    src = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = rng.integers(0, n_nodes, n_edges).astype(np.int32)
+    dst = np.where(dst == src, (dst + 1) % n_nodes, dst)   # no self-loops
+    labels = rng.integers(0, n_classes, n_nodes).astype(np.int32)
+    return FlatGraph(
+        feats=jnp.asarray(feats), positions=jnp.asarray(pos),
+        edge_src=jnp.asarray(src), edge_dst=jnp.asarray(dst),
+        edge_mask=jnp.ones((n_edges,), bool),
+        node_mask=jnp.ones((n_nodes,), bool),
+        labels=jnp.asarray(labels))
+
+
+def make_molecule_batch(batch: int, n_nodes: int, n_edges: int, seed: int = 0):
+    """Batched small graphs as a leading-B FlatGraph + regression targets."""
+    rng = np.random.default_rng(seed)
+    gs = [make_flat_graph(n_nodes, n_edges, 4, seed=seed + i) for i in range(batch)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *gs)
+    energy = jnp.asarray(rng.normal(size=(batch,)).astype(np.float32))
+    return stacked, energy
+
+
+_MODELS = {
+    "egnn": egnn_mod,
+    "dimenet": dimenet_mod,
+    "nequip": nequip_mod,
+    "equiformer_v2": eqv2_mod,
+}
+
+
+def init_model(cfg, key, d_feat_in: int, n_out: int = N_CLASSES):
+    return _MODELS[cfg.model].init(cfg, key, d_feat_in, n_out)
+
+
+def node_logits_local(cfg, params, g: FlatGraph, triplets=None):
+    ex = LocalExec(g)
+    mod = _MODELS[cfg.model]
+    if cfg.model == "dimenet":
+        return mod.node_logits(cfg, params, g.feats, g.positions, g.node_mask,
+                               ex, triplets=triplets)
+    return mod.node_logits(cfg, params, g.feats, g.positions, g.node_mask, ex)
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def _ce_sums(logits, labels, mask):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(lp, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    ok = mask.astype(jnp.float32)
+    correct = (jnp.argmax(logits, -1) == labels).astype(jnp.float32) * ok
+    return {"loss_sum": -jnp.sum(ll * ok), "correct": jnp.sum(correct),
+            "count": jnp.sum(ok)}
+
+
+def full_graph_loss(cfg, params, g, mesh=None, triplets=None):
+    """CE over labelled nodes. g: FlatGraph (local) or RingGraph (mesh)."""
+    if mesh is None:
+        logits = node_logits_local(cfg, params, g, triplets)
+        return _ce_sums(logits, g.labels, g.node_mask)
+
+    mod = _MODELS[cfg.model]
+
+    def apply_local(params, feats, pos, nmask, labels, ex):
+        logits = mod.node_logits(cfg, params, feats, pos, nmask, ex)
+        return _ce_sums(logits, labels, nmask)
+
+    return run_flat(apply_local, g, params, mesh)
+
+
+def molecule_loss(cfg, params, batched_g: FlatGraph, energy, triplets=None):
+    """MSE on per-graph energies (masked scalar sum-pool)."""
+    def one(g, t):
+        logits = node_logits_local(cfg, params, g, t)
+        return jnp.sum(logits[:, 0] * g.node_mask)
+
+    pred = (jax.vmap(one)(batched_g, triplets) if triplets is not None
+            else jax.vmap(lambda g: one(g, None))(batched_g))
+    return {"loss_sum": jnp.sum((pred - energy) ** 2),
+            "count": jnp.asarray(float(energy.shape[0]))}
+
+
+def minibatch_loss(cfg, params, batched_g: FlatGraph, root_labels):
+    """CE on each sampled tree's root node (local index 0)."""
+    def one(g):
+        return node_logits_local(cfg, params, g, None)[0]
+
+    logits = jax.vmap(one)(batched_g)                       # (B, n_classes)
+    return _ce_sums(logits, root_labels, jnp.ones_like(root_labels, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# train steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, kind: str, mesh=None,
+                    opt_cfg: AdamWConfig = AdamWConfig(lr=1e-3)):
+    def loss_fn(params, batch):
+        if kind == "full_graph":
+            sums = full_graph_loss(cfg, params, batch["graph"], mesh,
+                                   batch.get("triplets"))
+        elif kind == "molecule":
+            sums = molecule_loss(cfg, params, batch["graph"], batch["energy"],
+                                 batch.get("triplets"))
+        elif kind == "minibatch":
+            sums = minibatch_loss(cfg, params, batch["graph"], batch["labels"])
+        else:
+            raise ValueError(kind)
+        loss = sums["loss_sum"] / jnp.maximum(sums["count"], 1.0)
+        return loss, sums
+
+    def step(params, opt_state, batch):
+        (loss, sums), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, **{k: v for k, v in sums.items()}, **om}
+        return params, opt_state, metrics
+
+    return step

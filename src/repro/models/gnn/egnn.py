@@ -1,0 +1,81 @@
+"""EGNN — E(n)-equivariant GNN (Satorras et al., arXiv:2102.09844).
+
+    m_ij   = φ_e(h_i, h_j, ‖x_i − x_j‖²)
+    x_i'   = x_i + C·Σ_j (x_i − x_j)·φ_x(m_ij)
+    h_i'   = φ_h(h_i, Σ_j m_ij)
+
+Invariance comes only from scalar distances — the cheap-equivariant regime
+of the kernel taxonomy (no spherical harmonics).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Builder
+
+
+def _mlp(b: Builder, name: str, dims, axes_last="hidden"):
+    sub = b.sub()
+    for i, (di, do) in enumerate(zip(dims[:-1], dims[1:])):
+        sub.dense(f"w{i}", (di, do), (None, axes_last if i < len(dims) - 2 else None),
+                  fan_in=di)
+        sub.zeros(f"b{i}", (do,), (None,))
+    b.child(name, sub)
+    return len(dims) - 1
+
+
+def _apply_mlp(p, x, n_layers: int, act=jax.nn.silu, final_act=False):
+    for i in range(n_layers):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n_layers - 1 or final_act:
+            x = act(x)
+    return x
+
+
+def init(cfg, key, d_feat_in: int, n_out: int):
+    d = cfg.d_hidden
+    b = Builder(key, dtype=jnp.float32)
+    b.dense("enc", (d_feat_in, d), (None, "hidden"), fan_in=d_feat_in)
+    layers = []
+    for _ in range(cfg.n_layers):
+        lb = b.sub()
+        _mlp(lb, "phi_e", (2 * d + 1, d, d))
+        _mlp(lb, "phi_x", (d, d, 1))
+        _mlp(lb, "phi_h", (2 * d, d, d))
+        layers.append(lb.build())
+    b.params["layers"] = [p for p, _ in layers]
+    b.axes["layers"] = [a for _, a in layers]
+    b.dense("head", (d, n_out), (None, None), fan_in=d)
+    return b.build()
+
+
+def apply(cfg, params, feats, positions, node_mask, ex):
+    """Returns (node_embeddings (N, d), new_positions)."""
+    d = cfg.d_hidden
+    h = feats @ params["enc"]
+    x = positions
+    for lp in params["layers"]:
+        payload = jnp.concatenate([h, x], axis=-1)          # (N, d+3)
+
+        def msg_fn(srcs, dsts, lp=lp):
+            hs, xs = srcs[:, :d], srcs[:, d:]
+            hd, xd = dsts[:, :d], dsts[:, d:]
+            rel = xd - xs                                   # x_i - x_j (i = dst)
+            r2 = jnp.sum(rel * rel, axis=-1, keepdims=True)
+            m = _apply_mlp(lp["phi_e"], jnp.concatenate([hd, hs, r2], -1), 2,
+                           final_act=True)                  # (E, d)
+            cw = jnp.tanh(_apply_mlp(lp["phi_x"], m, 2))    # (E, 1) bounded
+            return jnp.concatenate([m, rel * cw, jnp.ones_like(cw)], axis=-1)
+
+        agg = ex.push(payload, msg_fn, d + 3 + 1)
+        m_sum, x_upd, cnt = agg[:, :d], agg[:, d:d + 3], agg[:, d + 3:]
+        h = h + _apply_mlp(lp["phi_h"], jnp.concatenate([h, m_sum], -1), 2)
+        x = x + x_upd / jnp.maximum(cnt, 1.0)
+        h = h * node_mask[:, None]
+    return h, x
+
+
+def node_logits(cfg, params, feats, positions, node_mask, ex):
+    h, _ = apply(cfg, params, feats, positions, node_mask, ex)
+    return h @ params["head"]

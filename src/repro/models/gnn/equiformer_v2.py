@@ -1,0 +1,170 @@
+"""EquiformerV2 — SO(2)-eSCN equivariant graph attention (Liao et al.,
+arXiv:2306.12059).
+
+The eSCN trick: rotate each edge's source features into the edge-aligned
+frame (Wigner-D from the Ivanic–Ruedenberg recurrence), where an SO(3)
+tensor-product convolution reduces to independent SO(2) mixes per azimuthal
+order m — O(L³) instead of O(L⁶) — truncated at ``m_max``. Attention weights
+come from the invariant (l=0) channel; messages are rotated back and
+softmax-aggregated per destination.
+
+Feature layout: (N, (l_max+1)², C).
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.params import Builder
+from repro.equivariant.spherical import (real_sph_harm, rotation_to_align_z,
+                                         sh_dim, wigner_d_from_rotation)
+
+
+def _m_orders(l_max: int, m_max: int):
+    """(l, m) component bookkeeping for the SO(2) mix: for each m ∈ [0, m_max],
+    the list of l's with l ≥ m. Components with |m| > m_max are truncated."""
+    return {m: [l for l in range(l_max + 1) if l >= m] for m in range(m_max + 1)}
+
+
+def _comp_index(l: int, m: int) -> int:
+    return l * l + (m + l)
+
+
+def init(cfg, key, d_feat_in: int, n_out: int):
+    c, lm, mm, nh = cfg.d_hidden, cfg.l_max, cfg.m_max, cfg.n_heads
+    dh = c // nh
+    orders = _m_orders(lm, mm)
+    b = Builder(key, dtype=jnp.float32)
+    b.dense("enc", (d_feat_in, c), (None, "hidden"), fan_in=d_feat_in)
+    layers = []
+    for _ in range(cfg.n_layers):
+        lb = b.sub()
+        # SO(2) mixes: m=0 real mix; m>0 paired (cos/sin) complex-style mix
+        for m, ls in orders.items():
+            k = len(ls) * c
+            if m == 0:
+                lb.dense("so2_m0", (k, k), (None, None), fan_in=k)
+            else:
+                lb.dense(f"so2_m{m}_r", (k, k), (None, None), fan_in=k)
+                lb.dense(f"so2_m{m}_i", (k, k), (None, None), fan_in=k)
+        lb.dense("attn_q", (c, nh * dh), (None, None), fan_in=c)
+        lb.dense("attn_k", (c, nh * dh), (None, None), fan_in=c)
+        lb.dense("attn_alpha", (dh, 1), (None, None), fan_in=dh)
+        lb.dense("ffn0", (c, 2 * c), (None, "hidden"), fan_in=c)
+        lb.dense("ffn1", (2 * c, c), ("hidden", None), fan_in=2 * c)
+        lb.ones("ln1", (c,), (None,))
+        lb.ones("ln2", (c,), (None,))
+        layers.append(lb.build())
+    b.params["layers"] = [p for p, _ in layers]
+    b.axes["layers"] = [a for _, a in layers]
+    b.dense("head", (c, n_out), (None, None), fan_in=c)
+    return b.build()
+
+
+def _so2_conv(lp, f_rot, orders, lm, c):
+    """f_rot: (E, dim, C) in the edge frame. Mix channels×l per m; truncate
+    |m| > m_max (their components pass through zeroed — the eSCN truncation)."""
+    e = f_rot.shape[0]
+    out = jnp.zeros_like(f_rot)
+    for m, ls in orders.items():
+        if m == 0:
+            rows = [_comp_index(l, 0) for l in ls]
+            blk = f_rot[:, jnp.asarray(rows), :].reshape(e, -1)
+            mixed = blk @ lp["so2_m0"]
+            out = out.at[:, jnp.asarray(rows), :].set(mixed.reshape(e, len(ls), c))
+        else:
+            rp = [_comp_index(l, m) for l in ls]
+            rm = [_comp_index(l, -m) for l in ls]
+            fp = f_rot[:, jnp.asarray(rp), :].reshape(e, -1)
+            fm = f_rot[:, jnp.asarray(rm), :].reshape(e, -1)
+            wr, wi = lp[f"so2_m{m}_r"], lp[f"so2_m{m}_i"]
+            op = fp @ wr - fm @ wi
+            om = fp @ wi + fm @ wr
+            out = out.at[:, jnp.asarray(rp), :].set(op.reshape(e, len(ls), c))
+            out = out.at[:, jnp.asarray(rm), :].set(om.reshape(e, len(ls), c))
+    return out
+
+
+def _rotate(f, Ds, lm, inverse=False):
+    """Apply block-diagonal Wigner-D: f (E, dim, C)."""
+    out = []
+    for l in range(lm + 1):
+        blk = f[:, l * l:(l + 1) * (l + 1), :]
+        D = Ds[l]
+        if inverse:
+            D = jnp.swapaxes(D, -1, -2)
+        out.append(jnp.einsum("emn,enc->emc", D, blk))
+    return jnp.concatenate(out, axis=1)
+
+
+def apply(cfg, params, feats, positions, node_mask, ex):
+    """Returns invariant node scalars (N, C)."""
+    c, lm, mm, nh = cfg.d_hidden, cfg.l_max, cfg.m_max, cfg.n_heads
+    dh = c // nh
+    dim = sh_dim(lm)
+    n = feats.shape[0]
+    orders = _m_orders(lm, mm)
+
+    h = jnp.zeros((n, dim, c))
+    h = h.at[:, 0, :].set(feats @ params["enc"])
+
+    for lp in params["layers"]:
+        payload = jnp.concatenate([h.reshape(n, dim * c), positions], axis=-1)
+
+        def edge_message(srcs, dsts, lp=lp):
+            e = srcs.shape[0]
+            f_src = srcs[:, : dim * c].reshape(e, dim, c)
+            x_src = srcs[:, dim * c:]
+            x_dst = dsts[:, dim * c:]
+            rel = x_dst - x_src
+            R = rotation_to_align_z(rel)
+            Ds = wigner_d_from_rotation(jax.lax.stop_gradient(R), lm)
+            f_rot = _rotate(f_src, Ds, lm)
+            f_mix = _so2_conv(lp, f_rot, orders, lm, c)
+            f_out = _rotate(f_mix, Ds, lm, inverse=True)
+            # zero-length edges carry no frame: mask to preserve equivariance
+            live = (jnp.linalg.norm(rel, axis=-1) > 1e-6).astype(f_out.dtype)
+            return f_out * live[:, None, None], Ds
+
+        def logit_fn(srcs, dsts, lp=lp):
+            f_out, _ = edge_message(srcs, dsts)
+            s_msg = f_out[:, 0, :]                            # invariant channel
+            s_dst = dsts[:, : dim * c].reshape(-1, dim, c)[:, 0, :]
+            q = (s_dst @ lp["attn_q"]).reshape(-1, nh, dh)
+            k = (s_msg @ lp["attn_k"]).reshape(-1, nh, dh)
+            a = jax.nn.leaky_relu(q + k, 0.2)
+            return (a @ lp["attn_alpha"])[..., 0]             # (E, nh)
+
+        def msg_fn(srcs, dsts, lp=lp):
+            f_out, _ = edge_message(srcs, dsts)
+            e = f_out.shape[0]
+            return jnp.transpose(f_out.reshape(e, dim, nh, dh), (0, 2, 1, 3)
+                                 ).reshape(e, nh, dim * dh)
+
+        agg = ex.push_attn(payload, logit_fn, msg_fn, nh * dim * dh)
+        agg = jnp.transpose(agg.reshape(n, nh, dim, dh), (0, 2, 1, 3)
+                            ).reshape(n, dim, c)
+        h = h + agg
+
+        # equivariant layernorm (per-l RMS over m,c) + scalar FFN
+        def eq_norm(f, scale):
+            outs = []
+            for l in range(lm + 1):
+                blk = f[:, l * l:(l + 1) * (l + 1), :]
+                rms = jnp.sqrt(jnp.mean(jnp.sum(blk * blk, axis=1), axis=-1) + 1e-6)
+                outs.append(blk / rms[:, None, None])
+            return jnp.concatenate(outs, axis=1) * scale[None, None, :]
+
+        h = eq_norm(h, lp["ln1"])
+        s = h[:, 0, :]
+        s = s + (jax.nn.silu(s @ lp["ffn0"]) @ lp["ffn1"])
+        h = h.at[:, 0, :].set(s)
+        h = eq_norm(h, lp["ln2"]) * node_mask[:, None, None]
+    return h[:, 0, :]
+
+
+def node_logits(cfg, params, feats, positions, node_mask, ex):
+    return apply(cfg, params, feats, positions, node_mask, ex) @ params["head"]

@@ -1,0 +1,130 @@
+"""NequIP — E(3)-equivariant interatomic potential (Batzner et al.,
+arXiv:2101.03164): messages are Clebsch–Gordan tensor products of neighbour
+features with edge spherical harmonics, radially gated by learned R(r)
+weights — the irrep-tensor-product kernel regime.
+
+Feature layout: per-l blocks with equal multiplicity C = cfg.d_hidden, flat
+(N, C, Σ_l (2l+1)); block l occupies columns [l², (l+1)²).
+"""
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.params import Builder
+from repro.equivariant.bessel import envelope
+from repro.equivariant.cg import clebsch_gordan
+from repro.equivariant.spherical import real_sph_harm, sh_dim
+from repro.sparse import segment as seg
+
+
+def _paths(l_max: int) -> List[Tuple[int, int, int]]:
+    out = []
+    for l1 in range(l_max + 1):
+        for l2 in range(l_max + 1):
+            for l3 in range(abs(l1 - l2), min(l1 + l2, l_max) + 1):
+                out.append((l1, l2, l3))
+    return out
+
+
+def _slice(l: int) -> slice:
+    return slice(l * l, (l + 1) * (l + 1))
+
+
+def init(cfg, key, d_feat_in: int, n_out: int):
+    c, lm = cfg.d_hidden, cfg.l_max
+    dim = sh_dim(lm)
+    b = Builder(key, dtype=jnp.float32)
+    b.dense("enc", (d_feat_in, c), (None, "hidden"), fan_in=d_feat_in)
+    paths = _paths(lm)
+    layers = []
+    for _ in range(cfg.n_layers):
+        lb = b.sub()
+        # radial MLP -> per-path per-channel weights
+        lb.dense("r_w0", (cfg.n_rbf, 32), (None, None), fan_in=cfg.n_rbf)
+        lb.zeros("r_b0", (32,), (None,))
+        lb.dense("r_w1", (32, len(paths) * c), (None, None), fan_in=32)
+        # per-l self-interaction (channel mixing) + skip
+        for l in range(lm + 1):
+            lb.dense(f"self_l{l}", (c, c), (None, "hidden"), fan_in=c)
+            lb.dense(f"skip_l{l}", (c, c), (None, "hidden"), fan_in=c)
+        # gate scalars for l>0 blocks
+        lb.dense("gate", (c, lm * c), (None, None), fan_in=c)
+        layers.append(lb.build())
+    b.params["layers"] = [p for p, _ in layers]
+    b.axes["layers"] = [a for _, a in layers]
+    b.dense("head", (c, n_out), (None, None), fan_in=c)
+    return b.build()
+
+
+def _rbf(dist, n_rbf: int, cutoff: float):
+    mu = jnp.linspace(0.0, cutoff, n_rbf)
+    beta = (n_rbf / cutoff) ** 2
+    return jnp.exp(-beta * (dist[..., None] - mu) ** 2) * envelope(dist, cutoff)[..., None]
+
+
+def apply(cfg, params, feats, positions, node_mask, ex):
+    """Returns invariant node scalars (N, C) after cfg.n_layers interactions."""
+    c, lm = cfg.d_hidden, cfg.l_max
+    dim = sh_dim(lm)
+    n = feats.shape[0]
+    paths = _paths(lm)
+    cg = {p: jnp.asarray(clebsch_gordan(p[0], p[1], p[2]), jnp.float32)
+          for p in paths}
+
+    h = jnp.zeros((n, c, dim))
+    h = h.at[:, :, 0].set(feats @ params["enc"])            # scalar init
+
+    for lp in params["layers"]:
+        payload = jnp.concatenate([h.reshape(n, c * dim), positions], axis=-1)
+
+        def msg_fn(srcs, dsts, lp=lp):
+            e = srcs.shape[0]
+            h_src = srcs[:, : c * dim].reshape(e, c, dim)
+            x_src = srcs[:, c * dim:]
+            x_dst = dsts[:, c * dim:]
+            rel = x_dst - x_src
+            dist = jnp.linalg.norm(rel, axis=-1)
+            sh = real_sph_harm(rel, lm)                      # (E, dim)
+            rbf = _rbf(dist, cfg.n_rbf, cfg.cutoff)          # (E, n_rbf)
+            rw = jax.nn.silu(rbf @ lp["r_w0"] + lp["r_b0"]) @ lp["r_w1"]
+            rw = rw.reshape(e, len(paths), c)
+            out = jnp.zeros((e, c, dim))
+            for pi, (l1, l2, l3) in enumerate(paths):
+                t = jnp.einsum("mab,eca,eb->ecm", cg[(l1, l2, l3)],
+                               h_src[:, :, _slice(l1)], sh[:, _slice(l2)])
+                out = out.at[:, :, _slice(l3)].add(t * rw[:, pi, :, None])
+            out = out / math.sqrt(len(paths))
+            # zero-length edges (self-loops / padding) carry no direction:
+            # masking them preserves exact equivariance
+            live = (dist > 1e-6).astype(out.dtype)[:, None]
+            ones = jnp.ones((e, 1), out.dtype)                 # degree counter
+            return jnp.concatenate([out.reshape(e, c * dim), ones], axis=-1) * live
+
+        agg_c = ex.push(payload, msg_fn, c * dim + 1)
+        deg = jnp.maximum(agg_c[:, -1:], 1.0)                  # (N, 1)
+        agg = (agg_c[:, :-1] / jnp.sqrt(deg)).reshape(n, c, dim)
+
+        # self-interaction + gated nonlinearity, per l
+        gates = jax.nn.sigmoid(h[:, :, 0] @ lp["gate"]).reshape(n, lm, c)
+        new = jnp.zeros_like(h)
+        for l in range(lm + 1):
+            sl = _slice(l)
+            mixed = jnp.einsum("ncm,cd->ndm", agg[:, :, sl], lp[f"self_l{l}"])
+            skip = jnp.einsum("ncm,cd->ndm", h[:, :, sl], lp[f"skip_l{l}"])
+            blk = mixed + skip
+            if l == 0:
+                blk = jax.nn.silu(blk)
+            else:
+                blk = blk * gates[:, l - 1][:, :, None]
+            new = new.at[:, :, sl].set(blk)
+        h = new * node_mask[:, None, None]
+    return h[:, :, 0]                                        # invariant scalars
+
+
+def node_logits(cfg, params, feats, positions, node_mask, ex):
+    return apply(cfg, params, feats, positions, node_mask, ex) @ params["head"]

@@ -1,0 +1,374 @@
+"""Transformer LM covering the five assigned LM archs (GQA/MLA, dense/MoE,
+SWA, QKV-bias, tied/untied embeddings), with scanned + rematerialised layers,
+vocab-sharded cross-entropy, prefill KV-cache production and one-token decode.
+
+All functions are pure; parameters are pytrees built by ``init_lm`` (and its
+``jax.eval_shape`` for the multi-pod dry-run). ``ExecOpts`` carries execution
+knobs (q-block size, unroll for cost-analysis-accurate dry-runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.params import Builder, stack_layers
+from repro.layers.attention import gqa_forward, init_gqa
+from repro.layers.mla import init_mla, mla_forward
+from repro.layers.mlp import init_swiglu, swiglu
+from repro.layers.moe import init_moe, moe_ffn
+from repro.layers.norms import rms_norm
+from repro.sharding.rules import with_sharding
+from repro.train.optimizer import AdamWConfig, adamw_update, init_adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecOpts:
+    q_block: int = 1024
+    unroll_layers: bool = False     # dry-run sets True (cost-analysis accuracy)
+    unroll_attn_blocks: bool = False
+    remat: bool = True
+    aux_loss_weight: float = 0.01
+    # §Perf iteration 1 (EXPERIMENTS.md): cotangents cross TP/DP collective
+    # boundaries in bf16 instead of f32 (halves the dominant collective term)
+    bf16_grad_barrier: bool = True
+
+
+@jax.custom_vjp
+def _bf16_barrier(x):
+    """Identity fwd; casts the cotangent to bf16 (placed at layer boundaries
+    so backward TP all-reduces move half the bytes)."""
+    return x
+
+
+def _bf16_barrier_fwd(x):
+    return x, None
+
+
+def _bf16_barrier_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype) if g.dtype == jnp.float32
+            else g,)
+
+
+# NOTE: casting bf16->f32 back would keep the f32 all-reduce; instead return
+# the bf16 cotangent directly (JAX allows dtype-changing cotangents only via
+# the primal dtype, so we cast the *primal* path: see barrier_apply below).
+def _bf16_barrier_bwd_strict(_, g):
+    return (g.astype(jnp.bfloat16),)
+
+
+_bf16_barrier.defvjp(_bf16_barrier_fwd, _bf16_barrier_bwd_strict)
+
+
+def barrier_apply(x, opts):
+    """bf16 cotangent barrier: ensure the primal is bf16 here (it is, at layer
+    boundaries) so the bf16 cotangent is type-correct."""
+    if opts.bf16_grad_barrier and x.dtype == jnp.bfloat16:
+        return _bf16_barrier(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg, key, layer_idx: int):
+    b = Builder(key, dtype=jnp.dtype(cfg.dtype))
+    sub = b.sub()
+    if cfg.attention == "mla":
+        ap, aa = init_mla(cfg, sub.key())
+    else:
+        ap, aa = init_gqa(cfg, sub.key())
+    b.params["attn"], b.axes["attn"] = ap, aa
+    b.ones("ln1", (cfg.d_model,), (None,))
+    b.ones("ln2", (cfg.d_model,), (None,))
+    is_moe = cfg.moe and layer_idx >= cfg.first_dense_layers
+    if is_moe:
+        mp, ma = init_moe(cfg, sub.key())
+        b.params["moe"], b.axes["moe"] = mp, ma
+        if cfg.n_shared_experts:
+            sp, sa = init_swiglu(cfg, sub.key(),
+                                 d_ff=cfg.n_shared_experts * (cfg.moe_d_ff or cfg.d_ff))
+            b.params["shared"], b.axes["shared"] = sp, sa
+    else:
+        f = (cfg.dense_d_ff or cfg.d_ff) if cfg.moe else cfg.d_ff
+        fp, fa = init_swiglu(cfg, sub.key(), d_ff=f)
+        b.params["ffn"], b.axes["ffn"] = fp, fa
+    return b.build()
+
+
+def init_lm(cfg, key):
+    """Returns (params, logical_axes) with layers stacked for scan."""
+    b = Builder(key, dtype=jnp.dtype(cfg.dtype))
+    if getattr(cfg, "tie_embeddings", False):
+        b.dense("embed", (cfg.vocab_size, cfg.d_model), ("vocab", None), fan_in=cfg.d_model)
+    else:
+        b.dense("embed", (cfg.vocab_size, cfg.d_model), (None, "embed_model"),
+                fan_in=cfg.d_model)
+        b.dense("head", (cfg.d_model, cfg.vocab_size), (None, "vocab"), fan_in=cfg.d_model)
+    b.ones("final_ln", (cfg.d_model,), (None,))
+
+    keys = jax.random.split(b.key(), cfg.n_layers)
+    head_layers = []
+    for i in range(cfg.first_dense_layers):
+        head_layers.append(_init_layer(cfg, keys[i], i))
+    if head_layers:
+        b.params["head_layers"] = [p for p, _ in head_layers]
+        b.axes["head_layers"] = [a for _, a in head_layers]
+    scanned = [_init_layer(cfg, keys[i], i)
+               for i in range(cfg.first_dense_layers, cfg.n_layers)]
+    b.params["layers"], b.axes["layers"] = stack_layers(scanned)
+    return b.build()
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _attn(cfg):
+    return mla_forward if cfg.attention == "mla" else gqa_forward
+
+
+def _layer_fwd(cfg, opts: ExecOpts, mesh, lp, x, positions, mode, cache_l,
+               cache_pos, collect_cache: bool = True):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    h, new_cache = _attn(cfg)(cfg, lp["attn"], h, positions, mode=mode,
+                              cache=cache_l, cache_pos=cache_pos, mesh=mesh,
+                              q_block=opts.q_block,
+                              unroll_blocks=opts.unroll_attn_blocks)
+    if not collect_cache:
+        new_cache = None   # training: don't stack per-layer KV as scan outputs
+    x = x + h
+    hn = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in lp:
+        out, aux = moe_ffn(cfg, lp["moe"], hn, mesh,
+                           capacity_factor=cfg.capacity_factor)
+        if "shared" in lp:
+            out = out + swiglu(lp["shared"], hn)
+    else:
+        out = swiglu(lp["ffn"], hn)
+    x = x + out
+    x = with_sharding(x, ("batch", "seq", None), mesh)
+    x = barrier_apply(x, opts)
+    return x, new_cache, aux
+
+
+def _run_layers(cfg, opts, mesh, params, x, positions, mode, cache, cache_pos,
+                collect_cache: bool = True):
+    """Applies head (unstacked) layers then the scanned stack.
+
+    cache: pytree with leading L dim per leaf (or None). Returns (x, new_cache, aux).
+    """
+    aux_total = jnp.zeros((), jnp.float32)
+    n_head = cfg.first_dense_layers
+    head_caches = []
+    for i in range(n_head):
+        cl = jax.tree.map(lambda c: c[i], cache) if cache is not None else None
+        x, nc, aux = _layer_fwd(cfg, opts, mesh, params["head_layers"][i],
+                                x, positions, mode, cl, cache_pos, collect_cache)
+        head_caches.append(nc)
+        aux_total = aux_total + aux
+
+    body_fn = partial(_layer_fwd, cfg, opts, mesh)
+
+    def scan_body(carry, scanned):
+        x, aux_total = carry
+        lp, cl = scanned
+        x, nc, aux = body_fn(lp, x, positions, mode, cl, cache_pos, collect_cache)
+        return (x, aux_total + aux), nc
+
+    if opts.remat and mode == "full":
+        # prevent_cse=False: safe inside scan (the loop boundary already
+        # prevents the problematic CSE) and avoids the optimization barriers
+        # that defeat XLA buffer reuse
+        scan_body = jax.checkpoint(scan_body, prevent_cse=False)
+
+    n_scan = cfg.n_layers - n_head
+    scan_cache = (jax.tree.map(lambda c: c[n_head:], cache)
+                  if cache is not None else _dummy_cache(cfg, x, n_scan, mode))
+    (x, aux_total), new_scan_cache = jax.lax.scan(
+        scan_body, (x, aux_total), (params["layers"], scan_cache),
+        unroll=n_scan if opts.unroll_layers else 1)
+
+    if not collect_cache:
+        return x, None, aux_total
+    if head_caches and head_caches[0] is not None:
+        stacked_head = jax.tree.map(lambda *cs: jnp.stack(cs, 0), *head_caches)
+        new_cache = jax.tree.map(lambda h, r: jnp.concatenate([h, r], axis=0),
+                                 stacked_head, new_scan_cache)
+    else:
+        new_cache = new_scan_cache
+    return x, new_cache, aux_total
+
+
+def _dummy_cache(cfg, x, n_scan, mode):
+    # "full" mode ignores input caches; scan needs a scannable placeholder.
+    return None if mode != "full" else None
+
+
+def forward(cfg, params, tokens, mesh=None, opts: ExecOpts = ExecOpts()):
+    """Training forward: tokens (B, S) -> logits (B, S, V[sharded])."""
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = with_sharding(x, ("batch", "seq", None), mesh)
+    positions = jnp.arange(tokens.shape[1])
+    x, _, aux = _run_layers(cfg, opts, mesh, params, x, positions, "full",
+                            None, None, collect_cache=False)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if getattr(cfg, "tie_embeddings", False):
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+    logits = with_sharding(logits, ("batch", "seq", "vocab_act"), mesh)
+    return logits, aux
+
+
+def xent_loss(cfg, logits, labels):
+    """Vocab-sharded cross-entropy: no gather over the sharded vocab dim."""
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    onehot = (jnp.arange(lf.shape[-1])[None, None, :] == labels[..., None])
+    label_logit = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    return jnp.mean(lse - label_logit)
+
+
+def loss_fn(cfg, params, batch, mesh=None, opts: ExecOpts = ExecOpts()):
+    logits, aux = forward(cfg, params, batch["tokens"], mesh, opts)
+    loss = xent_loss(cfg, logits, batch["labels"])
+    return loss + opts.aux_loss_weight * aux, {"xent": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg, mesh=None, opts: ExecOpts = ExecOpts(),
+                    opt_cfg: AdamWConfig = AdamWConfig(), grad_accum: int = 1):
+    """grad_accum > 1: batch arrives pre-shaped (accum, micro_batch, seq) —
+    microbatches run sequentially (lax.scan) with fp32 gradient accumulation,
+    bounding stored activations to one microbatch (the production pattern for
+    large global batches on small-HBM parts)."""
+    def grad_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch, mesh, opts), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, parts), grads = grad_of(params, batch)
+        else:
+            def mb(carry, mbatch):
+                gsum, lsum = carry
+                (l, _), g = grad_of(params, mbatch)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(mb, (g0, jnp.zeros(())), batch)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            parts = {}
+        params, opt_state, om = adamw_update(opt_cfg, grads, opt_state, params)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def cache_len_for(cfg, seq_len: int) -> int:
+    return min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+
+
+def init_cache(cfg, batch: int, cache_len: int, dtype=None):
+    """Abstract-friendly KV cache pytree (+ logical axes) with leading L dim."""
+    dt = dtype or jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    if cfg.attention == "mla":
+        cache = (jnp.zeros((L, batch, cache_len, cfg.kv_lora_rank), dt),
+                 jnp.zeros((L, batch, cache_len, cfg.qk_rope_head_dim), dt),
+                 jnp.full((L, cache_len), -(10 ** 9), jnp.int32))
+        axes = ((None, "batch", "cache_seq", None),
+                (None, "batch", "cache_seq", None),
+                (None, None))
+    else:
+        hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+        cache = (jnp.zeros((L, batch, cache_len, hkv, hd), dt),
+                 jnp.zeros((L, batch, cache_len, hkv, hd), dt),
+                 jnp.full((L, cache_len), -(10 ** 9), jnp.int32))
+        axes = ((None, "batch", "cache_seq", None, None),
+                (None, "batch", "cache_seq", None, None),
+                (None, None))
+    return cache, axes
+
+
+def prefill(cfg, params, tokens, mesh=None, opts: ExecOpts = ExecOpts(),
+            margin: int = 0):
+    """Processes a prompt; returns (last-token logits, cache pytree).
+
+    ``margin`` reserves headroom in the returned cache for subsequent decode
+    steps (full-attention archs; SWA caches roll in place regardless).
+    """
+    bsz, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+    x = with_sharding(x, ("batch", "seq", None), mesh)
+    positions = jnp.arange(s)
+    pf_opts = dataclasses.replace(opts, remat=False)
+    x, caches, _ = _run_layers(cfg, pf_opts, mesh, params, x, positions, "full",
+                               None, None)
+    x = rms_norm(x[:, -1:, :], params["final_ln"], cfg.norm_eps)
+    if getattr(cfg, "tie_embeddings", False):
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+
+    # caches from "full" mode: per layer stacked (L, B, S, ...): convert to the
+    # decode layout (truncate+roll to window for SWA so the rolling-slot
+    # invariant slot == pos % clen holds; pad headroom otherwise; add slot_pos)
+    clen = cache_len_for(cfg, s + margin)
+
+    def fit(c):
+        if c.shape[2] > clen:  # SWA truncation: keep last window, restore slot order
+            return jnp.roll(c[:, :, -clen:], shift=s % clen, axis=2)
+        if c.shape[2] < clen:
+            pad = [(0, 0)] * c.ndim
+            pad[2] = (0, clen - c.shape[2])
+            return jnp.pad(c, pad)
+        return c
+
+    if clen < s:  # truncated+rolled
+        slot_vals = jnp.roll(jnp.arange(s - clen, s, dtype=jnp.int32), s % clen)
+    else:
+        slot_vals = jnp.concatenate([
+            jnp.arange(s, dtype=jnp.int32),
+            jnp.full((clen - s,), -(10 ** 9), jnp.int32)])
+    slot_pos = jnp.broadcast_to(slot_vals[None, :], (cfg.n_layers, clen))
+    new_cache = tuple(fit(c) for c in caches) + (slot_pos,)
+    return logits[:, 0], new_cache
+
+
+def decode_step(cfg, params, cache, token, pos, mesh=None,
+                opts: ExecOpts = ExecOpts()):
+    """One decode step. token: (B,) int32; pos: scalar int32 (shared position).
+
+    Returns (logits (B, V[sharded]), new_cache).
+    """
+    x = jnp.take(params["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+    x = with_sharding(x, ("batch", "seq", None), mesh)
+    positions = jnp.asarray(pos).reshape(())[None]      # (1,)
+    dec_opts = dataclasses.replace(opts, remat=False)
+    x, new_cache, _ = _run_layers(cfg, dec_opts, mesh, params, x, positions,
+                                  "decode", cache, jnp.asarray(pos))
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if getattr(cfg, "tie_embeddings", False):
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"].astype(x.dtype))
+    logits = with_sharding(logits, ("batch", "seq", "vocab_act"), mesh)
+    return logits[:, 0], new_cache

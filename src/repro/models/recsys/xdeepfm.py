@@ -1,0 +1,139 @@
+"""xDeepFM (Lian et al., arXiv:1803.05170): linear + CIN + DNN over sparse
+field embeddings.
+
+CIN layer k:  X^k_{h} = Σ_{i,j} W^k_{h,i,j} (X^{k-1}_i ∘ X^0_j)   (outer
+product over fields, compressed by a learned kernel) — computed as einsums
+(MXU-dense, no materialised (H_{k-1}·m·D) tensor beyond one hop).
+
+``retrieval_score`` scores one user against N candidate items as a batched
+dot product over joint embeddings — the HMGI retrieval-scoring path
+(``retrieval_cand`` shape; no loops).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.common.params import Builder
+from repro.models.recsys.embedding_bag import init_tables, lookup, lookup_sharded
+
+
+def init(cfg, key):
+    b = Builder(key, dtype=jnp.float32)
+    tp, ta = init_tables(b.key(), cfg.n_sparse, cfg.vocab_per_field, cfg.embed_dim)
+    b.params.update(tp)
+    b.axes.update(ta)
+    # first-order (linear) weights: one scalar per id
+    b.dense("linear_w", (cfg.n_sparse, cfg.vocab_per_field),
+            (None, "table"), fan_in=cfg.vocab_per_field, scale=0.1)
+    b.zeros("bias", (1,), (None,))
+    m = cfg.n_sparse
+    prev = m
+    for k, h in enumerate(cfg.cin_layers):
+        b.dense(f"cin_w{k}", (h, prev, m), (None, None, None), fan_in=prev * m)
+        prev = h
+    b.dense("cin_out", (sum(cfg.cin_layers), 1), (None, None),
+            fan_in=sum(cfg.cin_layers))
+    d_in = cfg.n_sparse * cfg.embed_dim
+    for k, h in enumerate(cfg.mlp_layers):
+        b.dense(f"mlp_w{k}", (d_in, h), (None, "mlp"), fan_in=d_in)
+        b.zeros(f"mlp_b{k}", (h,), (None,))
+        d_in = h
+    b.dense("mlp_out", (d_in, 1), (None, None), fan_in=d_in)
+    return b.build()
+
+
+def cin(params, x0: jax.Array, n_layers: int) -> jax.Array:
+    """x0: (B, m, D). Returns (B, Σh) pooled CIN features."""
+    xk = x0
+    pooled = []
+    for k in range(n_layers):
+        w = params[f"cin_w{k}"]                       # (H, prev, m)
+        # z (B, prev, m, D) contracted against W -> (B, H, D)
+        xk = jnp.einsum("bpd,bmd,hpm->bhd", xk, x0, w)
+        pooled.append(jnp.sum(xk, axis=-1))           # (B, H)
+    return jnp.concatenate(pooled, axis=-1)
+
+
+def forward(cfg, params, ids: jax.Array, mesh=None) -> jax.Array:
+    """ids (B, F) int32 -> logits (B,)."""
+    if mesh is not None:
+        emb = lookup_sharded(params["tables"], ids, mesh)    # (B, F, D)
+    else:
+        emb = lookup(params["tables"], ids)
+    bsz = ids.shape[0]
+
+    # first order
+    lin_rows = jax.vmap(lambda w, i: jnp.take(w, i, mode="clip"),
+                        in_axes=(0, 1), out_axes=1)(params["linear_w"], ids)
+    first = jnp.sum(lin_rows, axis=-1)                       # (B,)
+
+    cin_feat = cin(params, emb, len(cfg.cin_layers))         # (B, Σh)
+    cin_logit = (cin_feat @ params["cin_out"])[:, 0]
+
+    h = emb.reshape(bsz, -1)
+    for k in range(len(cfg.mlp_layers)):
+        h = jax.nn.relu(h @ params[f"mlp_w{k}"] + params[f"mlp_b{k}"])
+    mlp_logit = (h @ params["mlp_out"])[:, 0]
+
+    return first + cin_logit + mlp_logit + params["bias"][0]
+
+
+def loss_fn(cfg, params, batch, mesh=None):
+    logits = forward(cfg, params, batch["ids"], mesh)
+    y = batch["labels"].astype(jnp.float32)
+    # numerically-stable BCE with logits
+    loss = jnp.mean(jnp.maximum(logits, 0) - logits * y
+                    + jnp.log1p(jnp.exp(-jnp.abs(logits))))
+    acc = jnp.mean(((logits > 0) == (y > 0.5)).astype(jnp.float32))
+    return loss, {"acc": acc}
+
+
+def retrieval_score(cfg, params, user_ids: jax.Array, cand_ids: jax.Array,
+                    mesh=None) -> jax.Array:
+    """One query against N candidates (batched dot, not a loop).
+
+    user_ids (F_u,) — the user's feature ids; cand_ids (N, F_i) — candidate
+    item feature ids. Score = <pooled user embedding, pooled item embedding>.
+    The candidate axis shards over ("pod","data").
+
+    Distributed path (§Perf iteration 3): *score-then-reduce* — the user
+    embedding (F·D floats) broadcasts everywhere; each "model" shard computes
+    partial scores from its resident table rows and the psum moves only the
+    (B,) score vector instead of (B, F, D) embedding rows (~780x fewer
+    collective bytes than gather-then-score).
+    """
+    if mesh is None:
+        u = lookup(params["tables"], user_ids[None, :])[0]   # (F, D)
+        c = lookup(params["tables"], cand_ids)               # (N, F, D)
+        return c.reshape(c.shape[0], -1) @ u.reshape(-1)
+
+    u = lookup_sharded(params["tables"], user_ids[None, :], mesh)[0]  # (F, D)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    shard_batch = bool(data_axes) and cand_ids.shape[0] % n_data == 0
+    bspec = (data_axes if len(data_axes) > 1 else data_axes[0]) if shard_batch else None
+
+    def local(t, cids, u):
+        v_loc = t.shape[1]
+        rank = jax.lax.axis_index("model")
+        rel = cids - rank * v_loc
+        ok = jnp.logical_and(rel >= 0, rel < v_loc)
+        rows = jax.vmap(lambda tt, ii: jnp.take(tt, ii, axis=0, mode="clip"),
+                        in_axes=(0, 1), out_axes=1)(t, jnp.clip(rel, 0, v_loc - 1))
+        rows = jnp.where(ok[..., None], rows, 0.0)           # (B_loc, F, D)
+        partial = jnp.einsum("bfd,fd->b", rows, u)
+        return jax.lax.psum(partial, "model")                # (B_loc,) scores
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, "model", None), P(bspec, None), P(None, None)),
+        out_specs=P(bspec),
+        check_vma=False,
+    )
+    return fn(params["tables"], cand_ids, u)

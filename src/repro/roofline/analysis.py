@@ -1,0 +1,119 @@
+"""Three-term roofline analysis over dry-run records (DESIGN.md §6).
+
+    compute    = HLO_FLOPs / (chips x peak)       [s]
+    memory     = HLO_bytes / (chips x HBM_bw)     [s]
+    collective = coll_bytes / (chips x link_bw)   [s]
+
+cost_analysis is per-device (calibrated), so terms use per-device numbers
+directly. Hardware constants: TPU v5e-class target per the task spec.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float       # MODEL_FLOPS / HLO_FLOPs (remat/replication waste)
+    temp_gib: float
+    note: str = ""
+
+    @property
+    def bound_time(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the bound term that is *useful* model compute."""
+        if self.bound_time <= 0:
+            return 0.0
+        chips = 512 if self.mesh == "multipod" else 256
+        ideal = self.model_flops / (chips * PEAK_FLOPS)
+        return min(ideal / self.bound_time, 1.0)
+
+
+def analyse_record(rec: Dict) -> Optional[RooflineRow]:
+    if rec.get("status") != "ok":
+        return None
+    chips = 512 if rec["mesh"] == "multipod" else 256
+    ext = rec.get("ring_extrapolation") or rec.get("layer_extrapolation")
+    if ext:
+        flops = ext["true_flops_per_device"]
+        hbytes = ext["true_bytes_per_device"]
+        coll = ext["true_collective_bytes_per_device"]
+        note = (f"ring-extrapolated R={ext['rounds']}" if "rounds" in ext
+                else f"layer-extrapolated L={ext['n_scan_layers']}")
+    else:
+        flops = rec["flops_per_device"]
+        hbytes = rec["bytes_per_device"]
+        coll = rec["collective_bytes_per_device"].get("total", 0.0)
+        note = ""
+    compute = flops / PEAK_FLOPS
+    memory = hbytes / HBM_BW
+    collective = coll / LINK_BW
+    dom = max(("compute", compute), ("memory", memory),
+              ("collective", collective), key=lambda kv: kv[1])[0]
+    model_flops = rec.get("meta", {}).get("model_flops", 0.0)
+    total_hlo = flops * chips
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute, memory_s=memory, collective_s=collective,
+        dominant=dom, model_flops=model_flops, hlo_flops_total=total_hlo,
+        useful_ratio=(model_flops / total_hlo) if total_hlo else 0.0,
+        temp_gib=rec["memory"]["temp_bytes"] / 2 ** 30, note=note)
+
+
+def load_all(results_dir: str, mesh: str = "singlepod") -> List[RooflineRow]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, mesh, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyse_record(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def format_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"{'arch':22s} {'shape':14s} {'compute(s)':>11s} {'memory(s)':>11s} "
+           f"{'collect(s)':>11s} {'bound':>10s} {'useful':>7s} {'roofl%':>7s} "
+           f"{'temp GiB':>9s}  note")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r.arch:22s} {r.shape:14s} {r.compute_s:11.4e} {r.memory_s:11.4e} "
+            f"{r.collective_s:11.4e} {r.dominant:>10s} {r.useful_ratio:7.3f} "
+            f"{100*r.roofline_fraction:6.1f}% {r.temp_gib:9.2f}  {r.note}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "results", "dryrun"))
+    ap.add_argument("--mesh", default="singlepod")
+    args = ap.parse_args()
+    rows = load_all(args.results, args.mesh)
+    print(format_table(rows))
+
+
+if __name__ == "__main__":
+    main()

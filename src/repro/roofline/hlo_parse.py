@@ -1,0 +1,157 @@
+"""Collective-byte extraction from compiled HLO text (DESIGN.md §6).
+
+``cost_analysis`` has no collective numbers, so the roofline's third term
+comes from parsing ``compiled.as_text()``: sum the result sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute,
+call-graph-aware (a collective inside a called computation counts once per
+call site; a collective inside a ``while`` body counts ``trip_count`` times
+— the caller supplies known trip counts, e.g. a ring scan's round count,
+since XLA's text doesn't expose them reliably).
+
+Per-op link-byte conventions (ring algorithms, per device):
+  all-reduce       2 x bytes      (reduce-scatter + all-gather phases)
+  all-gather       1 x result bytes
+  reduce-scatter   1 x operand bytes (≈ result x group)
+  all-to-all       1 x bytes
+  collective-permute 1 x bytes
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?.*\{\s*$")
+_CALL_RE = re.compile(
+    r"(?:to_apply|body|called_computations=\{)[=\s]*%?([\w\.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALL_TARGET_RE = re.compile(r"(?:call|fusion)\(.*to_apply=%?([\w\.\-]+)")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape literal in ``text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collective_bytes(
+    hlo_text: str,
+    while_trip_counts: Optional[Dict[str, int]] = None,
+    default_trip_count: int = 1,
+) -> Dict[str, float]:
+    """Returns per-device link bytes by collective kind (+ "total").
+
+    while_trip_counts: substring -> trip count; a while whose body name
+    contains the substring multiplies its subtree by that count.
+    """
+    while_trip_counts = while_trip_counts or {}
+
+    # --- split into computations -------------------------------------------
+    comps: Dict[str, list] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if s.endswith("{") and ("=" not in s.split("{")[0] or s.startswith("ENTRY")):
+            m = _COMP_START_RE.match(s)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if s == "}":
+            # end of computation body (ignore nested braces in attrs: rare)
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+
+    # --- per-computation direct collective bytes + call edges ---------------
+    direct: Dict[str, Dict[str, float]] = {}
+    edges: Dict[str, list] = defaultdict(list)   # comp -> [(callee, mult)]
+    for name, lines in comps.items():
+        acc: Dict[str, float] = defaultdict(float)
+        for s in lines:
+            eq = s.find("=")
+            if eq >= 0:
+                rhs = s[eq:]
+                for op, factor in _COLLECTIVES.items():
+                    # instruction names ("%all-gather.14 = ...") also contain
+                    # the op string — only look right of "=" for the call,
+                    # and take the shape(s) between "=" and the call site
+                    m = re.search(rf"\b{op}(?:-start)?\(", rhs)
+                    if m:
+                        acc[op] += factor * _shape_bytes(rhs[: m.start()])
+                        break
+            if " while(" in s or s.startswith("while("):
+                m = _WHILE_BODY_RE.search(s)
+                if m:
+                    body = m.group(1)
+                    mult = default_trip_count
+                    for key, tc in while_trip_counts.items():
+                        if key in body:
+                            mult = tc
+                            break
+                    edges[name].append((body, mult))
+            else:
+                for m in re.finditer(r"to_apply=%?([\w\.\-]+)", s):
+                    edges[name].append((m.group(1), 1))
+                m = re.search(r"condition=%?([\w\.\-]+)", s)
+                if m:
+                    edges[name].append((m.group(1), 1))
+        direct[name] = dict(acc)
+
+    # --- roll up through the call graph (memoised DFS) ----------------------
+    memo: Dict[str, Dict[str, float]] = {}
+
+    def total_of(comp: str, stack=()) -> Dict[str, float]:
+        if comp in memo:
+            return memo[comp]
+        if comp in stack or comp not in comps:
+            return {}
+        acc = defaultdict(float, direct.get(comp, {}))
+        for callee, mult in edges.get(comp, []):
+            sub = total_of(callee, stack + (comp,))
+            for k, v in sub.items():
+                acc[k] += mult * v
+        memo[comp] = dict(acc)
+        return memo[comp]
+
+    entry = None
+    for name in comps:
+        if "main" in name or entry is None:
+            entry = name if "main" in name else entry
+    if entry is None:
+        entry = next(iter(comps), None)
+    out = dict(total_of(entry)) if entry else {}
+    out["total"] = float(sum(out.values()))
+    return out
+
+
+def count_collective_ops(hlo_text: str) -> Dict[str, int]:
+    """Raw occurrence counts (diagnostics)."""
+    out = {}
+    for op in _COLLECTIVES:
+        out[op] = len(re.findall(rf"{op}(?:-start)?\(", hlo_text))
+    return out

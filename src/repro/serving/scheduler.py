@@ -1,0 +1,75 @@
+"""Continuous-batching scheduler: fixed decode slots, admission queue,
+per-slot sequence state (the Orca/vLLM iteration-level scheduling model,
+sized for a fixed-shape jitted decode step).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # (L,) int32
+    max_new_tokens: int = 16
+    generated: Optional[List[int]] = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class Slot:
+    active: bool = False
+    rid: int = -1
+    pos: int = 0                       # next position to decode
+    remaining: int = 0
+
+
+class ContinuousBatcher:
+    """Admits requests into free slots; evicts finished ones each step."""
+
+    def __init__(self, n_slots: int):
+        self.slots = [Slot() for _ in range(n_slots)]
+        self.queue: Deque[Request] = deque()
+        self.requests: Dict[int, Request] = {}
+
+    def submit(self, req: Request):
+        req.generated = []
+        self.requests[req.rid] = req
+        self.queue.append(req)
+
+    def admit(self) -> List[int]:
+        """Fills free slots from the queue; returns newly admitted slot ids."""
+        newly = []
+        for i, s in enumerate(self.slots):
+            if not s.active and self.queue:
+                req = self.queue.popleft()
+                s.active = True
+                s.rid = req.rid
+                s.pos = len(req.prompt)
+                s.remaining = req.max_new_tokens
+                newly.append(i)
+        return newly
+
+    def record_tokens(self, tokens: np.ndarray):
+        """tokens (n_slots,) — one decoded token per slot this step."""
+        for i, s in enumerate(self.slots):
+            if not s.active:
+                continue
+            req = self.requests[s.rid]
+            req.generated.append(int(tokens[i]))
+            s.pos += 1
+            s.remaining -= 1
+            if s.remaining <= 0:
+                req.done = True
+                s.active = False
+
+    @property
+    def any_active(self) -> bool:
+        return any(s.active for s in self.slots) or bool(self.queue)
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([s.active for s in self.slots])

@@ -1,0 +1,159 @@
+"""Logical-axis sharding rules (MaxText-style).
+
+Parameters and activations are annotated with tuples of *logical* axis names.
+A rule table maps each logical name to a mesh axis (or a tuple of mesh axes,
+or None). ``logical_to_spec`` resolves names to a PartitionSpec with two
+fallbacks that make one rule table serve every arch/mesh combination:
+
+  * axes not present in the mesh are dropped ("pod" on the single-pod mesh);
+  * if the mapped mesh-axis product does not divide the dimension, the
+    longest divisible *prefix* of the tuple is used instead (GQA kv_heads=8
+    under a 16-way "model" axis falls back to replication; global_batch=256
+    under ("pod","data","model")=512 falls back to ("pod","data")=32).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+# Logical axis vocabulary used across the framework (see DESIGN.md §5):
+DEFAULT_RULES: Dict[Optional[str], MeshAxes] = {
+    # activations
+    "batch": ("pod", "data"),            # prefix-fallback trims to what divides
+    "seq": None,
+    "seq_attn": None,                    # context parallelism opt-in (phi4)
+    "cache_seq": "model",                # decode KV cache: flash-decode split
+    "embed": None,
+    "act_mlp": "model",
+    "act_heads": "model",
+    "vocab_act": "model",
+    # params
+    "embed_fsdp": "data",                # ZeRO-3 row shard of weight matrices
+    "embed_model": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": None,                     # experts replicated; (D,F) carry the shards
+    "vocab": "model",
+    "kv_lora": None,
+    # HMGI index
+    "db": ("pod", "data"),
+    "partitions": None,
+    "dim": None,
+    # recsys / gnn
+    "table": "model",
+    "nodes": ("pod", "data"),
+    "edges": ("pod", "data"),
+    "feat": None,
+    "hidden": "model",
+    None: None,
+}
+
+
+_ACTIVE_OVERRIDES: Dict[Optional[str], MeshAxes] = {}
+
+
+class rule_overrides:
+    """Context manager: per-arch logical->mesh overrides active while tracing."""
+
+    def __init__(self, overrides: Optional[Dict] = None):
+        self.overrides = dict(overrides or {})
+
+    def __enter__(self):
+        global _ACTIVE_OVERRIDES
+        self._saved = _ACTIVE_OVERRIDES
+        _ACTIVE_OVERRIDES = {**self._saved, **self.overrides}
+        return self
+
+    def __exit__(self, *exc):
+        global _ACTIVE_OVERRIDES
+        _ACTIVE_OVERRIDES = self._saved
+        return False
+
+
+def _axes_size(mesh: Mesh, axes: MeshAxes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape.get(a, 1)
+    return size
+
+
+def _present(mesh: Mesh, axes: MeshAxes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, str):
+        axes = (axes,)
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def logical_to_spec(
+    logical_axes: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Dict] = None,
+    dims: Optional[Sequence[int]] = None,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec for ``mesh`` (see module doc)."""
+    base = {**DEFAULT_RULES, **_ACTIVE_OVERRIDES}
+    rules = base if rules is None else {**base, **rules}
+    used: set = set()
+    out = []
+    for i, name in enumerate(logical_axes):
+        cand = _present(mesh, rules.get(name))
+        cand = tuple(a for a in cand if a not in used)
+        # longest divisible prefix
+        chosen: Tuple[str, ...] = ()
+        if dims is not None and cand:
+            size = 1
+            for j, a in enumerate(cand):
+                size *= mesh.shape[a]
+                if dims[i] % size == 0:
+                    chosen = cand[: j + 1]
+                else:
+                    break
+        elif cand:
+            chosen = cand
+        used.update(chosen)
+        if not chosen:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(chosen)
+    return P(*out)
+
+
+def shard_tree(axes_tree, shapes_tree, mesh: Mesh, rules=None):
+    """Pytree of logical-axes tuples (+ matching abstract shapes) -> NamedShardings."""
+    def one(axes, shaped):
+        dims = getattr(shaped, "shape", None)
+        return NamedSharding(mesh, logical_to_spec(axes, mesh, rules, dims))
+    return jax.tree.map(one, axes_tree, shapes_tree, is_leaf=_is_axes_leaf)
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def with_sharding(x, logical_axes, mesh: Optional[Mesh] = None, rules=None):
+    """Activation sharding constraint by logical names (identity if no mesh)."""
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical_axes, mesh, rules, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_axes(mesh: Mesh, n: int) -> Tuple[str, ...]:
+    """Mesh axes used for the batch/data dimension of size n (prefix rule)."""
+    spec = logical_to_spec(["batch"], mesh, None, [n])[0]
+    if spec is None:
+        return ()
+    return (spec,) if isinstance(spec, str) else tuple(spec)

@@ -1,0 +1,41 @@
+"""Segment primitives (the JAX message-passing substrate — DESIGN.md: BCOO-free,
+``segment_sum``-based; this IS part of the system, not a gap).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data, segment_ids, num_segments: int):
+    ok = jnp.logical_and(segment_ids >= 0, segment_ids < num_segments)
+    data = jnp.where(ok.reshape(ok.shape + (1,) * (data.ndim - 1)), data, 0)
+    seg = jnp.where(ok, segment_ids, 0)
+    return jax.ops.segment_sum(data, seg, num_segments=num_segments)
+
+
+def segment_mean(data, segment_ids, num_segments: int):
+    s = segment_sum(data, segment_ids, num_segments)
+    ones = jnp.ones(segment_ids.shape, data.dtype)
+    c = segment_sum(ones, segment_ids, num_segments)
+    return s / jnp.maximum(c.reshape(c.shape + (1,) * (data.ndim - 1)), 1.0)
+
+
+def segment_max(data, segment_ids, num_segments: int):
+    ok = jnp.logical_and(segment_ids >= 0, segment_ids < num_segments)
+    data = jnp.where(ok.reshape(ok.shape + (1,) * (data.ndim - 1)), data, -jnp.inf)
+    seg = jnp.where(ok, segment_ids, 0)
+    return jax.ops.segment_max(data, seg, num_segments=num_segments)
+
+
+def segment_softmax(logits, segment_ids, num_segments: int):
+    """Per-segment softmax over edge logits (GAT-style attention weights)."""
+    m = segment_max(logits, segment_ids, num_segments)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    shifted = logits - m[jnp.clip(segment_ids, 0, num_segments - 1)]
+    e = jnp.exp(shifted)
+    ok = jnp.logical_and(segment_ids >= 0, segment_ids < num_segments)
+    e = jnp.where(ok.reshape(ok.shape + (1,) * (e.ndim - 1)) if e.ndim > 1 else ok, e, 0.0)
+    z = segment_sum(e, segment_ids, num_segments)
+    denom = z[jnp.clip(segment_ids, 0, num_segments - 1)]
+    return e / jnp.maximum(denom, 1e-20)

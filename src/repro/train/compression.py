@@ -1,0 +1,87 @@
+"""Gradient compression for slow inter-pod links (distributed-optimization
+substrate): top-k sparsification with error feedback, and int8 quantized
+all-reduce emulation.
+
+Error feedback (Karimireddy et al. '19): the residual of the compression is
+carried into the next step, so compressed SGD/Adam converges at the dense
+rate. ``compress -> (all-reduce compressed) -> decompress`` is applied to
+the *inter-pod* gradient sync only (the intra-pod psum stays dense) — the
+pod axis is the slow link at 1000+ node scale.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: object      # pytree like grads (fp32)
+
+
+def init_error_feedback(grads_like) -> ErrorFeedbackState:
+    return ErrorFeedbackState(
+        residual=jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def topk_compress(g: jax.Array, frac: float) -> Tuple[jax.Array, jax.Array]:
+    """Keep the largest-|g| fraction; returns (values (k,), flat indices (k,))."""
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(int(frac * flat.shape[0]), 1)
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx
+
+
+def topk_decompress(values, idx, shape) -> jax.Array:
+    flat = jnp.zeros((int(jnp.prod(jnp.asarray(shape))),), jnp.float32)
+    return flat.at[idx].set(values).reshape(shape)
+
+
+def compress_grads_topk(grads, ef: ErrorFeedbackState, frac: float = 0.05):
+    """Returns (compressed_grads (dense tensors, sparsified), new_ef).
+
+    The compressed gradient is returned dense-but-sparse (zeros elsewhere) so
+    the caller's existing all-reduce path applies; on a real deployment the
+    (values, indices) pairs are what travel over the pod link — the bytes
+    saving is frac·(1 + idx_overhead).
+    """
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        vals, idx = topk_compress(acc, frac)
+        comp = topk_decompress(vals, idx, acc.shape)
+        return comp.astype(g.dtype), acc - comp
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    resid = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return comp, ErrorFeedbackState(residual=resid)
+
+
+def int8_compress(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization (for quantized all-reduce)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g.astype(jnp.float32))), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_grads_int8(grads, ef: ErrorFeedbackState):
+    """Int8 + error feedback (4x inter-pod gradient bytes reduction)."""
+    def one(g, r):
+        acc = g.astype(jnp.float32) + r
+        q, s = int8_compress(acc)
+        deq = int8_decompress(q, s)
+        return deq.astype(g.dtype), acc - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    out = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    resid = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return comp, ErrorFeedbackState(residual=resid)

@@ -1,0 +1,105 @@
+"""Equivariant-library math tests: SH orthogonality/equivariance, Wigner-D,
+Clebsch-Gordan coupling, Bessel bases."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.equivariant.bessel import (_jl_np, angular_basis, bessel_zeros,
+                                      radial_bessel_basis,
+                                      spherical_bessel_basis)
+from repro.equivariant.cg import _rand_rot, _wigner_d_np, clebsch_gordan
+from repro.equivariant.spherical import (real_sph_harm, rotation_to_align_z,
+                                         sh_dim, wigner_d_from_rotation)
+
+
+def _rot(seed):
+    return _rand_rot(np.random.default_rng(seed))
+
+
+class TestSphericalHarmonics:
+    def test_orthonormality_mc(self, rng):
+        v = rng.normal(size=(100_000, 3))
+        v /= np.linalg.norm(v, axis=1, keepdims=True)
+        y = np.asarray(real_sph_harm(jnp.asarray(v), 3))
+        gram = (y.T @ y) / len(v) * 4 * np.pi
+        np.testing.assert_allclose(gram, np.eye(sh_dim(3)), atol=0.05)
+
+    @pytest.mark.parametrize("l_max", [1, 2, 4, 6])
+    def test_wigner_equivariance(self, l_max, rng):
+        R = jnp.asarray(np.stack([_rot(i) for i in range(3)]).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(3, 3)).astype(np.float32))
+        y = real_sph_harm(v, l_max)
+        yr = real_sph_harm(jnp.einsum("bij,bj->bi", R, v), l_max)
+        ds = wigner_d_from_rotation(R, l_max)
+        for l in range(l_max + 1):
+            sl = slice(l * l, (l + 1) * (l + 1))
+            pred = jnp.einsum("bmn,bn->bm", ds[l], y[:, sl])
+            np.testing.assert_allclose(np.asarray(pred), np.asarray(yr[:, sl]),
+                                       atol=5e-5)
+
+    def test_wigner_orthogonal(self):
+        ds = wigner_d_from_rotation(jnp.asarray(_rot(0)[None].astype(np.float32)), 4)
+        for d in ds:
+            m = np.asarray(d[0])
+            np.testing.assert_allclose(m @ m.T, np.eye(len(m)), atol=1e-4)
+
+    def test_align_z(self, rng):
+        v = jnp.asarray(rng.normal(size=(16, 3)).astype(np.float32))
+        r = rotation_to_align_z(v)
+        z = jnp.einsum("bij,bj->bi", r, v / jnp.linalg.norm(v, axis=1, keepdims=True))
+        np.testing.assert_allclose(np.asarray(z), [[0, 0, 1.0]] * 16, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(jnp.linalg.det(r)), 1.0, atol=1e-5)
+
+    def test_align_z_degenerate_poles(self):
+        v = jnp.asarray([[0.0, 0, 1.0], [0.0, 0, -1.0]])
+        r = rotation_to_align_z(v)
+        z = jnp.einsum("bij,bj->bi", r, v)
+        np.testing.assert_allclose(np.asarray(z), [[0, 0, 1.0]] * 2, atol=1e-6)
+
+
+class TestClebschGordan:
+    @pytest.mark.parametrize("l1,l2,l3", [(1, 1, 0), (1, 1, 2), (2, 2, 2),
+                                          (3, 2, 1), (6, 2, 6)])
+    def test_equivariance(self, l1, l2, l3):
+        c = clebsch_gordan(l1, l2, l3)
+        r = _rot(42)
+        ds = _wigner_d_np(r, max(l1, l2, l3))
+        lhs = np.einsum("mn,nab->mab", ds[l3], c)
+        rhs = np.einsum("mab,ax,by->mxy", c, ds[l1], ds[l2])
+        np.testing.assert_allclose(lhs, rhs, atol=1e-10)
+
+    def test_forbidden_paths_zero(self):
+        assert np.allclose(clebsch_gordan(1, 1, 3), 0)
+        assert np.allclose(clebsch_gordan(0, 2, 1), 0)
+
+    def test_normalised(self):
+        c = clebsch_gordan(2, 1, 2)
+        assert abs(np.linalg.norm(c) - 1.0) < 1e-10
+
+
+class TestBessel:
+    def test_j0_zeros_are_n_pi(self):
+        z = bessel_zeros(0, 4)
+        np.testing.assert_allclose(z[0] / np.pi, [1, 2, 3, 4], rtol=1e-8)
+
+    def test_zeros_are_roots(self):
+        z = bessel_zeros(4, 3)
+        for l in range(5):
+            assert np.max(np.abs(_jl_np(l, z[l]))) < 1e-10
+
+    def test_bases_finite_and_cutoff(self):
+        r = jnp.linspace(0.05, 6.0, 32)
+        rb = radial_bessel_basis(r, 6, 5.0)
+        sb = spherical_bessel_basis(r, 7, 6, 5.0)
+        ab = angular_basis(jnp.linspace(0, np.pi, 8), 7)
+        for arr in (rb, sb, ab):
+            assert bool(jnp.all(jnp.isfinite(arr)))
+        # envelope: zero beyond the cutoff
+        assert float(jnp.max(jnp.abs(rb[r > 5.0]))) == 0.0
+        assert float(jnp.max(jnp.abs(sb[r > 5.0]))) == 0.0
+
+    def test_legendre_recurrence(self):
+        a = np.asarray(angular_basis(jnp.asarray([0.3]), 4))[0]
+        c = np.cos(0.3)
+        want = [1, c, 0.5 * (3 * c ** 2 - 1), 0.5 * (5 * c ** 3 - 3 * c)]
+        np.testing.assert_allclose(a, want, rtol=1e-5)

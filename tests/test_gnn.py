@@ -1,0 +1,116 @@
+"""GNN smoke + invariance tests for the four assigned archs."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.gnn import dimenet as dimenet_mod
+from repro.models.gnn import driver
+from repro.train.optimizer import init_adamw
+
+GNN_ARCHS = ["egnn", "dimenet", "nequip", "equiformer-v2"]
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return driver.make_flat_graph(60, 200, 8, seed=0)
+
+
+def _trip(g, cfg):
+    if cfg.model != "dimenet":
+        return None
+    return dimenet_mod.build_triplets(np.asarray(g.edge_src),
+                                      np.asarray(g.edge_dst),
+                                      np.asarray(g.edge_mask))
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_forward_shapes_finite(arch, graph):
+    cfg = smoke_config(arch)
+    params, _ = driver.init_model(cfg, jax.random.PRNGKey(0), 8)
+    logits = driver.node_logits_local(cfg, params, graph, _trip(graph, cfg))
+    assert logits.shape == (60, driver.N_CLASSES)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_rotation_invariance(arch, graph):
+    cfg = smoke_config(arch)
+    params, _ = driver.init_model(cfg, jax.random.PRNGKey(1), 8)
+    rng = np.random.default_rng(5)
+    A = rng.normal(size=(3, 3))
+    Q, _ = np.linalg.qr(A)
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    R = jnp.asarray(Q.astype(np.float32))
+    t = _trip(graph, cfg)
+    l1 = driver.node_logits_local(cfg, params, graph, t)
+    l2 = driver.node_logits_local(
+        cfg, params, graph._replace(positions=graph.positions @ R.T), t)
+    rel = float(jnp.max(jnp.abs(l1 - l2)) / (jnp.max(jnp.abs(l1)) + 1e-9))
+    assert rel < 1e-4, rel
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_train_step_runs(arch, graph):
+    cfg = smoke_config(arch)
+    params, _ = driver.init_model(cfg, jax.random.PRNGKey(0), 8)
+    step = driver.make_train_step(cfg, "full_graph")
+    opt = init_adamw(params)
+    batch = {"graph": graph, "triplets": _trip(graph, smoke_config(arch))}
+    p, o, m = step(params, opt, batch)
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_molecule_batch_loss():
+    cfg = smoke_config("egnn")
+    params, _ = driver.init_model(cfg, jax.random.PRNGKey(0), 4, n_out=1)
+    g, energy = driver.make_molecule_batch(4, 10, 24, seed=0)
+    sums = driver.molecule_loss(cfg, params, g, energy)
+    assert np.isfinite(float(sums["loss_sum"]))
+
+
+def test_neighbor_sampler_tree_shapes():
+    from repro.sparse.sampler import NeighborSampler, sizes_for_fanout
+    rng = np.random.default_rng(0)
+    n, e = 200, 2000
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    feats = rng.normal(size=(n, 6)).astype(np.float32)
+    labels = rng.integers(0, 4, n)
+    s = NeighborSampler(n, src, dst, feats, labels)
+    batch = s.sample(np.arange(8), (3, 2))
+    n_sub, n_edge = sizes_for_fanout((3, 2))
+    assert batch.nodes.shape == (8, n_sub)
+    assert batch.edge_src.shape == (8, n_edge)
+    # every masked edge's endpoints are valid local indices
+    assert batch.edge_src.max() < n_sub and batch.edge_dst.max() < n_sub
+    # roots are the targets
+    np.testing.assert_array_equal(batch.nodes[:, 0], np.arange(8))
+
+
+def test_minibatch_loss_runs():
+    from repro.sparse.sampler import NeighborSampler
+    from repro.models.gnn.common import FlatGraph
+    rng = np.random.default_rng(0)
+    n, e = 200, 2000
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    feats = rng.normal(size=(n, 6)).astype(np.float32)
+    labels = rng.integers(0, driver.N_CLASSES, n)
+    s = NeighborSampler(n, src, dst, feats, labels)
+    batch = s.sample(np.arange(8), (3, 2))
+    cfg = smoke_config("egnn")
+    params, _ = driver.init_model(cfg, jax.random.PRNGKey(0), 6)
+    b = batch.nodes.shape[0]
+    n_sub = batch.nodes.shape[1]
+    pos = rng.normal(size=(b, n_sub, 3)).astype(np.float32)
+    g = FlatGraph(feats=jnp.asarray(batch.feats), positions=jnp.asarray(pos),
+                  edge_src=jnp.asarray(batch.edge_src),
+                  edge_dst=jnp.asarray(batch.edge_dst),
+                  edge_mask=jnp.asarray(batch.edge_mask),
+                  node_mask=jnp.asarray(batch.nodes >= 0),
+                  labels=jnp.zeros((b, n_sub), jnp.int32))
+    sums = driver.minibatch_loss(cfg, params, g, jnp.asarray(batch.labels))
+    assert np.isfinite(float(sums["loss_sum"]))

@@ -1,0 +1,110 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+swept over shapes and dtypes."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.quantization import quantize
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.ivf_topk.ops import scan_topk_quantized
+from repro.kernels.ivf_topk.ref import scan_topk_ref, topk_from_chunks
+from repro.kernels.segment_reduce.ops import segment_sum_mm
+from repro.kernels.segment_reduce.ref import segment_sum_ref
+
+
+class TestIvfTopk:
+    @pytest.mark.parametrize("n,d,q", [(1024, 64, 8), (2048, 96, 32),
+                                       (4096, 128, 16)])
+    def test_matches_ref(self, n, d, q, rng):
+        v = rng.normal(size=(n, d)).astype(np.float32)
+        v /= np.linalg.norm(v, axis=1, keepdims=True)
+        qv = quantize(jnp.asarray(v), 8)
+        queries = jnp.asarray(v[:q] + 0.01 * rng.normal(size=(q, d)).astype(np.float32))
+        cm, ca = scan_topk_ref(queries, qv.data, qv.vmin[:, 0], qv.scale[:, 0])
+        rv, ri = topk_from_chunks(cm, ca, 10)
+        kv_, ki = scan_topk_quantized(queries, qv.data, qv.vmin[:, 0],
+                                      qv.scale[:, 0], jnp.ones((n,), bool), k=10)
+        np.testing.assert_allclose(np.asarray(kv_), np.asarray(rv), rtol=2e-5,
+                                   atol=1e-5)
+        assert np.mean(np.asarray(ki) == np.asarray(ri)) > 0.99
+
+    def test_masking(self, rng):
+        n, d = 1024, 64
+        v = rng.normal(size=(n, d)).astype(np.float32)
+        qv = quantize(jnp.asarray(v), 8)
+        valid = jnp.ones((n,), bool).at[jnp.arange(0, n, 7)].set(False)
+        kv_, ki = scan_topk_quantized(jnp.asarray(v[:4]), qv.data, qv.vmin[:, 0],
+                                      qv.scale[:, 0], valid, k=20)
+        dead = np.arange(0, n, 7)
+        assert not np.any(np.isin(np.asarray(ki), dead))
+
+    def test_unaligned_n_padding(self, rng):
+        n, d = 1900, 64
+        v = rng.normal(size=(n, d)).astype(np.float32)
+        v /= np.linalg.norm(v, axis=1, keepdims=True)
+        qv = quantize(jnp.asarray(v), 8)
+        kv_, ki = scan_topk_quantized(jnp.asarray(v[:8]), qv.data, qv.vmin[:, 0],
+                                      qv.scale[:, 0], jnp.ones((n,), bool), k=1)
+        assert np.array_equal(np.asarray(ki)[:, 0], np.arange(8))
+
+
+class TestSegmentReduce:
+    @pytest.mark.parametrize("e,d,n", [(512, 16, 64), (3000, 48, 300),
+                                       (1024, 128, 512)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, e, d, n, dtype, rng):
+        msg = jnp.asarray(rng.normal(size=(e, d)).astype(np.float32)).astype(dtype)
+        seg = jnp.asarray(rng.integers(-1, n, e).astype(np.int32))
+        out_k = segment_sum_mm(msg, seg, n)
+        out_r = segment_sum_ref(msg, seg, n)
+        tol = 1e-5 if dtype == jnp.float32 else 0.1
+        np.testing.assert_allclose(np.asarray(out_k, np.float32),
+                                   np.asarray(out_r, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_unsorted_ids(self, rng):
+        msg = jnp.ones((100, 4))
+        seg = jnp.asarray(rng.permutation(np.repeat(np.arange(10), 10)).astype(np.int32))
+        out = segment_sum_mm(msg, seg, 10)
+        np.testing.assert_allclose(np.asarray(out), 10.0)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("b,hkv,g,hd,s", [(2, 2, 2, 32, 256),
+                                              (3, 4, 2, 32, 700),
+                                              (1, 8, 8, 64, 1024)])
+    def test_matches_ref(self, b, hkv, g, hd, s, rng):
+        q = jnp.asarray(rng.normal(size=(b, hkv * g, hd)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+        valid = jnp.asarray(rng.random((b, s)) > 0.3)
+        o_k = decode_attention(q, k, v, valid, block_s=256)
+        o_r = decode_attention_ref(q.reshape(b, hkv, g, hd), k, v,
+                                   valid).reshape(b, hkv * g, hd)
+        np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_bf16(self, rng):
+        b, hkv, g, hd, s = 2, 2, 4, 32, 512
+        q = jnp.asarray(rng.normal(size=(b, hkv * g, hd)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, s, hkv, hd)).astype(np.float32))
+        valid = jnp.ones((b, s), bool)
+        o_k = decode_attention(q.astype(jnp.bfloat16), k.astype(jnp.bfloat16),
+                               v.astype(jnp.bfloat16), valid, block_s=128)
+        o_r = decode_attention_ref(q.reshape(b, hkv, g, hd), k, v, valid)
+        np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                                   np.asarray(o_r).reshape(b, hkv * g, hd),
+                                   rtol=0.05, atol=0.02)
+
+    def test_fully_masked_rows_are_zero(self, rng):
+        b, h, hd, s = 2, 4, 32, 128
+        q = jnp.asarray(rng.normal(size=(b, h, hd)).astype(np.float32))
+        k = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+        v = jnp.asarray(rng.normal(size=(b, s, h, hd)).astype(np.float32))
+        valid = jnp.zeros((b, s), bool).at[1].set(True)
+        out = decode_attention(q, k, v, valid)
+        assert float(jnp.max(jnp.abs(out[0]))) < 1e-6
+        assert float(jnp.max(jnp.abs(out[1]))) > 0

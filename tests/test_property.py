@@ -1,0 +1,162 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import delta as delta_mod
+from repro.core import ivf as ivf_mod
+from repro.core import partitioner
+from repro.core.fusion import FusionWeights, fuse
+from repro.core.quantization import dequantize, quantize, quantized_scores
+from repro.sparse import segment as seg
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+_f32 = st.floats(-10, 10, allow_nan=False, width=32, allow_subnormal=False)
+
+
+@st.composite
+def small_matrix(draw, max_n=24, max_d=16, min_d=2):
+    n = draw(st.integers(2, max_n))
+    d = draw(st.integers(min_d, max_d))
+    data = draw(st.lists(_f32, min_size=n * d, max_size=n * d))
+    return np.asarray(data, np.float32).reshape(n, d)
+
+
+class TestQuantization:
+    @given(small_matrix())
+    def test_roundtrip_error_bound(self, x):
+        """Eq. 2 invariant: |e - deq(q)|inf <= per-vector step size."""
+        qv = quantize(jnp.asarray(x), 8)
+        err = np.abs(np.asarray(dequantize(qv)) - x)
+        step = np.asarray(qv.scale)      # (n, 1)
+        assert np.all(err <= step + 1e-5)
+
+    @given(small_matrix())
+    def test_4bit_within_bound(self, x):
+        qv = quantize(jnp.asarray(x), 4)
+        err = np.abs(np.asarray(dequantize(qv)) - x)
+        step = np.asarray(qv.scale)
+        assert np.all(err <= step + 1e-5)   # step = range/15 per vector
+
+    @given(small_matrix(max_n=12, max_d=12))
+    def test_score_identity(self, x):
+        """scale*(q . qint) + min*sum(q) == q . dequant(e)."""
+        qv = quantize(jnp.asarray(x), 8)
+        q = jnp.asarray(x[:2])
+        s1 = np.asarray(quantized_scores(q, qv))
+        s2 = np.asarray(q @ dequantize(qv).T)
+        np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+
+    @given(small_matrix())
+    def test_memory_halves_per_bit_drop(self, x):
+        """The paper's 50% memory saving: 8-bit is half of 16-bit storage;
+        4-bit halves again (up to one pad byte per row for odd dims)."""
+        n = x.shape[0]
+        b16 = quantize(jnp.asarray(x), 16).data.nbytes
+        b8 = quantize(jnp.asarray(x), 8).data.nbytes
+        b4 = quantize(jnp.asarray(x), 4).data.nbytes
+        assert b8 * 2 == b16
+        assert b4 <= b8 // 2 + n
+
+
+class TestKMeans:
+    @given(small_matrix(max_n=32))
+    def test_assignment_is_argmin(self, x):
+        k = min(4, len(x))
+        st_ = partitioner.fit(jax.random.PRNGKey(0), jnp.asarray(x), k, 4)
+        a = np.asarray(partitioner.assign(jnp.asarray(x), st_.centroids))
+        d = ((x[:, None, :] - np.asarray(st_.centroids)[None]) ** 2).sum(-1)
+        np.testing.assert_array_equal(a, d.argmin(1))
+
+
+class TestTopKMerge:
+    @given(st.integers(1, 6), st.lists(_f32, min_size=12, max_size=12))
+    def test_merge_associative_equals_global(self, k, vals):
+        s = np.asarray(vals, np.float32).reshape(1, -1)
+        ids = np.arange(12, dtype=np.int32).reshape(1, -1)
+        a = (jnp.asarray(s[:, :4]), jnp.asarray(ids[:, :4]))
+        b = (jnp.asarray(s[:, 4:8]), jnp.asarray(ids[:, 4:8]))
+        c = (jnp.asarray(s[:, 8:]), jnp.asarray(ids[:, 8:]))
+        ab_c = ivf_mod.merge_topk(*ivf_mod.merge_topk(*a, *b, k), *c, k)
+        a_bc = ivf_mod.merge_topk(*a, *ivf_mod.merge_topk(*b, *c, k), k)
+        glob = jax.lax.top_k(jnp.asarray(s), k)[0]
+        np.testing.assert_allclose(np.asarray(ab_c[0]), np.asarray(glob))
+        np.testing.assert_allclose(np.asarray(a_bc[0]), np.asarray(glob))
+
+
+class TestDelta:
+    @given(small_matrix(max_n=16, min_d=4))
+    def test_delta_search_equals_concat_search(self, x):
+        """stable+delta search == brute force over the union corpus."""
+        x = x / np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-9)
+        n = len(x)
+        n_stable = max(n // 2, 1)
+        stable, over = ivf_mod.build(jax.random.PRNGKey(0),
+                                     jnp.asarray(x[:n_stable]),
+                                     jnp.arange(n_stable),
+                                     n_partitions=min(2, n_stable), bits=16)
+        d = delta_mod.init(16, x.shape[1], max_ids=n)
+        if n > n_stable:
+            d = delta_mod.insert(d, jnp.asarray(x[n_stable:]),
+                                 jnp.arange(n_stable, n))
+        sv, si = delta_mod.search_with_delta(stable, d, jnp.asarray(x[:2]),
+                                             n_probe=2, k=min(3, n))
+        full = x @ x[:2].T
+        best = np.argsort(-full[:, 0])[: min(3, n)]
+        overflowed = set(np.where(np.asarray(over))[0])
+        got = [i for i in np.asarray(si)[0] if i >= 0]
+        want = [b for b in best if b not in overflowed]
+        # top-1 (excluding capacity-overflow rows) must be found
+        if want:
+            assert want[0] in got
+
+
+class TestFusion:
+    @given(st.floats(0.05, 0.95, allow_subnormal=False), st.floats(0.0, 1.0, allow_subnormal=False),
+           st.floats(0.0, 1.0, allow_subnormal=False))
+    def test_graph_term_orders_vector_ties(self, wv, g1, g2):
+        """Eq. 3: with equal vector similarity, the candidate with more
+        traversal mass must not rank lower (monotone in the graph term)."""
+        vs = jnp.asarray([[0.7, 0.7]])
+        g = jnp.asarray([[g1, g2]])
+        w = FusionWeights(jnp.asarray([wv]), jnp.asarray([1.0 - wv]))
+        f = np.asarray(fuse(vs, g, w))[0]
+        if g1 > g2:
+            assert f[0] >= f[1] - 1e-6
+        elif g2 > g1:
+            assert f[1] >= f[0] - 1e-6
+
+    @given(st.floats(0.05, 0.95, allow_subnormal=False))
+    def test_vector_term_orders_graph_ties(self, wv):
+        vs = jnp.asarray([[0.9, 0.2]])
+        g = jnp.asarray([[0.5, 0.5]])
+        w = FusionWeights(jnp.asarray([wv]), jnp.asarray([1.0 - wv]))
+        f = np.asarray(fuse(vs, g, w))[0]
+        assert f[0] > f[1]
+
+
+class TestSegmentOps:
+    @given(st.integers(2, 20), st.integers(2, 8))
+    def test_segment_sum_vs_numpy(self, e, n):
+        rng = np.random.default_rng(e * 31 + n)
+        data = rng.normal(size=(e, 3)).astype(np.float32)
+        ids = rng.integers(0, n, e).astype(np.int32)
+        out = np.asarray(seg.segment_sum(jnp.asarray(data), jnp.asarray(ids), n))
+        want = np.zeros((n, 3), np.float32)
+        np.add.at(want, ids, data)
+        np.testing.assert_allclose(out, want, rtol=1e-5, atol=1e-5)
+
+    @given(st.integers(2, 20), st.integers(2, 8))
+    def test_segment_softmax_normalised(self, e, n):
+        rng = np.random.default_rng(e * 17 + n)
+        logits = rng.normal(size=(e, 2)).astype(np.float32)
+        ids = rng.integers(0, n, e).astype(np.int32)
+        w = np.asarray(seg.segment_softmax(jnp.asarray(logits), jnp.asarray(ids), n))
+        sums = np.zeros((n, 2))
+        np.add.at(sums, ids, w)
+        present = np.zeros(n, bool)
+        present[ids] = True
+        np.testing.assert_allclose(sums[present], 1.0, rtol=1e-5)
