@@ -4,7 +4,8 @@
                   HMGI vs monolithic vs decoupled baselines
   ablations     — §5.1 partitioning, §5.2 updates+quantization, §5.3 fusion
   scaling       — §4.5 sub-linear query scaling
-  kernels_bench — Pallas kernel accounting
+  kernels_bench — Pallas kernel accounting (incl. kernel-vs-einsum probe path)
+  hybrid_bench  — hybrid query: sparse vs dense fusion, end-to-end latency
 
 Prints ``name,us_per_call,derived`` CSV.
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module>]
@@ -20,7 +21,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["paper_tables", "ablations", "scaling",
-                             "kernels_bench"])
+                             "kernels_bench", "hybrid_bench"])
     args = ap.parse_args()
 
     rows = []
@@ -29,9 +30,11 @@ def main() -> None:
         rows.append((name, us_per_call, derived))
         print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
-    from benchmarks import ablations, kernels_bench, paper_tables, scaling
+    from benchmarks import (ablations, hybrid_bench, kernels_bench,
+                            paper_tables, scaling)
     mods = {"paper_tables": paper_tables, "ablations": ablations,
-            "scaling": scaling, "kernels_bench": kernels_bench}
+            "scaling": scaling, "kernels_bench": kernels_bench,
+            "hybrid_bench": hybrid_bench}
     selected = [mods[args.only]] if args.only else list(mods.values())
 
     print("name,us_per_call,derived")

@@ -210,6 +210,9 @@ class HMGIConfig(ArchConfig):
     # delta store (MVCC)
     delta_capacity: int = 4096
     compact_threshold: float = 0.5         # compact when delta half full
+    delta_rescore_margin: int = 16         # extra int8-scan survivors rescored
+                                           # in fp32 (larger = closer to exact
+                                           # brute force on a crowded delta)
     # hybrid fusion (Eq. 3)
     w_vector: float = 0.6
     w_graph: float = 0.4

@@ -1,7 +1,7 @@
 """MVCC delta store (paper §3.5): insertions/updates/deletions land in a
-fixed-capacity brute-force buffer; queries hybridise ANNS-on-stable with
-exact scan-on-delta; asynchronous compaction merges the delta into the IVF
-partitions without a full rebuild.
+fixed-capacity buffer; queries hybridise ANNS-on-stable with a scan-on-delta;
+asynchronous compaction merges the delta into the IVF partitions without a
+full rebuild.
 
 Versioning: every write bumps ``version``. Visibility rules per read:
   stable row visible  iff  not tombstoned and not superseded
@@ -10,9 +10,18 @@ Versioning: every write bumps ``version``. Visibility rules per read:
 supersede(old) + insert(new)); compaction folds the latest versions back into
 the stable index and clears the mask. Readers are wait-free: search takes a
 consistent (stable, delta) snapshot pair.
+
+Scan path: rows are quantized to int8 at insert time (mirroring the stable
+slab layout), so the delta scan runs through the same fused Pallas kernel as
+the IVF probe path — int8 HBM traffic, affine dequant folded into the matmul.
+The top (k + margin) quantized survivors are then rescored exactly against
+the fp32 master rows (a tiny gather), so results stay brute-force-exact
+whenever the margin covers the quantization noise — and always when the
+delta holds ≤ k + margin rows.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -20,10 +29,20 @@ import jax.numpy as jnp
 
 from repro.core import ivf as ivf_mod
 from repro.core.ivf import IVFIndex
+from repro.core.quantization import quantize
+from repro.kernels.ivf_topk.ops import scan_topk_quantized
+from repro.kernels.ivf_topk.ref import pad_topk
+
+# default extra quantized survivors rescored in fp32 before the final top-k
+# (HMGIConfig.delta_rescore_margin overrides per index)
+_RESCORE_MARGIN = 16
 
 
 class DeltaStore(NamedTuple):
-    vectors: jax.Array      # (cap, d) fp32
+    vectors: jax.Array      # (cap, d) fp32 — master rows (compaction, rescore)
+    qdata: jax.Array        # (cap, d) int8 — kernel-scan mirror (centered)
+    qvmin: jax.Array        # (cap,) fp32 — per-row affine dequant terms
+    qscale: jax.Array       # (cap,) fp32
     ids: jax.Array          # (cap,) int32, -1 empty
     count: jax.Array        # () int32
     version: jax.Array      # () int32 — MVCC write counter
@@ -34,6 +53,9 @@ class DeltaStore(NamedTuple):
 def init(capacity: int, dim: int, max_ids: int) -> DeltaStore:
     return DeltaStore(
         vectors=jnp.zeros((capacity, dim), jnp.float32),
+        qdata=jnp.zeros((capacity, dim), jnp.int8),
+        qvmin=jnp.zeros((capacity,), jnp.float32),
+        qscale=jnp.ones((capacity,), jnp.float32),
         ids=jnp.full((capacity,), -1, jnp.int32),
         count=jnp.zeros((), jnp.int32),
         version=jnp.zeros((), jnp.int32),
@@ -49,18 +71,28 @@ def _clip_ids(delta: DeltaStore, ids):
 @jax.jit
 def insert(delta: DeltaStore, vecs: jax.Array, new_ids: jax.Array) -> DeltaStore:
     """Appends a batch (drops silently if full — caller checks ``should_compact``
-    first). Clears tombstones for re-inserted ids."""
+    first). Rows are quantized here so reads never touch fp32 for the scan.
+    Clears tombstones for re-inserted ids."""
     cap = delta.vectors.shape[0]
     n = vecs.shape[0]
     base = delta.count
     slots = jnp.clip(base + jnp.arange(n), 0, cap - 1)
     fits = (base + jnp.arange(n)) < cap
+    v32 = vecs.astype(jnp.float32)
+    qv = quantize(v32, 8)
     vectors = delta.vectors.at[slots].set(
-        jnp.where(fits[:, None], vecs.astype(jnp.float32), delta.vectors[slots]))
+        jnp.where(fits[:, None], v32, delta.vectors[slots]))
+    qdata = delta.qdata.at[slots].set(
+        jnp.where(fits[:, None], qv.data, delta.qdata[slots]))
+    qvmin = delta.qvmin.at[slots].set(
+        jnp.where(fits, qv.vmin[:, 0], delta.qvmin[slots]))
+    qscale = delta.qscale.at[slots].set(
+        jnp.where(fits, qv.scale[:, 0], delta.qscale[slots]))
     ids = delta.ids.at[slots].set(jnp.where(fits, new_ids.astype(jnp.int32),
                                             delta.ids[slots]))
     ts = delta.tombstones.at[_clip_ids(delta, new_ids)].set(False)
-    return DeltaStore(vectors, ids, base + jnp.sum(fits.astype(jnp.int32)),
+    return DeltaStore(vectors, qdata, qvmin, qscale, ids,
+                      base + jnp.sum(fits.astype(jnp.int32)),
                       delta.version + 1, ts, delta.superseded)
 
 
@@ -77,21 +109,49 @@ def delete(delta: DeltaStore, dead_ids: jax.Array) -> DeltaStore:
     return delta._replace(tombstones=ts, version=delta.version + 1)
 
 
+@functools.partial(jax.jit, static_argnames=("k", "margin"))
+def _scan_delta(delta: DeltaStore, queries: jax.Array, *, k: int,
+                margin: int = _RESCORE_MARGIN):
+    """Kernel scan over the quantized delta rows + exact fp32 rescore of the
+    top (k + margin) survivors. chunk=1 makes the survivor ordering exact
+    over quantized scores (the delta is small; its scan output is tiny).
+    Results match brute force exactly whenever the delta holds ≤ k + margin
+    live rows, and up to int8 ordering error at the survivor boundary
+    otherwise — raise ``margin`` (cfg.delta_rescore_margin) toward
+    delta_capacity to trade scan output size for exactness."""
+    cap = delta.ids.shape[0]
+    valid = jnp.logical_and(delta.ids >= 0,
+                            ~delta.tombstones[_clip_ids(delta, delta.ids)])
+    k_scan = min(cap, k + margin)
+    qvals, qrows = scan_topk_quantized(
+        queries, delta.qdata, delta.qvmin, delta.qscale, valid, k=k_scan,
+        chunk=1, block_n=128)
+    rows = jnp.clip(qrows, 0, cap - 1)
+    vecs = delta.vectors[rows]                                # (Q, k_scan, d)
+    exact = jnp.einsum("qd,qrd->qr", queries.astype(jnp.float32),
+                       vecs)
+    exact = jnp.where(jnp.logical_and(qrows >= 0, jnp.isfinite(qvals)),
+                      exact, -jnp.inf)
+    kk = min(k, exact.shape[1])
+    vals, pos = jax.lax.top_k(exact, kk)
+    di = jnp.take_along_axis(delta.ids[rows], pos, axis=1)
+    di = jnp.where(jnp.isfinite(vals), di, -1)
+    return pad_topk(vals, di, k)
+
+
 def search_with_delta(index: IVFIndex, delta: DeltaStore, queries: jax.Array, *,
-                      n_probe: int, k: int) -> Tuple[jax.Array, jax.Array]:
-    """Stable-ANNS ∪ delta-brute-force, visibility-filtered, dedup-merged."""
+                      n_probe: int, k: int,
+                      rescore_margin: int = _RESCORE_MARGIN
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Stable-ANNS ∪ delta-kernel-scan, visibility-filtered, dedup-merged."""
     sv, si = ivf_mod.search(index, queries, n_probe=n_probe, k=k)
     dead = jnp.logical_or(delta.tombstones, delta.superseded)
     sv = jnp.where(dead[_clip_ids(delta, si)] | (si < 0), -jnp.inf, sv)
-    valid = jnp.logical_and(delta.ids >= 0,
-                            ~delta.tombstones[_clip_ids(delta, delta.ids)])
-    dv, di = ivf_mod.brute_force(delta.vectors, valid, delta.ids, queries, k=k)
-    if dv.shape[1] < k:
-        pad = k - dv.shape[1]
-        dv = jnp.pad(dv, ((0, 0), (0, pad)), constant_values=-jnp.inf)
-        di = jnp.pad(di, ((0, 0), (0, pad)), constant_values=-1)
+    dv, di = _scan_delta(delta, queries, k=k, margin=rescore_margin)
     # delta may hold multiple versions of an id (insert-after-insert): dedup
-    return ivf_mod.dedup_merge_topk(sv, si, dv, di, k)
+    mv, mi = ivf_mod.dedup_merge_topk(sv, si, dv, di, k)
+    # -inf slots are "no result": don't leak a masked (e.g. tombstoned) id
+    return mv, jnp.where(jnp.isfinite(mv), mi, -1)
 
 
 def should_compact(delta: DeltaStore, threshold: float = 0.5) -> bool:

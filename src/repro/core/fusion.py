@@ -8,10 +8,17 @@ embeddings), the graph term is the mean per-hop traversal mass from
 weights") shifts weight toward the vector side when the ANN margin is
 confident and toward the graph side when it is ambiguous (polysemy — the
 paper's Apple-fruit vs Apple-company case).
+
+Candidate-sparse formulation: fusion only ever needs the union of the ANNS
+seeds and the traversal frontier's strongest nodes, so ``fuse_topk_sparse``
+operates on an explicit (Q, C) candidate set — C ≪ N — with the graph
+normaliser passed in (the global per-query max, free from the frontier
+top-k). The dense ``fuse_topk`` is the special case "candidates = all N" and
+delegates to it.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,24 +44,49 @@ def adaptive_weights(vector_scores: jax.Array, *, base_wv: float = 0.6,
 
 
 def fuse(vector_sim: jax.Array, graph_score: jax.Array,
-         weights: FusionWeights) -> jax.Array:
+         weights: FusionWeights, *, graph_max: Optional[jax.Array] = None,
+         valid: Optional[jax.Array] = None) -> jax.Array:
     """Eq. 3 over per-candidate terms.
 
-    vector_sim: (Q, N) cosine similarity in [-1, 1] (−inf for non-candidates);
-    graph_score: (Q, N) mean per-hop mass (already (1/h)·Σ s_g).
+    vector_sim: (Q, C) cosine similarity in [-1, 1] (−inf for graph-only
+    candidates); graph_score: (Q, C) mean per-hop mass (already (1/h)·Σ s_g).
+    graph_max: (Q, 1) normaliser — per-query max over *all* nodes; defaults
+    to the max over the given candidates (correct whenever the candidate set
+    contains the strongest graph node, and always for the dense case).
+    valid: (Q, C) bool — False entries (padding, duplicates) fuse to −inf.
     """
     d_v = 0.5 * (1.0 - vector_sim)                    # cosine distance -> [0,1]
     s_v = 1.0 - d_v
-    g = graph_score / jnp.maximum(jnp.max(graph_score, axis=-1, keepdims=True), 1e-12)
+    gmax = (jnp.max(graph_score, axis=-1, keepdims=True)
+            if graph_max is None else graph_max)
+    g = graph_score / jnp.maximum(gmax, 1e-12)
     wv = jnp.asarray(weights.w_vector).reshape(-1, 1)
     wg = jnp.asarray(weights.w_graph).reshape(-1, 1)
     fused = wv * s_v + wg * g
-    return jnp.where(jnp.isfinite(vector_sim), fused, wg * g)
+    fused = jnp.where(jnp.isfinite(vector_sim), fused, wg * g)
+    if valid is not None:
+        fused = jnp.where(valid, fused, -jnp.inf)
+    return fused
+
+
+def fuse_topk_sparse(cand_sim: jax.Array, cand_graph: jax.Array,
+                     weights: FusionWeights, k: int, *,
+                     graph_max: Optional[jax.Array] = None,
+                     valid: Optional[jax.Array] = None
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Fused scores over an explicit candidate axis -> top-k.
+
+    Returns (scores (Q, k), positions (Q, k)) — positions index the candidate
+    axis; the caller owns the candidate-id mapping. Peak memory is O(Q·C),
+    independent of the corpus size."""
+    fused = fuse(cand_sim, cand_graph, weights, graph_max=graph_max,
+                 valid=valid)
+    vals, pos = jax.lax.top_k(fused, k)
+    return vals, pos
 
 
 def fuse_topk(vector_sim_full: jax.Array, graph_score: jax.Array,
               weights: FusionWeights, k: int) -> Tuple[jax.Array, jax.Array]:
-    """Fused scores -> top-k (ids are positions in the candidate axis)."""
-    fused = fuse(vector_sim_full, graph_score, weights)
-    vals, ids = jax.lax.top_k(fused, k)
-    return vals, ids
+    """Dense fusion: candidates = all N nodes (ids are node positions).
+    Delegates to the sparse path."""
+    return fuse_topk_sparse(vector_sim_full, graph_score, weights, k)

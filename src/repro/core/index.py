@@ -10,6 +10,7 @@ directly.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -25,10 +26,58 @@ from repro.core import traversal as trav_mod
 from repro.core import community as comm_mod
 from repro.core import rerank as rerank_mod
 from repro.core.cost_model import CostModel, DEFAULT_PLANS, QueryPlan, select_plan
-from repro.core.fusion import FusionWeights, adaptive_weights, fuse_topk
-from repro.core.graph_store import GraphStore
+from repro.core.fusion import FusionWeights, adaptive_weights, fuse_topk_sparse
+from repro.core.graph_store import GraphStore, from_edges as graph_from_edges
 from repro.core.partitioner import WorkloadStats, assign_topk
 from repro.core.quantization import AdaptiveQuantPolicy
+
+
+@functools.partial(jax.jit, static_argnames=("k_fuse", "frontier"))
+def _fuse_candidates(vs, vi, graph_scores, wv, wg, *, k_fuse: int,
+                     frontier: int):
+    """Candidate-sparse fusion stage (Eq. 3): fuse over the union of the
+    ANNS seeds ``vi`` and the ``frontier`` strongest traversal nodes instead
+    of scattering into a dense (Q, n_nodes) similarity array.
+
+    Exactness: a node outside the union that dense fusion would rank in its
+    top-k_fuse has no vector term, so its fused score is monotone in its
+    graph mass — but ≥ k_fuse non-seed nodes inside the frontier carry at
+    least as much mass (frontier = k_fuse + k_seed ≥ k_fuse + #seeds), so it
+    can never displace the union's top-k_fuse. The graph normaliser is the
+    frontier's top-1 = the global max. Peak memory is O(Q·C), C = k_seed +
+    frontier — independent of n_nodes."""
+    # barrier: XLA:CPU otherwise re-materialises the frontier sort inside
+    # every consumer fusion of its outputs (~40x fusion-stage slowdown)
+    g_vals, g_ids = jax.lax.optimization_barrier(
+        jax.lax.top_k(graph_scores, frontier))                    # (Q, F)
+    n_nodes = graph_scores.shape[1]
+    # drop repeated seed ids (NSW-refine merges can re-surface an IVF hit):
+    # keep the first = highest-scored occurrence (the dense scatter's
+    # duplicate-write order was unspecified; highest-score is the one
+    # deterministic choice that never understates a seed)
+    ks = vi.shape[1]
+    earlier = jnp.tril(jnp.ones((ks, ks), bool), k=-1)
+    seed_dup = jnp.any((vi[:, :, None] == vi[:, None, :]) & earlier[None],
+                       axis=-1)                                   # (Q, ks)
+    seed_valid = jnp.logical_and(vi >= 0, ~seed_dup)
+    g_at_vi = jnp.take_along_axis(
+        graph_scores, jnp.clip(vi, 0, n_nodes - 1).astype(jnp.int32), axis=1)
+    # frontier entries already present as seeds fuse through the seed copy
+    dup = jnp.any(g_ids[:, :, None] == jnp.where(seed_valid, vi, -2)[:, None, :],
+                  axis=-1)                                        # (Q, F)
+    cand_ids = jnp.concatenate([jnp.where(seed_valid, vi, -1), g_ids], axis=1)
+    cand_sim = jnp.concatenate(
+        [jnp.where(seed_valid, vs, -jnp.inf),
+         jnp.full_like(g_vals, -jnp.inf)], axis=1)
+    cand_graph = jnp.concatenate(
+        [jnp.where(seed_valid, g_at_vi, 0.0),
+         jnp.where(dup, 0.0, g_vals)], axis=1)
+    cand_valid = jnp.concatenate([seed_valid, ~dup], axis=1)
+    w = FusionWeights(wv, wg)
+    fvals, fpos = fuse_topk_sparse(cand_sim, cand_graph, w, k_fuse,
+                                   graph_max=g_vals[:, :1], valid=cand_valid)
+    fids = jnp.take_along_axis(cand_ids, fpos, axis=1)
+    return fvals, fids
 
 
 @dataclasses.dataclass
@@ -97,10 +146,7 @@ class HMGIIndex:
             src, dst = edges[0], edges[1]
             et = edges[2] if len(edges) > 2 else None
             ew = edges[3] if len(edges) > 3 else None
-            self.graph = GraphStore.from_edges(n_nodes, src, dst, et, ew) \
-                if hasattr(GraphStore, "from_edges") else None
-            from repro.core.graph_store import from_edges
-            self.graph = from_edges(n_nodes, src, dst, et, ew)
+            self.graph = graph_from_edges(n_nodes, src, dst, et, ew)
             self.communities = comm_mod.louvain_one_level(
                 n_nodes, np.asarray(src), np.asarray(dst),
                 np.ones(len(src)) if ew is None else np.asarray(ew))
@@ -127,7 +173,8 @@ class HMGIIndex:
                                     min(n_probe, m.ivf.n_partitions))
             m.workload.record(np.asarray(probes))
         scores, ids = delta_mod.search_with_delta(
-            m.ivf, m.delta, q, n_probe=min(n_probe, m.ivf.n_partitions), k=k)
+            m.ivf, m.delta, q, n_probe=min(n_probe, m.ivf.n_partitions), k=k,
+            rescore_margin=self.cfg.delta_rescore_margin)
         if self.cfg.use_nsw_refine and m.nsw is not None:
             ns, ni = nsw_mod.search(m.nsw, q, ef=self.cfg.nsw_ef, k=k)
             ni = jnp.where(ni >= 0, m.ids[jnp.clip(ni, 0, m.ids.shape[0] - 1)], -1)
@@ -171,17 +218,17 @@ class HMGIIndex:
         graph_scores = trav_mod.multi_hop_batch(
             g, vi, vs, n_hops=n_hops, edge_type_mask=edge_type_mask)   # (Q, N)
 
-        # stage 3: fusion (Eq. 3) over the union candidate set
-        sim_full = jnp.full((q.shape[0], self.n_nodes), -jnp.inf)
-        rows = jnp.arange(q.shape[0])[:, None]
-        sim_full = sim_full.at[rows, jnp.clip(vi, 0, self.n_nodes - 1)].set(
-            jnp.where(vi >= 0, vs, -jnp.inf))
+        # stage 3: candidate-sparse fusion (Eq. 3) over seeds ∪ frontier —
+        # never a dense (Q, n_nodes) similarity scatter
         w = (adaptive_weights(vs, base_wv=cfg.w_vector, base_wg=cfg.w_graph)
              if cfg.adaptive_weights else
              FusionWeights(jnp.full((q.shape[0],), cfg.w_vector),
                            jnp.full((q.shape[0],), cfg.w_graph)))
         k_fuse = max(k, min(4 * k, self.n_nodes))
-        fvals, fids = fuse_topk(sim_full, graph_scores, w, k_fuse)
+        frontier = int(min(self.n_nodes, k_fuse + k_seed))
+        fvals, fids = _fuse_candidates(vs, vi, graph_scores,
+                                       w.w_vector, w.w_graph,
+                                       k_fuse=k_fuse, frontier=frontier)
 
         # stage 4: optional sparse-dense rerank
         if use_rerank and self.sparse_docs is not None and q_terms is not None:
@@ -199,11 +246,16 @@ class HMGIIndex:
         ids32 = jnp.asarray(ids, jnp.int32)
         ids_np = np.asarray(ids32)
         existing_np = np.asarray(m.ids)
-        row_of = {int(i): r for r, i in enumerate(existing_np)}
-        upd_mask = np.array([int(i) in row_of for i in ids_np])
+        # vectorized id -> row lookup (no host loop over the corpus)
+        order = np.argsort(existing_np, kind="stable")
+        sorted_ids = existing_np[order]
+        pos = np.searchsorted(sorted_ids, ids_np)
+        pos_c = np.minimum(pos, max(existing_np.size - 1, 0))
+        upd_mask = (sorted_ids[pos_c] == ids_np) if existing_np.size \
+            else np.zeros(ids_np.shape, bool)
         if upd_mask.any():
             m.delta = delta_mod.supersede(m.delta, ids32[jnp.asarray(upd_mask)])
-            rows = np.array([row_of[int(i)] for i in ids_np[upd_mask]])
+            rows = order[pos_c[upd_mask]]
             m.vectors = m.vectors.at[jnp.asarray(rows)].set(v[jnp.asarray(upd_mask)])
         if (~upd_mask).any():
             sel = jnp.asarray(~upd_mask)
@@ -246,7 +298,10 @@ class HMGIIndex:
         out = {}
         for mod, m in self.modalities.items():
             out[mod] = m.ivf.nbytes
-            out[f"{mod}_delta"] = int(m.delta.vectors.size * 4)
+            out[f"{mod}_delta"] = int(m.delta.vectors.size * 4
+                                      + m.delta.qdata.size
+                                      + (m.delta.qvmin.size
+                                         + m.delta.qscale.size) * 4)
         if self.graph is not None:
             out["graph"] = self.graph.nbytes
         out["total"] = sum(out.values())

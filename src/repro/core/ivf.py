@@ -1,13 +1,26 @@
 """Partitioned ANNS — the TPU-native realisation of the paper's search layer.
 
 Two-level search (DESIGN.md §2.1): centroid scoring (small matmul) selects
-``n_probe`` partitions per query; probed partitions are gathered and scored
-as dense (dequantised) matmuls; exact top-k over the probed candidates.
-Cost ∝ n_probe·N/K + K instead of N — the paper's sub-linear claim, with
-every FLOP on the MXU.
+``n_probe`` partitions per query; probed partitions are scored over their
+*quantized* rows; exact top-k over the probed candidates. Cost ∝
+n_probe·N/K + K instead of N — the paper's sub-linear claim, with every FLOP
+on the MXU.
 
 Storage is fixed-shape: (K, cap, d) quantized buckets + (K, cap) ids with -1
 sentinels, so search jits once per (K, cap, n_probe, k) and shards cleanly.
+
+Slab layout & the fused kernel. ``IVFIndex.slab_view`` exposes the buckets as
+one flattened (K·cap, d) int8 slab with per-row vmin/scale and -1 ids on
+empty slots; partition ``p`` is the contiguous row block
+[p·cap, (p+1)·cap). The probe path gathers each query's probed blocks
+(int8 — never dequantized in HBM) and hands them to the fused Pallas kernel
+(``kernels/ivf_topk``), which folds the affine dequant into the scan matmul
+and reduces to per-chunk survivors; an exact rescore of the top-k chunks
+recovers the exact top-k. ``impl`` selects the path: "kernel" (int8 indexes),
+"einsum" (the legacy fp32 dequant-then-einsum, kept for 4/16-bit storage and
+as the benchmark baseline), or "auto" (kernel whenever bits == 8). Off-TPU
+the kernel runs under ``interpret=True``, probed once on the first kernel
+call (see ``kernels/ivf_topk/ops._interpret_mode``).
 
 ``search_sharded`` distributes over the ("pod","data") mesh axes: the corpus
 is row-sharded (each shard owns its own partitioning of its rows), every
@@ -24,8 +37,42 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+try:                                       # newer jax spells it jax.shard_map
+    _shard_map = jax.shard_map
+except AttributeError:                     # 0.4.x: jax.experimental
+    from jax.experimental.shard_map import shard_map as _shard_map
+# the replication-check kwarg was renamed check_rep -> check_vma on a
+# different version boundary than the alias promotion: probe the signature
+import inspect as _inspect
+_SHARD_MAP_KW = (
+    {"check_vma": False}
+    if "check_vma" in _inspect.signature(_shard_map).parameters
+    else {"check_rep": False})
+
 from repro.core import partitioner
 from repro.core.quantization import QuantizedVectors, quantize
+from repro.kernels.ivf_topk.ops import (_interpret_mode,
+                                        scan_topk_quantized_batched)
+
+# probe-path kernel tiling: chunk-of-16 survivors, 512-row blocks (see
+# kernels/ivf_topk/ivf_topk.py for the VMEM accounting)
+_CHUNK = 16
+_BLOCK_N = 512
+
+
+def _probe_block_n(m: int, qb: int, d: int) -> int:
+    """Row-block size for the probe scan. On TPU the tile keeps the per-step
+    data block — int8 plus its in-register fp32 cast, 5 bytes/element over
+    (qb, bn, d) — near 8 MB of VMEM, so the (qb, P, cap, d) fp32 intermediate
+    the einsum path writes to HBM never exists. Under the interpreter each
+    grid step costs fixed overhead and padding to a block multiple is pure
+    waste (P·cap is rarely block-aligned), so the whole per-query slab runs
+    as one step, padded only to the chunk size."""
+    if _interpret_mode():
+        return ((m + _CHUNK - 1) // _CHUNK) * _CHUNK
+    budget = 8 * 1024 * 1024
+    bn = budget // (5 * max(qb, 1) * max(d, 1))
+    return max(_CHUNK, min(_BLOCK_N, (bn // _CHUNK) * _CHUNK))
 
 
 @functools.partial(
@@ -55,6 +102,16 @@ class IVFIndex:
     def nbytes(self) -> int:
         return sum(int(a.size) * a.dtype.itemsize
                    for a in (self.centroids, self.data, self.vmin, self.scale, self.ids))
+
+    def slab_view(self):
+        """Flattened row-major view: (K·cap, d') data, (K·cap,) vmin/scale/ids.
+
+        Partition p occupies the contiguous rows [p·cap, (p+1)·cap), so a
+        probe list maps to row blocks the fused kernel consumes directly.
+        Reshape-only — no copy, no dequantization."""
+        k, cap = self.ids.shape
+        return (self.data.reshape(k * cap, -1), self.vmin.reshape(-1),
+                self.scale.reshape(-1), self.ids.reshape(-1))
 
     def _replace(self, **kw) -> "IVFIndex":
         return dataclasses.replace(self, **kw)
@@ -113,22 +170,59 @@ def _dequant_rows(index: IVFIndex, rows_data, rows_vmin, rows_scale):
     return q * rows_scale[..., None] + rows_vmin[..., None]
 
 
-@functools.partial(jax.jit, static_argnames=("n_probe", "k", "query_block"))
+def _resolve_impl(index: IVFIndex, impl: str) -> str:
+    if impl == "auto":
+        return "kernel" if index.bits == 8 else "einsum"
+    if impl == "kernel" and index.bits != 8:
+        raise ValueError(f"kernel probe path needs int8 storage, bits={index.bits}")
+    return impl
+
+
+@functools.partial(jax.jit, static_argnames=("n_probe", "k", "query_block", "impl"))
 def search(index: IVFIndex, queries: jax.Array, *, n_probe: int, k: int,
-           query_block: int = 64) -> Tuple[jax.Array, jax.Array]:
-    """Returns (scores (Q, k), ids (Q, k)) — dot-product similarity, descending."""
+           query_block: int = 64, impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    """Returns (scores (Q, k), ids (Q, k)) — dot-product similarity, descending.
+
+    impl="kernel" (default for int8) scans the probed slab blocks with the
+    fused Pallas kernel: int8 rows all the way into the scoring matmul, no
+    (qb, P, cap, d) fp32 dequant ever materialised in HBM. impl="einsum" is
+    the legacy gather-dequant-einsum path (4/16-bit storage, baseline)."""
+    impl = _resolve_impl(index, impl)
     q = queries.astype(jnp.float32)
     nq = q.shape[0]
     n_probe = min(n_probe, index.n_partitions)
     probe, _ = partitioner.assign_topk(q, index.centroids, n_probe)   # (Q, P)
+    cap = index.capacity
 
     qb = min(query_block, nq)
     pad = (-nq) % qb
     qp = jnp.pad(q, ((0, pad), (0, 0)))
     pp = jnp.pad(probe, ((0, pad), (0, 0)))
     nblocks = qp.shape[0] // qb
+    slab_data, slab_vmin, slab_scale, slab_ids = index.slab_view()
 
-    def block(carry, i):
+    def block_kernel(carry, i):
+        qs = jax.lax.dynamic_slice_in_dim(qp, i * qb, qb, axis=0)      # (qb, d)
+        ps = jax.lax.dynamic_slice_in_dim(pp, i * qb, qb, axis=0)      # (qb, P)
+        # probed partitions = contiguous row blocks of the flat slab
+        rows = (ps[:, :, None] * cap
+                + jnp.arange(cap, dtype=jnp.int32)[None, None, :])
+        rows = rows.reshape(qb, -1)                                     # (qb, M)
+        bdata = slab_data[rows]                                         # int8!
+        bmin = slab_vmin[rows]
+        bscale = slab_scale[rows]
+        bids = slab_ids[rows]                                           # (qb, M)
+        vals, pos = scan_topk_quantized_batched(
+            qs, bdata, bmin, bscale, bids >= 0, k=k,
+            chunk=_CHUNK, block_n=_probe_block_n(rows.shape[1], qb,
+                                                 qs.shape[1]))
+        ids = jnp.where(pos >= 0,
+                        jnp.take_along_axis(
+                            bids, jnp.clip(pos, 0, rows.shape[1] - 1), axis=1),
+                        -1)
+        return carry, (vals, ids)
+
+    def block_einsum(carry, i):
         qs = jax.lax.dynamic_slice_in_dim(qp, i * qb, qb, axis=0)      # (qb, d)
         ps = jax.lax.dynamic_slice_in_dim(pp, i * qb, qb, axis=0)      # (qb, P)
         bdata = index.data[ps]                                          # (qb,P,cap,d')
@@ -143,6 +237,7 @@ def search(index: IVFIndex, queries: jax.Array, *, n_probe: int, k: int,
         vals, pos = jax.lax.top_k(flat, k)
         return carry, (vals, jnp.take_along_axis(fids, pos, axis=1))
 
+    block = block_kernel if impl == "kernel" else block_einsum
     _, (vals, ids) = jax.lax.scan(block, None, jnp.arange(nblocks))
     return vals.reshape(-1, k)[:nq], ids.reshape(-1, k)[:nq]
 
@@ -184,16 +279,18 @@ def dedup_merge_topk(scores_a, ids_a, scores_b, ids_b, k: int):
 
 
 def search_sharded(index: IVFIndex, queries: jax.Array, mesh, *, n_probe: int,
-                   k: int, query_block: int = 64):
+                   k: int, query_block: int = 64, impl: str = "auto"):
     """Distributed search: index leaves carry a leading shard dim (S, ...)
     row-sharded over ("pod","data"); queries replicated; local top-k then
-    all-gather(k)+merge. Local ids must already be globally unique."""
+    all-gather(k)+merge. Local ids must already be globally unique. The local
+    scan uses the same kernel/einsum path selection as ``search``."""
     data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
 
     def local(cent, data, vmin, scale, ids, counts, q):
         loc = IVFIndex(cent[0], data[0], vmin[0], scale[0], ids[0], counts[0],
                        index.bits)
-        vals, lids = search(loc, q, n_probe=n_probe, k=k, query_block=query_block)
+        vals, lids = search(loc, q, n_probe=n_probe, k=k,
+                            query_block=query_block, impl=impl)
         allv = jax.lax.all_gather(vals, data_axes, axis=0, tiled=False)   # (S,Q,k)
         alli = jax.lax.all_gather(lids, data_axes, axis=0, tiled=False)
         ns = allv.shape[0]
@@ -203,12 +300,12 @@ def search_sharded(index: IVFIndex, queries: jax.Array, mesh, *, n_probe: int,
         return mv, jnp.take_along_axis(alli, pos, axis=1)
 
     shard_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(shard_spec, shard_spec, shard_spec, shard_spec, shard_spec,
                   shard_spec, P(None, None)),
         out_specs=(P(None, None), P(None, None)),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
     return fn(index.centroids, index.data, index.vmin, index.scale, index.ids,
               index.counts, queries)

@@ -60,7 +60,6 @@ def seeds_from_topk(n_nodes: int, ids: jax.Array, scores: jax.Array) -> jax.Arra
     Scores are shifted to be non-negative and normalised so traversal mass is
     comparable across queries (invalid ids < 0 are dropped)."""
     valid = ids >= 0
-    s = jnp.where(valid, scores, jnp.inf)
     smin = jnp.min(jnp.where(valid, scores, jnp.inf))
     w = jnp.where(valid, scores - jnp.where(jnp.isfinite(smin), smin, 0.0) + 1e-6, 0.0)
     w = w / jnp.maximum(jnp.sum(w), 1e-12)

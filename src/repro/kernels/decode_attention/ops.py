@@ -9,8 +9,12 @@ import jax.numpy as jnp
 from repro.kernels.decode_attention.decode_attention import decode_attention_pallas
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+@functools.lru_cache(maxsize=None)
+def _interpret_mode() -> bool:
+    """Probed once, lazily (first kernel call): Mosaic needs a TPU; every
+    other backend interprets. Deferred past import so app-level JAX setup
+    (jax.distributed.initialize, platform selection) runs first."""
+    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("block_s", "interpret"))
@@ -19,7 +23,7 @@ def decode_attention(q, k, v, valid, *, block_s: int = 512,
     """q (B, H, hd) with H = Hkv·G (GQA); k/v (B, S, Hkv, hd); valid (B, S).
 
     Returns (B, H, hd)."""
-    interp = _on_cpu() if interpret is None else interpret
+    interp = _interpret_mode() if interpret is None else interpret
     b, h, hd = q.shape
     hkv = k.shape[2]
     g = h // hkv

@@ -1,1 +1,2 @@
-from repro.kernels.ivf_topk.ops import scan_topk_quantized
+from repro.kernels.ivf_topk.ops import (scan_topk_quantized,
+                                        scan_topk_quantized_batched)

@@ -15,6 +15,19 @@ VMEM budget per grid step (defaults bq=256, bn=512, d≤1024, fp32 scores):
   Q block 256·d·4 ≤ 1 MB, D block 512·d ≤ 0.5 MB (int8), scores 256·512·4
   = 0.5 MB, outputs 2·256·(512/chunk)·4 — comfortably inside 16 MB VMEM,
   MXU dims (256×d)·(d×512) aligned to the 128-lane systolic array.
+
+Two entry points share the kernel math:
+
+  scan_topk_pallas         — one corpus slab shared by every query (the
+                             delta-store scan, monolithic baselines).
+  scan_topk_pallas_batched — per-query slabs (Q, M, d): the IVF probe path,
+                             where each query gathered its own probed
+                             partitions as contiguous row blocks of the
+                             flattened (K·cap, d) index slab. The grid runs
+                             over row blocks only; the query axis stays inside
+                             one batched dot_general per step, so interpret
+                             mode pays O(M/block_n) interpreter steps, not
+                             O(Q·M/block_n).
 """
 from __future__ import annotations
 
@@ -94,3 +107,75 @@ def scan_topk_pallas(queries, data_i8, vmin, scale, bias=None, *,
         out_shape=out_shapes,
         interpret=interpret,
     )(queries.astype(jnp.float32), qsum, data_i8, aff, scale2, bias2)
+
+
+def _kernel_batched(q_ref, qsum_ref, d_ref, aff_ref, scale_ref, bias_ref,
+                    smax_ref, sarg_ref, *, chunk: int, block_n: int):
+    # q_ref:    (bq, d)          fp32 — query block (resident across grid)
+    # qsum_ref: (bq, 1)          fp32 — per-query Σ_d q
+    # d_ref:    (bq, bn, d)      int8 — each query's own slab rows
+    # aff/scale/bias_ref: (bq, bn) fp32 — per-(query, row) dequant terms
+    # smax/sarg_ref: (bq, bn/chunk) — per-chunk (max, argmax) output block
+    n = pl.program_id(0)
+    q = q_ref[...][:, None, :]                                        # (bq,1,d)
+    d = d_ref[...].astype(jnp.float32)                                # (bq,bn,d)
+    dots = jax.lax.dot_general(q, d, (((2,), (2,)), ((0,), (0,))),
+                               preferred_element_type=jnp.float32)[:, 0, :]
+    scores = (dots * scale_ref[...] + qsum_ref[...] * aff_ref[...]
+              + bias_ref[...])                                        # (bq, bn)
+    bq = scores.shape[0]
+    nchunks = block_n // chunk
+    sc = scores.reshape(bq, nchunks, chunk)
+    smax_ref[...] = jnp.max(sc, axis=-1)
+    base = n * block_n + jnp.arange(nchunks, dtype=jnp.int32) * chunk
+    sarg_ref[...] = jnp.argmax(sc, axis=-1).astype(jnp.int32) + base[None, :]
+
+
+def scan_topk_pallas_batched(queries, data_i8, vmin, scale, bias=None, *,
+                             chunk: int = 16, block_n: int = 512,
+                             interpret: bool = False):
+    """Per-query-slab variant: queries (Q, d) fp32; data_i8 (Q, M, d) int8
+    (centered at -128); vmin/scale/bias (Q, M) fp32. Returns
+    (chunk_max (Q, M/chunk), chunk_arg) — chunk_arg indexes rows of each
+    query's own slab.
+
+    VMEM per grid step is Q·block_n·d·5 bytes for the data block — int8
+    storage plus the fp32 cast the matmul consumes (the whole query axis
+    rides along). The probe path sizes block_n from an ~8 MB budget (see
+    ``core/ivf.py:_probe_block_n``); callers picking block_n by hand should
+    keep Q·block_n·d·5 well under the 16 MB/core VMEM.
+    """
+    qn, d = queries.shape
+    m = data_i8.shape[1]
+    assert m % block_n == 0 and block_n % chunk == 0, (m, block_n, chunk)
+    nblocks = m // block_n
+    nchunks_total = m // chunk
+    per_block = block_n // chunk
+
+    qsum = jnp.sum(queries.astype(jnp.float32), axis=-1, keepdims=True)
+    aff = 128.0 * scale + vmin                                        # (Q, M)
+    bias2 = (jnp.zeros((qn, m), jnp.float32) if bias is None
+             else bias.astype(jnp.float32))
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((qn, nchunks_total), jnp.float32),
+        jax.ShapeDtypeStruct((qn, nchunks_total), jnp.int32),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_batched, chunk=chunk, block_n=block_n),
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((qn, d), lambda i: (0, 0)),                  # queries
+            pl.BlockSpec((qn, 1), lambda i: (0, 0)),                  # qsum
+            pl.BlockSpec((qn, block_n, d), lambda i: (0, i, 0)),      # data
+            pl.BlockSpec((qn, block_n), lambda i: (0, i)),            # affine
+            pl.BlockSpec((qn, block_n), lambda i: (0, i)),            # scale
+            pl.BlockSpec((qn, block_n), lambda i: (0, i)),            # bias
+        ],
+        out_specs=(
+            pl.BlockSpec((qn, per_block), lambda i: (0, i)),
+            pl.BlockSpec((qn, per_block), lambda i: (0, i)),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(queries.astype(jnp.float32), qsum, data_i8, aff, scale, bias2)

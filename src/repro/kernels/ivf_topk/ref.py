@@ -18,6 +18,32 @@ def scan_topk_ref(queries, data_i8, vmin, scale, *, chunk: int = 128):
     return smax, sarg
 
 
+def scan_topk_ref_batched(queries, data_i8, vmin, scale, *, chunk: int = 16):
+    """Per-query-slab oracle: dequantize fully, exact scores, per-chunk
+    (max, argmax). queries (Q, d); data_i8 (Q, M, d); vmin/scale (Q, M)."""
+    q = queries.astype(jnp.float32)
+    e = ((data_i8.astype(jnp.float32) + 128.0) * scale[..., None]
+         + vmin[..., None])                                  # (Q, M, d)
+    scores = jnp.einsum("qd,qmd->qm", q, e)                  # (Q, M)
+    qn, m = scores.shape
+    nchunks = m // chunk
+    sc = scores.reshape(qn, nchunks, chunk)
+    smax = jnp.max(sc, axis=-1)
+    sarg = jnp.argmax(sc, axis=-1).astype(jnp.int32) + \
+        (jnp.arange(nchunks, dtype=jnp.int32) * chunk)[None, :]
+    return smax, sarg
+
+
+def pad_topk(vals, ids, k: int):
+    """Pads (Q, kk ≤ k) descending top-k lists to width k with (-inf, -1) —
+    the one sentinel convention every scan/merge path shares."""
+    kk = vals.shape[-1]
+    if kk < k:
+        vals = jnp.pad(vals, ((0, 0), (0, k - kk)), constant_values=-jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, k - kk)), constant_values=-1)
+    return vals, ids
+
+
 def topk_from_chunks(chunk_max, chunk_arg, k: int):
     """Exact top-k over the chunk survivors (second stage, tiny).
 
@@ -26,8 +52,4 @@ def topk_from_chunks(chunk_max, chunk_arg, k: int):
     kk = min(k, chunk_max.shape[-1])
     vals, pos = jax.lax.top_k(chunk_max, kk)
     ids = jnp.take_along_axis(chunk_arg, pos, axis=-1)
-    if kk < k:
-        pad = k - kk
-        vals = jnp.pad(vals, ((0, 0), (0, pad)), constant_values=-jnp.inf)
-        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
-    return vals, ids
+    return pad_topk(vals, ids, k)

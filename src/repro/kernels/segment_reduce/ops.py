@@ -9,8 +9,12 @@ import jax.numpy as jnp
 from repro.kernels.segment_reduce.segment_reduce import segment_sum_pallas
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+@functools.lru_cache(maxsize=None)
+def _interpret_mode() -> bool:
+    """Probed once, lazily (first kernel call): Mosaic needs a TPU; every
+    other backend interprets. Deferred past import so app-level JAX setup
+    (jax.distributed.initialize, platform selection) runs first."""
+    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("n_segments", "block_n", "block_e",
@@ -18,7 +22,7 @@ def _on_cpu() -> bool:
 def segment_sum_mm(messages, seg_ids, n_segments: int, *, block_n: int = 512,
                    block_e: int = 1024, interpret: bool | None = None):
     """messages (E, d) -> (n_segments, d); ids < 0 or >= n_segments drop."""
-    interp = _on_cpu() if interpret is None else interpret
+    interp = _interpret_mode() if interpret is None else interpret
     e, d = messages.shape
     block_n = min(block_n, max(128, n_segments))
     block_e = min(block_e, max(128, e))
