@@ -1,0 +1,79 @@
+"""Attribute-filtered search benchmark: predicate pushdown vs
+oversample-then-post-filter across a selectivity sweep.
+
+For each selectivity the same where-clause is executed twice with the
+planner pinned to each strategy (the planner is a cost decision only — both
+return identical results, see tests/test_filtered_search.py). The expected
+shape: at low selectivity the oversampled width k/sel explodes and pushdown
+wins decisively; near selectivity 1 the small constant oversample edges out
+the per-row mask gather. The ``auto`` row reports what the planner picked.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from benchmarks.common import build_hmgi, load_corpus, make_queries, primary_mod, timeit
+from repro.core.cost_model import estimate_selectivity
+
+SELECTIVITIES = (0.01, 0.1, 0.5, 0.9)
+
+
+def _timeit_interleaved(fns, trials=10, warmup=3):
+    """Median wall seconds per fn, the variants interleaved trial-by-trial —
+    this container's wall clock drifts up to 2x between runs, so sequential
+    per-variant timing regularly inverts close ratios."""
+    for fn in fns:
+        for _ in range(warmup):
+            jax.block_until_ready(fn())
+    ts = [[] for _ in fns]
+    for _ in range(trials):
+        for i, fn in enumerate(fns):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts[i].append(time.perf_counter() - t0)
+    return [float(np.median(t)) for t in ts]
+
+
+def run(report):
+    name = "sift1b-s"
+    corpus = load_corpus(name)
+    mod = primary_mod(name)
+    idx = build_hmgi(corpus, bits=8, n_partitions=32, n_probe=8)
+    rng = np.random.default_rng(9)
+    # uniform 0..999 bucket: where ("bucket" < 1000*sel) hits sel exactly-ish
+    idx.set_attributes({"bucket": rng.integers(0, 1000, corpus.n_nodes)})
+    q = make_queries(corpus, mod, n=32)
+    k = 10
+    cfg0 = idx.cfg
+
+    def forced(mode_sel, where):
+        def fn():
+            idx.cfg = cfg0.replace(filter_prefilter_max_sel=mode_sel)
+            try:
+                return idx.search(q, mod, k=k, where=where)
+            finally:
+                idx.cfg = cfg0
+        return fn
+
+    for sel in SELECTIVITIES:
+        where = ("bucket", "<", max(1, int(1000 * sel)))
+        sel_true = estimate_selectivity(idx.attributes.node_pass(where))
+        t_push, t_over = _timeit_interleaved(
+            [forced(1.0, where), forced(0.0, where)])
+        idx.search(q, mod, k=k, where=where)
+        auto = idx._metrics["filter_mode"]
+        report(f"filtered_pushdown_sel{sel}", t_push / len(q) * 1e6,
+               f"sel={sel_true:.3f} speedup_vs_postfilter="
+               f"{t_over / t_push:.2f}x")
+        report(f"filtered_postfilter_sel{sel}", t_over / len(q) * 1e6,
+               f"sel={sel_true:.3f} planner_pick={auto}")
+
+    # filtered hybrid query end to end (pushdown + masked traversal + fusion)
+    where = ("bucket", "<", 100)
+    t_h = timeit(lambda: idx.hybrid_search(q, mod, k=k, n_hops=2, where=where),
+                 trials=3)
+    report("filtered_hybrid_e2e", t_h / len(q) * 1e6,
+           f"sel=0.1 n_nodes={corpus.n_nodes}")

@@ -6,6 +6,7 @@
   scaling       — §4.5 sub-linear query scaling
   kernels_bench — Pallas kernel accounting (incl. kernel-vs-einsum probe path)
   hybrid_bench  — hybrid query: sparse vs dense fusion, end-to-end latency
+  filtered_bench — attribute-filtered search: pushdown vs post-filter sweep
 
 Prints ``name,us_per_call,derived`` CSV.
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module>]
@@ -21,7 +22,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["paper_tables", "ablations", "scaling",
-                             "kernels_bench", "hybrid_bench"])
+                             "kernels_bench", "hybrid_bench",
+                             "filtered_bench"])
     args = ap.parse_args()
 
     rows = []
@@ -30,11 +32,11 @@ def main() -> None:
         rows.append((name, us_per_call, derived))
         print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
-    from benchmarks import (ablations, hybrid_bench, kernels_bench,
-                            paper_tables, scaling)
+    from benchmarks import (ablations, filtered_bench, hybrid_bench,
+                            kernels_bench, paper_tables, scaling)
     mods = {"paper_tables": paper_tables, "ablations": ablations,
             "scaling": scaling, "kernels_bench": kernels_bench,
-            "hybrid_bench": hybrid_bench}
+            "hybrid_bench": hybrid_bench, "filtered_bench": filtered_bench}
     selected = [mods[args.only]] if args.only else list(mods.values())
 
     print("name,us_per_call,derived")

@@ -222,4 +222,7 @@ class HMGIConfig(ArchConfig):
     cost_alpha: float = 1.0
     cost_beta: float = 0.01
     cost_gamma: float = 0.1
+    # attribute-filtered search (predicate pushdown vs oversampling)
+    filter_prefilter_max_sel: float = 0.5  # pushdown when sel <= this
+    filter_oversample: float = 3.0         # initial k inflation when not
     dtype: str = "float32"

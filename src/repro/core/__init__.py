@@ -1,2 +1,3 @@
 # The paper's primary contribution: the Hybrid Multimodal Graph Index.
 from repro.core.index import HMGIIndex, ModalityIndex
+from repro.core.graph_store import NodeAttributes

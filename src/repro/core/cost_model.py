@@ -78,3 +78,52 @@ def select_plan(model: CostModel, *, n: int, d: int, min_recall: float,
     if not feasible:
         feasible = [max(plans, key=lambda p: p.expected_recall)]
     return min(feasible, key=lambda p: model.cost(n, d, p.n_hops, p.n_probe))
+
+
+# ---------------------------------------------------------------------------
+# attribute-filtered search planning (pre-filter pushdown vs oversample)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FilteredScanPlan:
+    """How to serve "top-k WHERE pred": push the predicate into the scan's
+    validity mask ("prefilter") or run the unfiltered scan with an inflated
+    k and post-filter ("oversample")."""
+    mode: str                 # "prefilter" | "oversample"
+    k_scan: int               # top-k width handed to the underlying scan
+    selectivity: float
+
+
+def estimate_selectivity(node_pass) -> float:
+    """Fraction of rows a predicate admits — one mean over the (N,) mask the
+    predicate compiler already produced (exact, not a sketch: attributes are
+    resident on device and the mask is reused by every scan stage)."""
+    return float(np.mean(np.asarray(node_pass)))
+
+
+def plan_filtered_scan(selectivity: float, k: int, *, n_rows: int,
+                       oversample: float = 3.0,
+                       prefilter_max_sel: float = 0.5) -> FilteredScanPlan:
+    """Selectivity-aware choice (the NHQ observation, inverted per regime):
+
+    - Low selectivity (few rows pass): post-filtering is hopeless — the
+      unfiltered top-k' must be ~k/sel wide before k survivors show up, so
+      its top-k sort cost (and exactness risk) blows up as 1/sel. Pushdown
+      scans the same rows but spends every top-k slot on qualifying rows.
+    - Selectivity near 1: almost everything passes; a small constant
+      oversample (k' = oversample·k/sel) already contains the filtered top-k
+      with high probability, and skips the per-row mask gather the pushdown
+      folds into the scan's valid lane.
+
+    The crossover is where the oversampled width stops being "small":
+    k/sel·oversample ≳ the pushdown's masked width ⇒ prefilter below
+    ``prefilter_max_sel``, oversample above. k_scan for oversampling is the
+    *initial* width — exactness-sensitive callers double it until k
+    survivors are found (see HMGIIndex.search)."""
+    sel = float(min(max(selectivity, 0.0), 1.0))
+    if sel <= 0.0:
+        return FilteredScanPlan("prefilter", k, 0.0)
+    if sel <= prefilter_max_sel:
+        return FilteredScanPlan("prefilter", k, sel)
+    k_scan = min(n_rows, max(k + 1, int(math.ceil(k * oversample / sel))))
+    return FilteredScanPlan("oversample", k_scan, sel)

@@ -3,13 +3,17 @@ fixed-capacity buffer; queries hybridise ANNS-on-stable with a scan-on-delta;
 asynchronous compaction merges the delta into the IVF partitions without a
 full rebuild.
 
-Versioning: every write bumps ``version``. Visibility rules per read:
+Versioning: every write bumps ``version`` and stamps the rows it writes with
+that counter (``row_version``). Visibility rules per read:
   stable row visible  iff  not tombstoned and not superseded
-  delta  row visible  iff  not tombstoned
+  delta  row visible  iff  not tombstoned and no newer delta version of the
+                           same id exists (latest-version-wins)
 ``superseded`` marks ids whose latest version lives in the delta (an update =
-supersede(old) + insert(new)); compaction folds the latest versions back into
-the stable index and clears the mask. Readers are wait-free: search takes a
-consistent (stable, delta) snapshot pair.
+supersede(old) + insert(new)); the latest-version mask covers the
+delta-vs-delta case (insert-then-update before compaction), where a stale
+row would otherwise outrank the update purely on score. Compaction folds the
+latest versions back into the stable index and clears both. Readers are
+wait-free: search takes a consistent (stable, delta) snapshot pair.
 
 Scan path: rows are quantized to int8 at insert time (mirroring the stable
 slab layout), so the delta scan runs through the same fused Pallas kernel as
@@ -18,6 +22,11 @@ The top (k + margin) quantized survivors are then rescored exactly against
 the fp32 master rows (a tiny gather), so results stay brute-force-exact
 whenever the margin covers the quantization noise — and always when the
 delta holds ≤ k + margin rows.
+
+Predicate pushdown: ``_scan_delta``/``search_with_delta`` take an optional
+``node_pass`` (max_ids,) bool mask (see core/graph_store.NodeAttributes) that
+is folded into the scan validity mask — filtered queries never spend top-k
+slots on excluded rows.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import ivf as ivf_mod
+from repro.core.graph_store import mask_pass
 from repro.core.ivf import IVFIndex
 from repro.core.quantization import quantize
 from repro.kernels.ivf_topk.ops import scan_topk_quantized
@@ -44,6 +54,10 @@ class DeltaStore(NamedTuple):
     qvmin: jax.Array        # (cap,) fp32 — per-row affine dequant terms
     qscale: jax.Array       # (cap,) fp32
     ids: jax.Array          # (cap,) int32, -1 empty
+    row_version: jax.Array  # (cap,) int32 — MVCC audit stamp of the writing
+                            # insert (visibility itself reads ``stale``)
+    stale: jax.Array        # (cap,) bool — a newer delta version of this id
+                            # exists (maintained at write time: O(1) to read)
     count: jax.Array        # () int32
     version: jax.Array      # () int32 — MVCC write counter
     tombstones: jax.Array   # (max_ids,) bool — user deletes
@@ -57,6 +71,8 @@ def init(capacity: int, dim: int, max_ids: int) -> DeltaStore:
         qvmin=jnp.zeros((capacity,), jnp.float32),
         qscale=jnp.ones((capacity,), jnp.float32),
         ids=jnp.full((capacity,), -1, jnp.int32),
+        row_version=jnp.full((capacity,), -1, jnp.int32),
+        stale=jnp.zeros((capacity,), bool),
         count=jnp.zeros((), jnp.int32),
         version=jnp.zeros((), jnp.int32),
         tombstones=jnp.zeros((max_ids,), bool),
@@ -70,9 +86,11 @@ def _clip_ids(delta: DeltaStore, ids):
 
 @jax.jit
 def insert(delta: DeltaStore, vecs: jax.Array, new_ids: jax.Array) -> DeltaStore:
-    """Appends a batch (drops silently if full — caller checks ``should_compact``
-    first). Rows are quantized here so reads never touch fp32 for the scan.
-    Clears tombstones for re-inserted ids."""
+    """Appends a batch (drops silently if full — callers grow/compact first,
+    see ``free_slots``/``grow``). Rows are quantized here so reads never touch
+    fp32 for the scan, and stamped with the current write version so readers
+    can mask all but the latest version of an id. Clears tombstones for
+    re-inserted ids."""
     cap = delta.vectors.shape[0]
     n = vecs.shape[0]
     base = delta.count
@@ -90,8 +108,27 @@ def insert(delta: DeltaStore, vecs: jax.Array, new_ids: jax.Array) -> DeltaStore
         jnp.where(fits, qv.scale[:, 0], delta.qscale[slots]))
     ids = delta.ids.at[slots].set(jnp.where(fits, new_ids.astype(jnp.int32),
                                             delta.ids[slots]))
+    rv = delta.row_version.at[slots].set(
+        jnp.where(fits, delta.version, delta.row_version[slots]))
+    # latest-version-wins, maintained at write time (reads pay nothing):
+    # existing rows sharing an id with an *actually written* batch row go
+    # stale, as does any batch row with a later same-id row in the batch.
+    # Sort-based — O((cap+n)·log n), no (cap, n) or (n, n) intermediates
+    # (bulk overflow batches can be large).
+    ids_eff = jnp.where(fits, new_ids.astype(jnp.int32), -2)
+    sb = jnp.sort(ids_eff)
+    pos = jnp.clip(jnp.searchsorted(sb, delta.ids), 0, n - 1)
+    hit_old = jnp.logical_and(sb[pos] == delta.ids, delta.ids >= 0)
+    stale = jnp.logical_or(delta.stale, hit_old)
+    # stable argsort keeps batch order within equal ids: a sorted element
+    # followed by its own id is not the last (newest) version
+    order = jnp.argsort(ids_eff, stable=True)
+    not_last = jnp.concatenate(
+        [ids_eff[order][:-1] == ids_eff[order][1:], jnp.zeros((1,), bool)])
+    batch_stale = jnp.zeros((n,), bool).at[order].set(not_last)
+    stale = stale.at[slots].set(jnp.where(fits, batch_stale, stale[slots]))
     ts = delta.tombstones.at[_clip_ids(delta, new_ids)].set(False)
-    return DeltaStore(vectors, qdata, qvmin, qscale, ids,
+    return DeltaStore(vectors, qdata, qvmin, qscale, ids, rv, stale,
                       base + jnp.sum(fits.astype(jnp.int32)),
                       delta.version + 1, ts, delta.superseded)
 
@@ -109,19 +146,77 @@ def delete(delta: DeltaStore, dead_ids: jax.Array) -> DeltaStore:
     return delta._replace(tombstones=ts, version=delta.version + 1)
 
 
+def free_slots(delta: DeltaStore) -> int:
+    return int(delta.vectors.shape[0] - delta.count)
+
+
+def insert_grow(delta: DeltaStore, vecs: jax.Array,
+                new_ids: jax.Array) -> DeltaStore:
+    """Host-side insert that never drops rows: grows the store first when
+    the batch exceeds the free slots (2x headroom so the result isn't born
+    at the compaction threshold). The one spelling of the overflow-routing
+    idiom shared by ingest, compaction, repartitioning, and facade inserts."""
+    n = int(vecs.shape[0])
+    if free_slots(delta) < n:
+        delta = grow(delta, int(delta.count) + 2 * n + 1)
+    return insert(delta, vecs, new_ids)
+
+
+def grow(delta: DeltaStore, min_capacity: int) -> DeltaStore:
+    """Host-side capacity growth (copy into a larger store). Used when an
+    overflow batch (compaction / repartition) exceeds the remaining slots —
+    rows must never be dropped silently. Doubles to amortise re-jits."""
+    cap = delta.vectors.shape[0]
+    if min_capacity <= cap:
+        return delta
+    new_cap = cap
+    while new_cap < min_capacity:
+        new_cap *= 2
+    pad = new_cap - cap
+    return delta._replace(
+        vectors=jnp.pad(delta.vectors, ((0, pad), (0, 0))),
+        qdata=jnp.pad(delta.qdata, ((0, pad), (0, 0))),
+        qvmin=jnp.pad(delta.qvmin, (0, pad)),
+        qscale=jnp.pad(delta.qscale, (0, pad), constant_values=1.0),
+        ids=jnp.pad(delta.ids, (0, pad), constant_values=-1),
+        row_version=jnp.pad(delta.row_version, (0, pad), constant_values=-1),
+        stale=jnp.pad(delta.stale, (0, pad)),
+    )
+
+
+def _latest_version_mask(delta: DeltaStore) -> jax.Array:
+    """(cap,) bool: True where the row is the newest delta version of its id.
+
+    The delta can hold several live versions of one id (insert-then-update
+    before compaction); score-based dedup would happily return the stale
+    vector. ``insert`` maintains the staleness bit at write time (slots are
+    append-only, so it marks prior same-id rows — and earlier same-id rows
+    of its own batch — as superseded), which keeps this read-side mask O(cap)
+    regardless of corpus size."""
+    return jnp.logical_and(delta.ids >= 0, ~delta.stale)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "margin"))
 def _scan_delta(delta: DeltaStore, queries: jax.Array, *, k: int,
-                margin: int = _RESCORE_MARGIN):
+                margin: int = _RESCORE_MARGIN,
+                node_pass: Optional[jax.Array] = None):
     """Kernel scan over the quantized delta rows + exact fp32 rescore of the
     top (k + margin) survivors. chunk=1 makes the survivor ordering exact
     over quantized scores (the delta is small; its scan output is tiny).
     Results match brute force exactly whenever the delta holds ≤ k + margin
     live rows, and up to int8 ordering error at the survivor boundary
     otherwise — raise ``margin`` (cfg.delta_rescore_margin) toward
-    delta_capacity to trade scan output size for exactness."""
+    delta_capacity to trade scan output size for exactness.
+
+    Visibility: tombstones out, stale versions out (see
+    ``_latest_version_mask``), and rows failing ``node_pass`` out — predicate
+    pushdown happens before the top-k, mirroring the stable probe path."""
     cap = delta.ids.shape[0]
-    valid = jnp.logical_and(delta.ids >= 0,
-                            ~delta.tombstones[_clip_ids(delta, delta.ids)])
+    valid = jnp.logical_and(
+        _latest_version_mask(delta),
+        ~delta.tombstones[_clip_ids(delta, delta.ids)])
+    if node_pass is not None:
+        valid = jnp.logical_and(valid, mask_pass(node_pass, delta.ids))
     k_scan = min(cap, k + margin)
     qvals, qrows = scan_topk_quantized(
         queries, delta.qdata, delta.qvmin, delta.qscale, valid, k=k_scan,
@@ -141,14 +236,22 @@ def _scan_delta(delta: DeltaStore, queries: jax.Array, *, k: int,
 
 def search_with_delta(index: IVFIndex, delta: DeltaStore, queries: jax.Array, *,
                       n_probe: int, k: int,
-                      rescore_margin: int = _RESCORE_MARGIN
-                      ) -> Tuple[jax.Array, jax.Array]:
-    """Stable-ANNS ∪ delta-kernel-scan, visibility-filtered, dedup-merged."""
-    sv, si = ivf_mod.search(index, queries, n_probe=n_probe, k=k)
+                      rescore_margin: int = _RESCORE_MARGIN,
+                      probes: Optional[jax.Array] = None,
+                      node_pass: Optional[jax.Array] = None,
+                      impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    """Stable-ANNS ∪ delta-kernel-scan, visibility-filtered, dedup-merged.
+
+    probes: optional precomputed partition assignment (see ivf.search).
+    node_pass: optional predicate mask pushed into both scans."""
+    sv, si = ivf_mod.search(index, queries, n_probe=n_probe, k=k,
+                            probes=probes, node_pass=node_pass, impl=impl)
     dead = jnp.logical_or(delta.tombstones, delta.superseded)
     sv = jnp.where(dead[_clip_ids(delta, si)] | (si < 0), -jnp.inf, sv)
-    dv, di = _scan_delta(delta, queries, k=k, margin=rescore_margin)
-    # delta may hold multiple versions of an id (insert-after-insert): dedup
+    dv, di = _scan_delta(delta, queries, k=k, margin=rescore_margin,
+                         node_pass=node_pass)
+    # delta may hold multiple versions of an id (insert-after-insert): stale
+    # versions are masked in _scan_delta; dedup covers stable-vs-delta overlap
     mv, mi = ivf_mod.dedup_merge_topk(sv, si, dv, di, k)
     # -inf slots are "no result": don't leak a masked (e.g. tombstoned) id
     return mv, jnp.where(jnp.isfinite(mv), mi, -1)
@@ -166,7 +269,10 @@ def compact(key, index: IVFIndex, delta: DeltaStore,
     snapshots"). Centroid drift is handled by the workload-aware repartitioner.
 
     all_vectors/all_ids: the full live corpus with one latest row per id
-    (facade-provided); returns (new_index, fresh_delta)."""
+    (facade-provided); returns (new_index, fresh_delta). Overflow rows that
+    don't fit their partition are re-queued in the fresh delta — growing it
+    when they exceed its capacity, never truncating (rows must stay
+    searchable until the next repartition widens the slabs)."""
     live = ~delta.tombstones[_clip_ids(delta, all_ids)]
     vecs = jnp.where(live[:, None], all_vectors, 0.0)
     ids = jnp.where(live, all_ids, -1)
@@ -174,13 +280,13 @@ def compact(key, index: IVFIndex, delta: DeltaStore,
                                         n_partitions=index.n_partitions,
                                         capacity=index.capacity, bits=index.bits,
                                         centroids=index.centroids)
-    fresh = init(delta.vectors.shape[0], delta.vectors.shape[1],
-                 delta.tombstones.shape[0])
-    fresh = fresh._replace(version=delta.version + 1, tombstones=delta.tombstones)
     # rows that didn't fit their partition stay queryable via the fresh delta
     over = jnp.logical_and(overflow, live)
     n_over = int(jnp.sum(over))
+    fresh = init(delta.vectors.shape[0], delta.vectors.shape[1],
+                 delta.tombstones.shape[0])
+    fresh = fresh._replace(version=delta.version + 1, tombstones=delta.tombstones)
     if n_over:
-        sel = jnp.where(over)[0][: fresh.vectors.shape[0]]
-        fresh = insert(fresh, all_vectors[sel], all_ids[sel])
+        sel = jnp.where(over)[0]
+        fresh = insert_grow(fresh, all_vectors[sel], all_ids[sel])
     return new_index, fresh

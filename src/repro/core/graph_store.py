@@ -5,10 +5,18 @@ relationships are typed weighted edges, and each node carries the id of its
 embedding in the vector side of the index. Traversal operators live in
 ``core/traversal.py`` and run as fixed-hop masked frontier pushes over these
 arrays (DESIGN.md §2.3).
+
+``NodeAttributes`` is the relational *predicate* side: a small fixed set of
+int/categorical columns per global node id, held column-major on device, so
+"WHERE node.category == X" compiles to one gather + compare and pushes down
+into the vector scans (core/ivf.py, core/delta.py) and the traversal mask
+(core/traversal.py) — the NHQ/TigerVector structured+unstructured query
+class, served pre-top-k instead of by post-filtering.
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional
+import dataclasses
+from typing import Dict, Iterable, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -66,3 +74,131 @@ def from_edges(n_nodes: int, src: np.ndarray, dst: np.ndarray,
 
 def degree(g: GraphStore) -> jax.Array:
     return g.indptr[1:] - g.indptr[:-1]
+
+
+# ---------------------------------------------------------------------------
+# Node attributes + predicates (the relational WHERE clause)
+# ---------------------------------------------------------------------------
+
+# where-clause ops. "in" takes an iterable of ints (categorical value set,
+# compiled to a boolean lookup table over the column's domain).
+_OPS = ("==", "!=", "<", "<=", ">", ">=", "in")
+
+# one predicate: (column, op, value) e.g. ("category", "==", 3),
+# ("price", "<=", 100), ("tag", "in", {1, 5, 7}). A sequence of predicates
+# is a conjunction (AND).
+Predicate = Tuple[str, str, Union[int, Iterable[int]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompiledPredicate:
+    """Jit-friendly predicate form: static (col, op) + device value/value-set.
+
+    ``value`` is a scalar int32 for comparison ops; ``valueset`` is a bool
+    lookup table over [0, domain) for "in" (out-of-range values fail)."""
+    col: int
+    op: str
+    value: Optional[jax.Array] = None
+    valueset: Optional[jax.Array] = None
+
+
+class NodeAttributes:
+    """Columnar int/categorical attributes keyed by global node id.
+
+    values: (C, N) int32 on device; ``columns`` maps name -> row. Missing
+    nodes (ids a modality doesn't cover) read whatever default the column was
+    built with (0 unless specified)."""
+
+    def __init__(self, columns: Dict[str, int], values: jax.Array):
+        self.columns = dict(columns)
+        self.values = values
+
+    @classmethod
+    def from_columns(cls, n_nodes: int,
+                     cols: Dict[str, np.ndarray]) -> "NodeAttributes":
+        names = list(cols)
+        mat = np.zeros((len(names), n_nodes), np.int32)
+        for i, name in enumerate(names):
+            v = np.asarray(cols[name], np.int32)
+            if v.shape != (n_nodes,):
+                raise ValueError(
+                    f"column {name!r}: shape {v.shape} != ({n_nodes},)")
+            mat[i] = v
+        return cls({n: i for i, n in enumerate(names)}, jnp.asarray(mat))
+
+    @property
+    def n_nodes(self) -> int:
+        return self.values.shape[1]
+
+    def column(self, name: str) -> jax.Array:
+        return self.values[self.columns[name]]
+
+    def compile_where(self, where) -> Tuple[CompiledPredicate, ...]:
+        """Normalises a where clause (one predicate tuple or a sequence of
+        them, AND-combined) into compiled form."""
+        if where is None:
+            return ()
+        if isinstance(where, tuple) and len(where) == 3 \
+                and isinstance(where[0], str):
+            where = [where]
+        out = []
+        for col, op, value in where:
+            if op not in _OPS:
+                raise ValueError(f"unknown predicate op {op!r} (one of {_OPS})")
+            ci = self.columns[col]
+            if op == "in":
+                vals = np.asarray(sorted(set(int(v) for v in value)), np.int64)
+                if vals.size == 0:
+                    raise ValueError(f"empty value set for column {col!r}")
+                if vals.min() < 0:
+                    raise ValueError("'in' value sets must be non-negative")
+                lut = np.zeros(int(vals.max()) + 1, bool)
+                lut[vals] = True
+                out.append(CompiledPredicate(ci, op, valueset=jnp.asarray(lut)))
+            else:
+                out.append(CompiledPredicate(
+                    ci, op, value=jnp.asarray(int(value), jnp.int32)))
+        return tuple(out)
+
+    def node_pass(self, where) -> Optional[jax.Array]:
+        """Evaluates a where clause to an (N,) bool mask (None = no filter).
+        One compare (or LUT gather) per predicate — O(C·N) int ops, done once
+        per query batch and shared by every scan/traversal stage."""
+        preds = self.compile_where(where)
+        if not preds:
+            return None
+        return eval_predicates(self.values, preds)
+
+
+def mask_pass(node_pass: jax.Array, ids: jax.Array) -> jax.Array:
+    """Gathers a (max_id+1,) predicate mask at (possibly -1-padded) id
+    arrays: True iff the id is valid AND passes. The one shared spelling of
+    the clip-gather idiom every scan/merge/fusion stage uses."""
+    ok = node_pass[jnp.clip(ids, 0, node_pass.shape[0] - 1)]
+    return jnp.logical_and(ids >= 0, ok)
+
+
+def eval_predicates(values: jax.Array,
+                    preds: Sequence[CompiledPredicate]) -> jax.Array:
+    """(C, N) attribute matrix × compiled conjunction -> (N,) bool. Pure jnp
+    (safe inside jit: col/op are static, value/valueset are arrays)."""
+    mask = jnp.ones(values.shape[1], bool)
+    for p in preds:
+        col = values[p.col]
+        if p.op == "in":
+            dom = p.valueset.shape[0]
+            hit = p.valueset[jnp.clip(col, 0, dom - 1)]
+            mask &= jnp.logical_and(hit, jnp.logical_and(col >= 0, col < dom))
+        elif p.op == "==":
+            mask &= col == p.value
+        elif p.op == "!=":
+            mask &= col != p.value
+        elif p.op == "<":
+            mask &= col < p.value
+        elif p.op == "<=":
+            mask &= col <= p.value
+        elif p.op == ">":
+            mask &= col > p.value
+        else:
+            mask &= col >= p.value
+    return mask

@@ -25,16 +25,21 @@ from repro.core import nsw as nsw_mod
 from repro.core import traversal as trav_mod
 from repro.core import community as comm_mod
 from repro.core import rerank as rerank_mod
-from repro.core.cost_model import CostModel, DEFAULT_PLANS, QueryPlan, select_plan
+from repro.core.cost_model import (CostModel, DEFAULT_PLANS, QueryPlan,
+                                   estimate_selectivity, plan_filtered_scan,
+                                   select_plan)
 from repro.core.fusion import FusionWeights, adaptive_weights, fuse_topk_sparse
-from repro.core.graph_store import GraphStore, from_edges as graph_from_edges
+from repro.core import graph_store as graph_mod
+from repro.core.graph_store import (GraphStore, NodeAttributes,
+                                    from_edges as graph_from_edges)
 from repro.core.partitioner import WorkloadStats, assign_topk
 from repro.core.quantization import AdaptiveQuantPolicy
+from repro.kernels.ivf_topk.ref import pad_topk
 
 
 @functools.partial(jax.jit, static_argnames=("k_fuse", "frontier"))
 def _fuse_candidates(vs, vi, graph_scores, wv, wg, *, k_fuse: int,
-                     frontier: int):
+                     frontier: int, node_pass=None):
     """Candidate-sparse fusion stage (Eq. 3): fuse over the union of the
     ANNS seeds ``vi`` and the ``frontier`` strongest traversal nodes instead
     of scattering into a dense (Q, n_nodes) similarity array.
@@ -45,7 +50,12 @@ def _fuse_candidates(vs, vi, graph_scores, wv, wg, *, k_fuse: int,
     least as much mass (frontier = k_fuse + k_seed ≥ k_fuse + #seeds), so it
     can never displace the union's top-k_fuse. The graph normaliser is the
     frontier's top-1 = the global max. Peak memory is O(Q·C), C = k_seed +
-    frontier — independent of n_nodes."""
+    frontier — independent of n_nodes.
+
+    node_pass: optional (N,) bool predicate mask — excluded nodes are struck
+    from both the seed and frontier candidate lanes (the traversal already
+    routes no mass through them, but a zero-mass node could otherwise still
+    fill a trailing top-k_fuse slot)."""
     # barrier: XLA:CPU otherwise re-materialises the frontier sort inside
     # every consumer fusion of its outputs (~40x fusion-stage slowdown)
     g_vals, g_ids = jax.lax.optimization_barrier(
@@ -60,6 +70,11 @@ def _fuse_candidates(vs, vi, graph_scores, wv, wg, *, k_fuse: int,
     seed_dup = jnp.any((vi[:, :, None] == vi[:, None, :]) & earlier[None],
                        axis=-1)                                   # (Q, ks)
     seed_valid = jnp.logical_and(vi >= 0, ~seed_dup)
+    front_valid = jnp.ones(g_ids.shape, bool)
+    if node_pass is not None:
+        seed_valid = jnp.logical_and(seed_valid,
+                                     graph_mod.mask_pass(node_pass, vi))
+        front_valid = graph_mod.mask_pass(node_pass, g_ids)
     g_at_vi = jnp.take_along_axis(
         graph_scores, jnp.clip(vi, 0, n_nodes - 1).astype(jnp.int32), axis=1)
     # frontier entries already present as seeds fuse through the seed copy
@@ -72,7 +87,8 @@ def _fuse_candidates(vs, vi, graph_scores, wv, wg, *, k_fuse: int,
     cand_graph = jnp.concatenate(
         [jnp.where(seed_valid, g_at_vi, 0.0),
          jnp.where(dup, 0.0, g_vals)], axis=1)
-    cand_valid = jnp.concatenate([seed_valid, ~dup], axis=1)
+    cand_valid = jnp.concatenate(
+        [seed_valid, jnp.logical_and(~dup, front_valid)], axis=1)
     w = FusionWeights(wv, wg)
     fvals, fpos = fuse_topk_sparse(cand_sim, cand_graph, w, k_fuse,
                                    graph_max=g_vals[:, :1], valid=cand_valid)
@@ -99,6 +115,7 @@ class HMGIIndex:
         self.key = jax.random.PRNGKey(seed)
         self.modalities: Dict[str, ModalityIndex] = {}
         self.graph: Optional[GraphStore] = None
+        self.attributes: Optional[NodeAttributes] = None
         self.communities: Optional[np.ndarray] = None
         self.boosted_weights: Optional[jax.Array] = None
         self.sparse_docs: Optional[rerank_mod.SparseVectors] = None
@@ -114,9 +131,11 @@ class HMGIIndex:
 
     def ingest(self, embeddings: Dict[str, Tuple[np.ndarray, np.ndarray]],
                n_nodes: int, edges: Optional[Tuple] = None,
-               build_nsw: bool = False):
+               build_nsw: bool = False,
+               node_attrs: Optional[Dict[str, np.ndarray]] = None):
         """embeddings: modality -> (node_ids (N_m,), vectors (N_m, d_m)).
-        edges: (src, dst[, edge_type[, edge_weight]]) arrays."""
+        edges: (src, dst[, edge_type[, edge_weight]]) arrays.
+        node_attrs: column name -> (n_nodes,) int values (WHERE-clause side)."""
         self.n_nodes = n_nodes
         for mod, (ids, vecs) in embeddings.items():
             vecs = jnp.asarray(vecs, jnp.float32)
@@ -131,11 +150,12 @@ class HMGIIndex:
                 kmeans_iters=self.cfg.kmeans_iters)
             dstore = delta_mod.init(self.cfg.delta_capacity, vecs.shape[1],
                                     max_ids=max(n_nodes, 1))
-            # overflow rows go to the delta store (capacity-bounded build)
+            # overflow rows go to the delta store (capacity-bounded build) —
+            # grown if needed: build overflow must never be dropped
             n_over = int(jnp.sum(overflow))
             if n_over:
                 ov = jnp.where(overflow)[0]
-                dstore = delta_mod.insert(dstore, vecs[ov], ids[ov])
+                dstore = delta_mod.insert_grow(dstore, vecs[ov], ids[ov])
             m = ModalityIndex(ivf=index, delta=dstore, vectors=vecs, ids=ids,
                               workload=WorkloadStats(k))
             if build_nsw or self.cfg.use_nsw_refine:
@@ -152,6 +172,13 @@ class HMGIIndex:
                 np.ones(len(src)) if ew is None else np.asarray(ew))
             self.boosted_weights = comm_mod.community_edge_boost(
                 self.graph, self.communities)
+        if node_attrs is not None:
+            self.set_attributes(node_attrs)
+
+    def set_attributes(self, node_attrs: Dict[str, np.ndarray]):
+        """Attach/replace the relational attribute columns (global node id
+        keyed; see graph_store.NodeAttributes)."""
+        self.attributes = NodeAttributes.from_columns(self.n_nodes, node_attrs)
 
     def set_sparse_docs(self, docs: rerank_mod.SparseVectors):
         self.sparse_docs = docs
@@ -161,35 +188,116 @@ class HMGIIndex:
         q = jnp.asarray(queries, jnp.float32)
         return q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-12)
 
-    def search(self, queries, modality: str, k: Optional[int] = None,
-               n_probe: Optional[int] = None):
-        """Pure vector search (ANNS on stable index + delta), tombstone-aware."""
-        m = self.modalities[modality]
-        q = self._norm_queries(queries)
-        n_probe = n_probe or self.cfg.n_probe
-        k = k or self.cfg.top_k
-        if m.workload is not None:
-            probes, _ = assign_topk(q, m.ivf.centroids,
-                                    min(n_probe, m.ivf.n_partitions))
-            m.workload.record(np.asarray(probes))
+    def _node_pass(self, where) -> Optional[jax.Array]:
+        """Compiles a where clause against the attribute store -> (N,) bool."""
+        if where is None:
+            return None
+        if self.attributes is None:
+            raise ValueError("filtered search needs attributes: call "
+                             "set_attributes() or ingest(node_attrs=...)")
+        return self.attributes.node_pass(where)
+
+    def _search_raw(self, m: ModalityIndex, q: jax.Array, probes, n_probe: int,
+                    k: int, node_pass=None, impl: str = "auto"):
+        """One stable+delta scan round (centroids pre-scored in ``probes``)."""
         scores, ids = delta_mod.search_with_delta(
-            m.ivf, m.delta, q, n_probe=min(n_probe, m.ivf.n_partitions), k=k,
-            rescore_margin=self.cfg.delta_rescore_margin)
+            m.ivf, m.delta, q, n_probe=n_probe, k=k,
+            rescore_margin=self.cfg.delta_rescore_margin, probes=probes,
+            node_pass=node_pass, impl=impl)
         if self.cfg.use_nsw_refine and m.nsw is not None:
             ns, ni = nsw_mod.search(m.nsw, q, ef=self.cfg.nsw_ef, k=k)
             ni = jnp.where(ni >= 0, m.ids[jnp.clip(ni, 0, m.ids.shape[0] - 1)], -1)
-            scores, ids = ivf_mod.merge_topk(scores, ids, ns, ni, k)
+            # the NSW layer indexes ingest-time rows: apply the same MVCC
+            # visibility rules as the stable scan (deletes and superseded
+            # versions must not resurface through the refine lane) plus the
+            # predicate mask
+            dead = jnp.logical_or(m.delta.tombstones, m.delta.superseded)
+            ok = jnp.logical_and(
+                ni >= 0, ~dead[jnp.clip(ni, 0, dead.shape[0] - 1)])
+            if node_pass is not None:
+                ok = jnp.logical_and(ok, graph_mod.mask_pass(node_pass, ni))
+            ns = jnp.where(ok, ns, -jnp.inf)
+            ni = jnp.where(ok, ni, -1)
+            scores, ids = ivf_mod.dedup_merge_topk(scores, ids, ns, ni, k)
+            ids = jnp.where(jnp.isfinite(scores), ids, -1)
         return scores, ids
+
+    def search(self, queries, modality: str, k: Optional[int] = None,
+               n_probe: Optional[int] = None, where=None, impl: str = "auto",
+               *, _node_pass=None):
+        """Pure vector search (ANNS on stable index + delta), tombstone-aware.
+
+        where: optional relational predicate — a (column, op, value) tuple or
+        a list of them (AND), evaluated against the attribute store. The
+        selectivity estimator picks the execution strategy per batch:
+        *pushdown* (predicate folded into the scan validity masks, pre-top-k)
+        when few rows qualify, *oversample-then-post-filter* when most do —
+        the post-filter pass doubles its scan width until every query has k
+        qualifying candidates (or the probed slabs are exhausted), so at full
+        probe both strategies return the brute-force-with-predicate top-k."""
+        m = self.modalities[modality]
+        q = self._norm_queries(queries)
+        n_probe = min(n_probe or self.cfg.n_probe, m.ivf.n_partitions)
+        k = k or self.cfg.top_k
+        # centroids are scored once per batch: the same assignment feeds the
+        # workload tracker and (as precomputed probes) the IVF scan
+        probes, _ = assign_topk(q, m.ivf.centroids, n_probe)
+        if m.workload is not None:
+            m.workload.record(np.asarray(probes))
+        node_pass = _node_pass if _node_pass is not None \
+            else self._node_pass(where)
+        if node_pass is None:
+            return self._search_raw(m, q, probes, n_probe, k, impl=impl)
+        plan = plan_filtered_scan(
+            estimate_selectivity(node_pass), k,
+            n_rows=int(m.ids.shape[0]),
+            oversample=self.cfg.filter_oversample,
+            prefilter_max_sel=self.cfg.filter_prefilter_max_sel)
+        self._metrics["filter_selectivity"] = plan.selectivity
+        self._metrics["filter_mode"] = plan.mode
+        if plan.mode == "prefilter":
+            return self._search_raw(m, q, probes, n_probe, k,
+                                    node_pass=node_pass, impl=impl)
+        # oversample-then-post-filter: scan unfiltered at k_scan, keep
+        # qualifying rows, widen until k survivors per query (exactness:
+        # the unfiltered top-k_scan is descending, so once k rows pass, they
+        # are the filtered top-k over everything the probes saw)
+        k_max = min(int(m.ids.shape[0]),
+                    n_probe * m.ivf.capacity + m.delta.ids.shape[0])
+        # pow2-round: k_scan is a static jit arg, so raw selectivity-derived
+        # widths would recompile the scan pipeline per distinct batch
+        k_scan = min(max(k, 1 << (plan.k_scan - 1).bit_length()), k_max)
+        while True:
+            sv, si = self._search_raw(m, q, probes, n_probe, k_scan, impl=impl)
+            ok = graph_mod.mask_pass(node_pass, si)
+            sv = jnp.where(ok, sv, -jnp.inf)
+            if k_scan >= k_max:
+                break
+            if int(jnp.min(jnp.sum(ok, axis=1))) >= k:
+                break
+            k_scan = min(2 * k_scan, k_max)
+        vals, pos = jax.lax.top_k(sv, min(k, sv.shape[1]))
+        ids = jnp.take_along_axis(si, pos, axis=1)
+        ids = jnp.where(jnp.isfinite(vals), ids, -1)
+        return pad_topk(vals, ids, k)
 
     def hybrid_search(self, queries, modality: str, k: Optional[int] = None,
                       n_hops: Optional[int] = None,
                       n_probe: Optional[int] = None,
                       edge_type_mask=None,
+                      where=None,
                       min_recall: Optional[float] = None,
                       use_rerank: bool = False,
                       q_terms=None, q_term_weights=None):
         """The paper's hybrid query (Eq. 3): ANNS seeds -> h-hop traversal ->
-        adaptive fusion -> (optional sparse-dense rerank). Returns (scores, ids)."""
+        adaptive fusion -> (optional sparse-dense rerank). Returns (scores, ids).
+
+        where: optional relational predicate (see ``search``). It is enforced
+        at every stage: seed search (pushdown or planned oversampling),
+        traversal (excluded nodes route no mass — ``frontier_expand``'s node
+        mask), and fusion (excluded frontier nodes can't take candidate
+        slots) — "nearest neighbors of q WHERE node.attr = v within h hops"
+        as one query."""
         assert self.graph is not None, "hybrid_search needs a graph"
         cfg = self.cfg
         k = k or cfg.top_k
@@ -203,20 +311,25 @@ class HMGIIndex:
             use_rerank = use_rerank or plan.use_rerank
         n_hops = cfg.max_hops if n_hops is None else n_hops
         q = self._norm_queries(queries)
+        node_pass = self._node_pass(where)
 
-        # stage 1: vector candidates (oversampled for fusion headroom)
+        # stage 1: vector candidates (oversampled for fusion headroom);
+        # the predicate was compiled once above and is shared by every stage
         k_seed = max(2 * k, k + 8)
-        vs, vi = self.search(q, modality, k=k_seed, n_probe=n_probe)
+        vs, vi = self.search(q, modality, k=k_seed, n_probe=n_probe,
+                             _node_pass=node_pass)
 
         if n_hops == 0:
             return vs[:, :k], vi[:, :k]
 
-        # stage 2: graph traversal from seeds (community-boosted weights)
+        # stage 2: graph traversal from seeds (community-boosted weights);
+        # predicate-excluded nodes neither receive nor forward mass
         g = self.graph
         if self.boosted_weights is not None:
             g = g._replace(edge_weight=self.boosted_weights)
         graph_scores = trav_mod.multi_hop_batch(
-            g, vi, vs, n_hops=n_hops, edge_type_mask=edge_type_mask)   # (Q, N)
+            g, vi, vs, n_hops=n_hops, edge_type_mask=edge_type_mask,
+            node_mask=node_pass)                                       # (Q, N)
 
         # stage 3: candidate-sparse fusion (Eq. 3) over seeds ∪ frontier —
         # never a dense (Q, n_nodes) similarity scatter
@@ -228,7 +341,8 @@ class HMGIIndex:
         frontier = int(min(self.n_nodes, k_fuse + k_seed))
         fvals, fids = _fuse_candidates(vs, vi, graph_scores,
                                        w.w_vector, w.w_graph,
-                                       k_fuse=k_fuse, frontier=frontier)
+                                       k_fuse=k_fuse, frontier=frontier,
+                                       node_pass=node_pass)
 
         # stage 4: optional sparse-dense rerank
         if use_rerank and self.sparse_docs is not None and q_terms is not None:
@@ -261,7 +375,11 @@ class HMGIIndex:
             sel = jnp.asarray(~upd_mask)
             m.vectors = jnp.concatenate([m.vectors, v[sel]], axis=0)
             m.ids = jnp.concatenate([m.ids, ids32[sel]])
-        m.delta = delta_mod.insert(m.delta, v, ids32)
+        # never drop writes: compact to make room, then grow if the batch
+        # alone exceeds the (fresh) delta's capacity
+        if delta_mod.free_slots(m.delta) < v.shape[0]:
+            self.compact(modality)
+        m.delta = delta_mod.insert_grow(m.delta, v, ids32)
         if delta_mod.should_compact(m.delta, self.cfg.compact_threshold):
             self.compact(modality)
 
@@ -274,9 +392,21 @@ class HMGIIndex:
         m = self.modalities[modality]
         m.ivf, m.delta = delta_mod.compact(self._split(), m.ivf, m.delta,
                                            m.vectors, m.ids)
+        if m.nsw is not None:
+            # compaction clears the superseded mask, which is what hid
+            # updated rows from the NSW lane — refresh it over the latest
+            # vectors or it would serve pre-update similarities again
+            m.nsw = nsw_mod.build(
+                self._split(), m.vectors,
+                degree=min(self.cfg.nsw_degree, m.vectors.shape[0] - 1))
 
     def maybe_repartition(self, modality: str):
-        """Workload-aware online adjustment (paper §3.2)."""
+        """Workload-aware online adjustment (paper §3.2).
+
+        Rows that don't fit their partition after the split are routed into
+        the delta store exactly as ``ingest`` does — the post-split build's
+        overflow mask must never be discarded, or those rows silently vanish
+        from search until the next compaction."""
         from repro.core.partitioner import KMeansState, split_hot_partition
         m = self.modalities[modality]
         if m.workload is None or not m.workload.should_repartition():
@@ -290,6 +420,16 @@ class HMGIIndex:
             n_partitions=m.ivf.n_partitions, bits=m.ivf.bits,
             capacity=m.ivf.capacity, centroids=new.centroids)
         m.ivf = index
+        # overflow -> delta (skip tombstoned ids: delta.insert would clear
+        # their tombstones and resurrect deleted rows)
+        over = np.array(overflow)                      # writable host copy
+        dead = np.asarray(m.delta.tombstones)
+        ids_np = np.asarray(m.ids)
+        over &= ~dead[np.clip(ids_np, 0, dead.shape[0] - 1)]
+        n_over = int(over.sum())
+        if n_over:
+            sel = jnp.asarray(np.where(over)[0])
+            m.delta = delta_mod.insert_grow(m.delta, m.vectors[sel], m.ids[sel])
         m.workload.reset()
         return True
 

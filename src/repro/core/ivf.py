@@ -50,9 +50,11 @@ _SHARD_MAP_KW = (
     else {"check_rep": False})
 
 from repro.core import partitioner
+from repro.core.graph_store import mask_pass
 from repro.core.quantization import QuantizedVectors, quantize
 from repro.kernels.ivf_topk.ops import (_interpret_mode,
                                         scan_topk_quantized_batched)
+from repro.kernels.ivf_topk.ref import pad_topk
 
 # probe-path kernel tiling: chunk-of-16 survivors, 512-row blocks (see
 # kernels/ivf_topk/ivf_topk.py for the VMEM accounting)
@@ -180,18 +182,32 @@ def _resolve_impl(index: IVFIndex, impl: str) -> str:
 
 @functools.partial(jax.jit, static_argnames=("n_probe", "k", "query_block", "impl"))
 def search(index: IVFIndex, queries: jax.Array, *, n_probe: int, k: int,
-           query_block: int = 64, impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+           query_block: int = 64, impl: str = "auto",
+           probes: Optional[jax.Array] = None,
+           node_pass: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
     """Returns (scores (Q, k), ids (Q, k)) — dot-product similarity, descending.
 
     impl="kernel" (default for int8) scans the probed slab blocks with the
     fused Pallas kernel: int8 rows all the way into the scoring matmul, no
     (qb, P, cap, d) fp32 dequant ever materialised in HBM. impl="einsum" is
-    the legacy gather-dequant-einsum path (4/16-bit storage, baseline)."""
+    the legacy gather-dequant-einsum path (4/16-bit storage, baseline).
+
+    probes: optional precomputed (Q, n_probe) partition assignment (the
+    facade records workload stats from the same ``assign_topk`` — passing it
+    here scores centroids once per query batch instead of twice).
+
+    node_pass: optional (max_id+1,) bool predicate mask over global node
+    ids — predicate *pushdown*: excluded rows are folded into the scan's
+    validity mask (kernel bias / einsum -inf) before the top-k, so the k
+    results all satisfy the predicate with no post-filter recall loss."""
     impl = _resolve_impl(index, impl)
     q = queries.astype(jnp.float32)
     nq = q.shape[0]
     n_probe = min(n_probe, index.n_partitions)
-    probe, _ = partitioner.assign_topk(q, index.centroids, n_probe)   # (Q, P)
+    if probes is None:
+        probe, _ = partitioner.assign_topk(q, index.centroids, n_probe)  # (Q, P)
+    else:
+        probe = probes[:, :n_probe].astype(jnp.int32)
     cap = index.capacity
 
     qb = min(query_block, nq)
@@ -200,6 +216,12 @@ def search(index: IVFIndex, queries: jax.Array, *, n_probe: int, k: int,
     pp = jnp.pad(probe, ((0, pad), (0, 0)))
     nblocks = qp.shape[0] // qb
     slab_data, slab_vmin, slab_scale, slab_ids = index.slab_view()
+
+    def _row_valid(bids):
+        """Slot occupancy ∧ predicate pushdown (pre-top-k filtering)."""
+        if node_pass is not None:
+            return mask_pass(node_pass, bids)
+        return bids >= 0
 
     def block_kernel(carry, i):
         qs = jax.lax.dynamic_slice_in_dim(qp, i * qb, qb, axis=0)      # (qb, d)
@@ -213,7 +235,7 @@ def search(index: IVFIndex, queries: jax.Array, *, n_probe: int, k: int,
         bscale = slab_scale[rows]
         bids = slab_ids[rows]                                           # (qb, M)
         vals, pos = scan_topk_quantized_batched(
-            qs, bdata, bmin, bscale, bids >= 0, k=k,
+            qs, bdata, bmin, bscale, _row_valid(bids), k=k,
             chunk=_CHUNK, block_n=_probe_block_n(rows.shape[1], qb,
                                                  qs.shape[1]))
         ids = jnp.where(pos >= 0,
@@ -231,11 +253,13 @@ def search(index: IVFIndex, queries: jax.Array, *, n_probe: int, k: int,
         bids = index.ids[ps]                                            # (qb,P,cap)
         vecs = _dequant_rows(index, bdata, bmin, bscale)                # (qb,P,cap,d)
         scores = jnp.einsum("qd,qpcd->qpc", qs, vecs)
-        scores = jnp.where(bids >= 0, scores, -jnp.inf)
+        scores = jnp.where(_row_valid(bids), scores, -jnp.inf)
         flat = scores.reshape(qb, -1)
         fids = bids.reshape(qb, -1)
-        vals, pos = jax.lax.top_k(flat, k)
-        return carry, (vals, jnp.take_along_axis(fids, pos, axis=1))
+        vals, pos = jax.lax.top_k(flat, min(k, flat.shape[1]))
+        ids = jnp.where(jnp.isfinite(vals),
+                        jnp.take_along_axis(fids, pos, axis=1), -1)
+        return carry, pad_topk(vals, ids, k)
 
     block = block_kernel if impl == "kernel" else block_einsum
     _, (vals, ids) = jax.lax.scan(block, None, jnp.arange(nblocks))

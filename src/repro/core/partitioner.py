@@ -91,8 +91,7 @@ def split_hot_partition(key, x, state: KMeansState, hot: int) -> KMeansState:
     re-fitting K=2 on its members and replacing (hot, coldest) centroids —
     incremental, no full rebuild (paper: "zero-downtime incremental migration")."""
     a = assign(x, state.centroids)
-    members = x[a == hot] if isinstance(x, np.ndarray) else x[jnp.where(a == hot, size=x.shape[0], fill_value=0)[0]]
-    # host-side convenience path (numpy)
+    # host-side path (numpy): membership gather of the hot partition
     xs = np.asarray(x)
     an = np.asarray(a)
     members = xs[an == hot]

@@ -25,9 +25,15 @@ class TraversalResult(NamedTuple):
 
 def frontier_expand(g: GraphStore, seed_scores: jax.Array, *, n_hops: int,
                     edge_type_mask: Optional[jax.Array] = None,
+                    node_mask: Optional[jax.Array] = None,
                     damping: float = 0.85,
                     top_m: int = 0) -> TraversalResult:
     """seed_scores: (N,) fp32 (zeros except seeds). Returns per-hop node mass.
+
+    node_mask: optional (N,) bool — the node-predicate analogue of the edge
+    mask (Cypher's ``WHERE n.attr = v``): excluded nodes neither receive nor
+    forward mass, so a filtered hybrid query never routes relevance through
+    a node the predicate rules out (masked at every hop, not post-hoc).
 
     top_m > 0 prunes each hop's frontier to its m strongest nodes (the paper's
     pruning for >3-hop traversals; keeps cost bounded on power-law graphs).
@@ -39,18 +45,23 @@ def frontier_expand(g: GraphStore, seed_scores: jax.Array, *, n_hops: int,
     # out-degree normalisation (random-walk style push)
     deg_w = jax.ops.segment_sum(ew, g.src, num_segments=n)
     inv_deg = jnp.where(deg_w > 0, 1.0 / jnp.maximum(deg_w, 1e-12), 0.0)
+    nm = None if node_mask is None else node_mask.astype(jnp.float32)
 
     def hop(frontier, _):
         pushed = frontier * inv_deg                      # (N,)
         msg = pushed[g.src] * ew                         # (E,)
         nxt = jax.ops.segment_sum(msg, g.indices, num_segments=n) * damping
+        if nm is not None:
+            nxt = nxt * nm
         if top_m:
             kth = jax.lax.top_k(nxt, min(top_m, n))[0][-1]
             nxt = jnp.where(nxt >= kth, nxt, 0.0)
         return nxt, nxt
 
-    _, per_hop = jax.lax.scan(hop, seed_scores.astype(jnp.float32), None,
-                              length=n_hops)
+    seed = seed_scores.astype(jnp.float32)
+    if nm is not None:
+        seed = seed * nm
+    _, per_hop = jax.lax.scan(hop, seed, None, length=n_hops)
     return TraversalResult(per_hop=per_hop, total=per_hop.mean(axis=0))
 
 
@@ -68,14 +79,16 @@ def seeds_from_topk(n_nodes: int, ids: jax.Array, scores: jax.Array) -> jax.Arra
 
 
 def multi_hop_batch(g: GraphStore, ids: jax.Array, scores: jax.Array, *,
-                    n_hops: int, edge_type_mask=None, damping: float = 0.85,
-                    top_m: int = 0) -> jax.Array:
+                    n_hops: int, edge_type_mask=None, node_mask=None,
+                    damping: float = 0.85, top_m: int = 0) -> jax.Array:
     """Vmapped traversal for a batch of vector-search results.
 
-    ids/scores: (Q, k) -> (Q, N) graph relevance (mean per-hop mass)."""
+    ids/scores: (Q, k) -> (Q, N) graph relevance (mean per-hop mass).
+    node_mask: (N,) bool predicate mask shared across the batch."""
     def one(i, s):
         seed = seeds_from_topk(g.n_nodes, i, s)
         return frontier_expand(g, seed, n_hops=n_hops,
-                               edge_type_mask=edge_type_mask, damping=damping,
+                               edge_type_mask=edge_type_mask,
+                               node_mask=node_mask, damping=damping,
                                top_m=top_m).total
     return jax.vmap(one)(ids, scores)
