@@ -1,0 +1,73 @@
+"""Relationship-heavy scenario benchmark for the declarative query engine.
+
+Canned plans exercising the query classes HMGI claims to win on (complex,
+relationship-heavy hybrid queries): a filtered 2-hop traversal, a typed
+traversal, a cross-modal re-score chain, and an intersection of two seed
+scans. Reports ms/query end-to-end through ``HMGIIndex.query`` (compile +
+execute, the production path) plus the compiled plan choice per scenario,
+so future PRs have a latency trajectory for complex queries and can see
+planner decisions shift.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from benchmarks.common import build_hmgi, timeit
+from repro.data.synthetic import make_corpus
+from repro.query import Q
+
+N_NODES = 4096
+N_QUERIES = 16
+K = 10
+
+
+def _dual_modality_corpus(seed=0):
+    """Every node carries text AND image embeddings (cross-modal re-score
+    needs a shared id space), with the synthetic KG's typed edges."""
+    rng = np.random.default_rng(seed)
+    corpus = make_corpus(n_nodes=N_NODES, modality_dims={"text": 64}, seed=seed)
+    ids = np.arange(N_NODES, dtype=np.int32)
+    vt = rng.normal(size=(N_NODES, 64)).astype(np.float32)
+    vt[corpus.node_ids["text"]] = corpus.vectors["text"]
+    vi = rng.normal(size=(N_NODES, 48)).astype(np.float32)
+    corpus.node_ids["text"], corpus.vectors["text"] = ids, vt
+    corpus.node_ids["image"], corpus.vectors["image"] = ids, vi
+    return corpus, rng
+
+
+def run(report):
+    corpus, rng = _dual_modality_corpus()
+    idx = build_hmgi(corpus, n_partitions=32, n_probe=8)
+    idx.set_attributes({"year": rng.integers(2000, 2030, N_NODES),
+                        "cat": rng.integers(0, 8, N_NODES)})
+
+    sel = rng.integers(0, N_NODES, N_QUERIES)
+    q = (corpus.vectors["text"][sel]
+         + 0.05 * rng.normal(size=(N_QUERIES, 64))).astype(np.float32)
+    q2 = (corpus.vectors["text"][rng.integers(0, N_NODES, N_QUERIES)]
+          + 0.05 * rng.normal(size=(N_QUERIES, 64))).astype(np.float32)
+    qi = (corpus.vectors["image"][sel]
+          + 0.05 * rng.normal(size=(N_QUERIES, 48))).astype(np.float32)
+
+    scenarios = [
+        ("filtered_2hop",
+         Q.vector("text", q).where(("year", ">", 2018)).traverse(2).topk(K)),
+        ("typed_2hop",
+         Q.vector("text", q).traverse(2, edge_types=(0, 1)).topk(K)),
+        ("cross_modal_rescore",
+         Q.vector("text", q).traverse(1)
+          .cross_modal("image", qi, weight=0.5).topk(K)),
+        ("intersect_two_seeds",
+         Q.intersect(Q.vector("text", q).topk(4 * K),
+                     Q.vector("text", q2).topk(4 * K)).topk(K)),
+        ("union_then_traverse",
+         Q.union(Q.vector("text", q).topk(2 * K),
+                 Q.vector("image", qi).topk(2 * K)).traverse(1).topk(K)),
+    ]
+    for name, plan in scenarios:
+        def call(p=plan):
+            return jax.block_until_ready(idx.query(p)[0])
+        t = timeit(call, trials=5, warmup=2)
+        choice = idx.explain(plan).replace(",", ";")
+        report(f"query/{name}", t * 1e6 / N_QUERIES, choice)

@@ -7,6 +7,8 @@
   kernels_bench — Pallas kernel accounting (incl. kernel-vs-einsum probe path)
   hybrid_bench  — hybrid query: sparse vs dense fusion, end-to-end latency
   filtered_bench — attribute-filtered search: pushdown vs post-filter sweep
+  query_bench   — declarative query engine: relationship-heavy canned plans
+                  (ms/query + compiled plan choice)
 
 Prints ``name,us_per_call,derived`` CSV.
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module>]
@@ -23,7 +25,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["paper_tables", "ablations", "scaling",
                              "kernels_bench", "hybrid_bench",
-                             "filtered_bench"])
+                             "filtered_bench", "query_bench"])
     args = ap.parse_args()
 
     rows = []
@@ -33,10 +35,11 @@ def main() -> None:
         print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
     from benchmarks import (ablations, filtered_bench, hybrid_bench,
-                            kernels_bench, paper_tables, scaling)
+                            kernels_bench, paper_tables, query_bench, scaling)
     mods = {"paper_tables": paper_tables, "ablations": ablations,
             "scaling": scaling, "kernels_bench": kernels_bench,
-            "hybrid_bench": hybrid_bench, "filtered_bench": filtered_bench}
+            "hybrid_bench": hybrid_bench, "filtered_bench": filtered_bench,
+            "query_bench": query_bench}
     selected = [mods[args.only]] if args.only else list(mods.values())
 
     print("name,us_per_call,derived")

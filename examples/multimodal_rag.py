@@ -1,5 +1,6 @@
 """End-to-end serving driver (the paper's target application): a small LM
-encoder + HMGI retrieval + continuous-batched RAG generation.
+encoder + HMGI retrieval + continuous-batched RAG generation, plus the
+declarative query-builder API for relationship-heavy retrieval.
 
     PYTHONPATH=src python examples/multimodal_rag.py
 """
@@ -12,17 +13,52 @@ from repro.configs import get_config, smoke_config
 from repro.core import HMGIIndex
 from repro.data.synthetic import make_corpus
 from repro.models import lm
+from repro.query import Q
 from repro.serving.engine import EngineConfig, RAGEngine
 
-# 1. knowledge corpus + index
-corpus = make_corpus(n_nodes=1500, modality_dims={"text": 48}, seed=0)
+# 1. knowledge corpus + index: text and image entities in one graph, typed
+#    edges (we treat type 1 as :authored), a `year` attribute column
+corpus = make_corpus(n_nodes=1500, modality_dims={"text": 48, "image": 32},
+                     seed=0)
+AUTHORED = 1
+rng0 = np.random.default_rng(0)
+year = rng0.integers(2010, 2026, corpus.n_nodes).astype(np.int32)
 cfg = get_config("hmgi").replace(n_partitions=16, n_probe=4, top_k=4,
                                  kmeans_iters=8)
 index = HMGIIndex(cfg, seed=0)
-index.ingest({"text": (corpus.node_ids["text"], corpus.vectors["text"])},
+index.ingest({m: (corpus.node_ids[m], corpus.vectors[m])
+              for m in corpus.vectors},
              n_nodes=corpus.n_nodes,
-             edges=(corpus.src, corpus.dst, corpus.edge_type))
+             edges=(corpus.src, corpus.dst, corpus.edge_type),
+             node_attrs={"year": year})
 print(f"index built: {index.memory_usage()['total']/2**20:.2f} MiB")
+
+# 1b. declarative hybrid query: "find entities (e.g. images) related via
+#     :authored edges to text matches WHERE year > 2020". The predicate is
+#     chain-global — it constrains the seed scan (pushdown or oversampling,
+#     the planner decides from its selectivity), the traversal routing
+#     (excluded nodes forward no mass) and the surfaced candidates.
+qtext = corpus.vectors["text"][:4]
+plan = (Q.vector("text", qtext)
+          .where(("year", ">", 2020))
+          .traverse(2, edge_types=(AUTHORED,))
+          .topk(8))
+print("plan:", index.explain(plan))
+scores, ids = index.query(plan)
+is_image = np.isin(np.asarray(ids), corpus.node_ids["image"])
+print(f"hits: {int((np.asarray(ids) >= 0).sum())} "
+      f"({int(is_image.sum())} image entities reached via :authored)")
+
+# 1c. plans compose: re-score text matches in the image embedding space,
+#     or intersect two seed scans (set ops over candidate sets)
+qimg = corpus.vectors["image"][:4]
+rescored = (Q.vector("text", qtext).traverse(1)
+              .cross_modal("image", qimg, weight=0.4).topk(4))
+both = Q.intersect(Q.vector("text", qtext).topk(32),
+                   Q.vector("text", qtext + 0.05).topk(32)).topk(4)
+for p in (rescored, both):
+    print("plan:", index.explain(p))
+    index.query(p)
 
 # 2. a small LM (reduced phi4-family config) as the generator
 lm_cfg = smoke_config("phi4-mini-3.8b")

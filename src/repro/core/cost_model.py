@@ -127,3 +127,37 @@ def plan_filtered_scan(selectivity: float, k: int, *, n_rows: int,
         return FilteredScanPlan("prefilter", k, sel)
     k_scan = min(n_rows, max(k + 1, int(math.ceil(k * oversample / sel))))
     return FilteredScanPlan("oversample", k_scan, sel)
+
+
+# ---------------------------------------------------------------------------
+# query-engine stage planning (repro/query/planner.py consumes these)
+# ---------------------------------------------------------------------------
+
+def plan_seed_width(k: int, downstream: bool) -> int:
+    """Scan width for a vector-seed stage: the bare top-k when the seeds are
+    the answer; oversampled (fusion/re-score headroom, the facade's historic
+    2k ∨ k+8 rule) when later stages re-rank or combine them."""
+    return max(2 * k, k + 8) if downstream else k
+
+
+@dataclasses.dataclass(frozen=True)
+class FusionPlan:
+    """Shape of a traversal-fusion stage: candidate-sparse (fuse over the
+    seeds ∪ frontier union, O(Q·C) memory) vs dense (fuse over all N nodes).
+
+    Sparse wins whenever the frontier is a strict subset of the corpus — its
+    peak memory is corpus-size independent and its exactness argument holds
+    (frontier = k_fuse + C_in). When ``frontier`` reaches ``n_nodes`` the
+    candidate union already spans every node, so the sparse bookkeeping
+    (dup masks, concat lanes) buys nothing over one dense scatter."""
+    repr: str                 # "sparse" | "dense"
+    k_fuse: int               # fused candidates kept (stage output width)
+    frontier: int             # traversal nodes admitted to the candidate set
+
+
+def plan_fusion(n_nodes: int, k: int, c_in: int) -> FusionPlan:
+    """c_in = incoming candidate-set width (the seed stage's scan width)."""
+    k_fuse = max(k, min(4 * k, n_nodes))
+    frontier = int(min(n_nodes, k_fuse + c_in))
+    return FusionPlan("dense" if frontier >= n_nodes else "sparse",
+                      k_fuse, frontier)

@@ -239,15 +239,31 @@ def search_with_delta(index: IVFIndex, delta: DeltaStore, queries: jax.Array, *,
                       rescore_margin: int = _RESCORE_MARGIN,
                       probes: Optional[jax.Array] = None,
                       node_pass: Optional[jax.Array] = None,
-                      impl: str = "auto") -> Tuple[jax.Array, jax.Array]:
+                      impl: str = "auto",
+                      mvcc_filter: bool = True) -> Tuple[jax.Array, jax.Array]:
     """Stable-ANNS ∪ delta-kernel-scan, visibility-filtered, dedup-merged.
 
     probes: optional precomputed partition assignment (see ivf.search).
-    node_pass: optional predicate mask pushed into both scans."""
+    node_pass: optional predicate mask pushed into both scans.
+
+    MVCC visibility (tombstones, superseded ids) is pushed into the stable
+    scan's validity mask exactly like the predicate — *pre* top-k. Masking
+    after the scan would let dead rows waste top-k slots (an update whose
+    old vector scores well would push a live k-th result out), so a scan at
+    full probe would no longer match brute force over the visible corpus.
+
+    mvcc_filter=False is the caller-asserted fast path for indexes that
+    have never seen a delete or update (the facade tracks this per
+    modality): it skips building the (N,) visibility mask and keeps the
+    unfiltered scan off the masked-gather lane."""
+    if mvcc_filter:
+        dead = jnp.logical_or(delta.tombstones, delta.superseded)
+        visible = ~dead if node_pass is None \
+            else jnp.logical_and(~dead, node_pass)
+    else:
+        visible = node_pass
     sv, si = ivf_mod.search(index, queries, n_probe=n_probe, k=k,
-                            probes=probes, node_pass=node_pass, impl=impl)
-    dead = jnp.logical_or(delta.tombstones, delta.superseded)
-    sv = jnp.where(dead[_clip_ids(delta, si)] | (si < 0), -jnp.inf, sv)
+                            probes=probes, node_pass=visible, impl=impl)
     dv, di = _scan_delta(delta, queries, k=k, margin=rescore_margin,
                          node_pass=node_pass)
     # delta may hold multiple versions of an id (insert-after-insert): stale

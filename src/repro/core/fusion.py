@@ -90,3 +90,16 @@ def fuse_topk(vector_sim_full: jax.Array, graph_score: jax.Array,
     """Dense fusion: candidates = all N nodes (ids are node positions).
     Delegates to the sparse path."""
     return fuse_topk_sparse(vector_sim_full, graph_score, weights, k)
+
+
+def scatter_sim(n_nodes: int, ids: jax.Array, sims: jax.Array) -> jax.Array:
+    """(Q, k) candidate (ids, sims) -> dense (Q, N) similarity, −inf off the
+    candidate set. Duplicate ids keep their maximum (matching the sparse
+    path's keep-highest dedup). This is the scatter of the *dense* fusion
+    representation — the query planner picks it over the candidate-sparse
+    path when the fusion frontier would cover every node anyway."""
+    qn = ids.shape[0]
+    dense = jnp.full((qn, n_nodes), -jnp.inf, sims.dtype)
+    rows = jnp.arange(qn)[:, None]
+    vals = jnp.where(ids >= 0, sims, -jnp.inf)
+    return dense.at[rows, jnp.clip(ids, 0, n_nodes - 1)].max(vals)

@@ -76,6 +76,30 @@ def degree(g: GraphStore) -> jax.Array:
     return g.indptr[1:] - g.indptr[:-1]
 
 
+def edge_type_lut(edge_types: Iterable[int]) -> jax.Array:
+    """Compiles a Cypher-style ``[:REL_A|:REL_B]`` filter — an iterable of
+    edge-type ids — into a (T,) fp32 mask (indexed by edge type; excluded
+    types carry zero weight, so they route no mass). T = max requested
+    id + 1; the traversal treats types beyond the mask as excluded, so the
+    graph's full type domain never needs to be known (no device reduction
+    at plan time)."""
+    raw = np.asarray(list(edge_types))
+    if raw.size and not np.issubdtype(raw.dtype, np.integer):
+        # a float-valued sequence is almost certainly a *mask* spelled as a
+        # list — reinterpreting it as type ids would silently invert the
+        # filter; masks must be passed as arrays (np/jnp)
+        raise ValueError("edge_types must be integer type ids; pass a "
+                         "(T,) mask as an array, not a list")
+    types = np.unique(raw.astype(np.int64))
+    if types.size == 0:
+        raise ValueError("empty edge-type set")
+    if types.min() < 0:
+        raise ValueError("edge-type ids must be non-negative")
+    lut = np.zeros(int(types.max()) + 1, np.float32)
+    lut[types] = 1.0
+    return jnp.asarray(lut)
+
+
 # ---------------------------------------------------------------------------
 # Node attributes + predicates (the relational WHERE clause)
 # ---------------------------------------------------------------------------

@@ -11,8 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import time
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,19 +21,19 @@ from repro.configs.base import HMGIConfig
 from repro.core import delta as delta_mod
 from repro.core import ivf as ivf_mod
 from repro.core import nsw as nsw_mod
-from repro.core import traversal as trav_mod
 from repro.core import community as comm_mod
 from repro.core import rerank as rerank_mod
-from repro.core.cost_model import (CostModel, DEFAULT_PLANS, QueryPlan,
-                                   estimate_selectivity, plan_filtered_scan,
-                                   select_plan)
-from repro.core.fusion import FusionWeights, adaptive_weights, fuse_topk_sparse
+from repro.core.cost_model import CostModel, select_plan
+from repro.core.fusion import FusionWeights, fuse_topk_sparse
 from repro.core import graph_store as graph_mod
 from repro.core.graph_store import (GraphStore, NodeAttributes,
                                     from_edges as graph_from_edges)
-from repro.core.partitioner import WorkloadStats, assign_topk
+from repro.core.partitioner import WorkloadStats
 from repro.core.quantization import AdaptiveQuantPolicy
-from repro.kernels.ivf_topk.ref import pad_topk
+
+# NOTE: repro.query (the declarative engine this facade compiles onto) is
+# imported lazily inside methods — repro.query.planner/executor import core
+# submodules at module scope, so a top-level import here would cycle.
 
 
 @functools.partial(jax.jit, static_argnames=("k_fuse", "frontier"))
@@ -104,6 +103,13 @@ class ModalityIndex:
     ids: jax.Array              # (N,) global node ids
     nsw: Optional[nsw_mod.NSWGraph] = None
     workload: Optional[WorkloadStats] = None
+    # True once any delete/update touched this modality: gates the MVCC
+    # visibility pushdown in the scan (never reset — conservative; False
+    # guarantees no dead row can be visible, so scans skip the mask)
+    has_dead: bool = False
+    # (n_nodes,) global-id -> row cache for cross-modal re-scoring; rebuilt
+    # lazily by the executor, invalidated when ``ids`` gains new entries
+    id_rows: Optional[jax.Array] = None
 
 
 class HMGIIndex:
@@ -197,35 +203,28 @@ class HMGIIndex:
                              "set_attributes() or ingest(node_attrs=...)")
         return self.attributes.node_pass(where)
 
-    def _search_raw(self, m: ModalityIndex, q: jax.Array, probes, n_probe: int,
-                    k: int, node_pass=None, impl: str = "auto"):
-        """One stable+delta scan round (centroids pre-scored in ``probes``)."""
-        scores, ids = delta_mod.search_with_delta(
-            m.ivf, m.delta, q, n_probe=n_probe, k=k,
-            rescore_margin=self.cfg.delta_rescore_margin, probes=probes,
-            node_pass=node_pass, impl=impl)
-        if self.cfg.use_nsw_refine and m.nsw is not None:
-            ns, ni = nsw_mod.search(m.nsw, q, ef=self.cfg.nsw_ef, k=k)
-            ni = jnp.where(ni >= 0, m.ids[jnp.clip(ni, 0, m.ids.shape[0] - 1)], -1)
-            # the NSW layer indexes ingest-time rows: apply the same MVCC
-            # visibility rules as the stable scan (deletes and superseded
-            # versions must not resurface through the refine lane) plus the
-            # predicate mask
-            dead = jnp.logical_or(m.delta.tombstones, m.delta.superseded)
-            ok = jnp.logical_and(
-                ni >= 0, ~dead[jnp.clip(ni, 0, dead.shape[0] - 1)])
-            if node_pass is not None:
-                ok = jnp.logical_and(ok, graph_mod.mask_pass(node_pass, ni))
-            ns = jnp.where(ok, ns, -jnp.inf)
-            ni = jnp.where(ok, ni, -1)
-            scores, ids = ivf_mod.dedup_merge_topk(scores, ids, ns, ni, k)
-            ids = jnp.where(jnp.isfinite(scores), ids, -1)
-        return scores, ids
+    def query(self, plan):
+        """Runs a declarative plan (see ``repro.query.Q``): compiles it
+        cost-wise against this index (predicate pushdown vs post-filter,
+        probe widths, sparse vs dense fusion) and executes it as staged
+        jitted primitives. Returns (scores (Q, k), ids (Q, k))."""
+        from repro.query.executor import execute
+        from repro.query.planner import compile_plan
+        return execute(self, compile_plan(self, plan))
+
+    def explain(self, plan) -> str:
+        """The compiled physical plan for ``plan``, as a one-line string
+        (stage order, widths, filter mode, fusion representation)."""
+        from repro.query.planner import compile_plan
+        return compile_plan(self, plan).describe()
 
     def search(self, queries, modality: str, k: Optional[int] = None,
                n_probe: Optional[int] = None, where=None, impl: str = "auto",
                *, _node_pass=None):
         """Pure vector search (ANNS on stable index + delta), tombstone-aware.
+
+        A thin wrapper over the query engine: builds the one-stage plan
+        ``Q.vector(modality, queries).where(where).topk(k)`` and executes it.
 
         where: optional relational predicate — a (column, op, value) tuple or
         a list of them (AND), evaluated against the attribute store. The
@@ -235,51 +234,14 @@ class HMGIIndex:
         the post-filter pass doubles its scan width until every query has k
         qualifying candidates (or the probed slabs are exhausted), so at full
         probe both strategies return the brute-force-with-predicate top-k."""
-        m = self.modalities[modality]
-        q = self._norm_queries(queries)
-        n_probe = min(n_probe or self.cfg.n_probe, m.ivf.n_partitions)
-        k = k or self.cfg.top_k
-        # centroids are scored once per batch: the same assignment feeds the
-        # workload tracker and (as precomputed probes) the IVF scan
-        probes, _ = assign_topk(q, m.ivf.centroids, n_probe)
-        if m.workload is not None:
-            m.workload.record(np.asarray(probes))
-        node_pass = _node_pass if _node_pass is not None \
-            else self._node_pass(where)
-        if node_pass is None:
-            return self._search_raw(m, q, probes, n_probe, k, impl=impl)
-        plan = plan_filtered_scan(
-            estimate_selectivity(node_pass), k,
-            n_rows=int(m.ids.shape[0]),
-            oversample=self.cfg.filter_oversample,
-            prefilter_max_sel=self.cfg.filter_prefilter_max_sel)
-        self._metrics["filter_selectivity"] = plan.selectivity
-        self._metrics["filter_mode"] = plan.mode
-        if plan.mode == "prefilter":
-            return self._search_raw(m, q, probes, n_probe, k,
-                                    node_pass=node_pass, impl=impl)
-        # oversample-then-post-filter: scan unfiltered at k_scan, keep
-        # qualifying rows, widen until k survivors per query (exactness:
-        # the unfiltered top-k_scan is descending, so once k rows pass, they
-        # are the filtered top-k over everything the probes saw)
-        k_max = min(int(m.ids.shape[0]),
-                    n_probe * m.ivf.capacity + m.delta.ids.shape[0])
-        # pow2-round: k_scan is a static jit arg, so raw selectivity-derived
-        # widths would recompile the scan pipeline per distinct batch
-        k_scan = min(max(k, 1 << (plan.k_scan - 1).bit_length()), k_max)
-        while True:
-            sv, si = self._search_raw(m, q, probes, n_probe, k_scan, impl=impl)
-            ok = graph_mod.mask_pass(node_pass, si)
-            sv = jnp.where(ok, sv, -jnp.inf)
-            if k_scan >= k_max:
-                break
-            if int(jnp.min(jnp.sum(ok, axis=1))) >= k:
-                break
-            k_scan = min(2 * k_scan, k_max)
-        vals, pos = jax.lax.top_k(sv, min(k, sv.shape[1]))
-        ids = jnp.take_along_axis(si, pos, axis=1)
-        ids = jnp.where(jnp.isfinite(vals), ids, -1)
-        return pad_topk(vals, ids, k)
+        from repro.query.ast import Q
+        from repro.query.executor import execute
+        from repro.query.planner import compile_plan
+        plan = Q.vector(modality, queries, n_probe=n_probe,
+                        impl=impl).where(where)
+        phys = compile_plan(self, plan, k=k or self.cfg.top_k,
+                            node_pass=_node_pass)
+        return execute(self, phys)
 
     def hybrid_search(self, queries, modality: str, k: Optional[int] = None,
                       n_hops: Optional[int] = None,
@@ -292,12 +254,20 @@ class HMGIIndex:
         """The paper's hybrid query (Eq. 3): ANNS seeds -> h-hop traversal ->
         adaptive fusion -> (optional sparse-dense rerank). Returns (scores, ids).
 
+        A thin wrapper over the query engine — it builds and executes
+        ``Q.vector(...).where(where).traverse(n_hops, edge_types=...)``
+        (fusion representation pinned to the candidate-sparse path), then
+        applies the optional rerank lane to the untruncated candidate set.
+
         where: optional relational predicate (see ``search``). It is enforced
         at every stage: seed search (pushdown or planned oversampling),
         traversal (excluded nodes route no mass — ``frontier_expand``'s node
         mask), and fusion (excluded frontier nodes can't take candidate
         slots) — "nearest neighbors of q WHERE node.attr = v within h hops"
         as one query."""
+        from repro.query.ast import Q
+        from repro.query.executor import execute
+        from repro.query.planner import compile_plan
         assert self.graph is not None, "hybrid_search needs a graph"
         cfg = self.cfg
         k = k or cfg.top_k
@@ -311,40 +281,16 @@ class HMGIIndex:
             use_rerank = use_rerank or plan.use_rerank
         n_hops = cfg.max_hops if n_hops is None else n_hops
         q = self._norm_queries(queries)
-        node_pass = self._node_pass(where)
 
-        # stage 1: vector candidates (oversampled for fusion headroom);
-        # the predicate was compiled once above and is shared by every stage
-        k_seed = max(2 * k, k + 8)
-        vs, vi = self.search(q, modality, k=k_seed, n_probe=n_probe,
-                             _node_pass=node_pass)
+        plan = (Q.vector(modality, q, n_probe=n_probe)
+                .where(where)
+                .traverse(n_hops, edge_types=edge_type_mask))
+        phys = compile_plan(self, plan, k=k, fusion_repr="sparse")
+        fvals, fids = execute(self, phys, truncate=False)
 
         if n_hops == 0:
-            return vs[:, :k], vi[:, :k]
-
-        # stage 2: graph traversal from seeds (community-boosted weights);
-        # predicate-excluded nodes neither receive nor forward mass
-        g = self.graph
-        if self.boosted_weights is not None:
-            g = g._replace(edge_weight=self.boosted_weights)
-        graph_scores = trav_mod.multi_hop_batch(
-            g, vi, vs, n_hops=n_hops, edge_type_mask=edge_type_mask,
-            node_mask=node_pass)                                       # (Q, N)
-
-        # stage 3: candidate-sparse fusion (Eq. 3) over seeds ∪ frontier —
-        # never a dense (Q, n_nodes) similarity scatter
-        w = (adaptive_weights(vs, base_wv=cfg.w_vector, base_wg=cfg.w_graph)
-             if cfg.adaptive_weights else
-             FusionWeights(jnp.full((q.shape[0],), cfg.w_vector),
-                           jnp.full((q.shape[0],), cfg.w_graph)))
-        k_fuse = max(k, min(4 * k, self.n_nodes))
-        frontier = int(min(self.n_nodes, k_fuse + k_seed))
-        fvals, fids = _fuse_candidates(vs, vi, graph_scores,
-                                       w.w_vector, w.w_graph,
-                                       k_fuse=k_fuse, frontier=frontier,
-                                       node_pass=node_pass)
-
-        # stage 4: optional sparse-dense rerank
+            return fvals[:, :k], fids[:, :k]
+        # optional sparse-dense rerank over the full fused candidate set
         if use_rerank and self.sparse_docs is not None and q_terms is not None:
             sp = rerank_mod.sparse_overlap_scores(self.sparse_docs, q_terms,
                                                   q_term_weights, fids)
@@ -368,6 +314,7 @@ class HMGIIndex:
         upd_mask = (sorted_ids[pos_c] == ids_np) if existing_np.size \
             else np.zeros(ids_np.shape, bool)
         if upd_mask.any():
+            m.has_dead = True
             m.delta = delta_mod.supersede(m.delta, ids32[jnp.asarray(upd_mask)])
             rows = order[pos_c[upd_mask]]
             m.vectors = m.vectors.at[jnp.asarray(rows)].set(v[jnp.asarray(upd_mask)])
@@ -375,6 +322,7 @@ class HMGIIndex:
             sel = jnp.asarray(~upd_mask)
             m.vectors = jnp.concatenate([m.vectors, v[sel]], axis=0)
             m.ids = jnp.concatenate([m.ids, ids32[sel]])
+            m.id_rows = None        # new ids -> the row cache is stale
         # never drop writes: compact to make room, then grow if the batch
         # alone exceeds the (fresh) delta's capacity
         if delta_mod.free_slots(m.delta) < v.shape[0]:
@@ -385,6 +333,7 @@ class HMGIIndex:
 
     def delete(self, modality: str, ids):
         m = self.modalities[modality]
+        m.has_dead = True
         m.delta = delta_mod.delete(m.delta, jnp.asarray(ids, jnp.int32))
 
     def compact(self, modality: str):

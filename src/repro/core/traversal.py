@@ -15,12 +15,22 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.graph_store import GraphStore
+from repro.core.graph_store import GraphStore, edge_type_lut
 
 
 class TraversalResult(NamedTuple):
     per_hop: jax.Array    # (h, N) fp32 — mass arriving at each node per hop
     total: jax.Array      # (N,) fp32 — mean over hops (Eq. 3's (1/h)·Σ s_g)
+
+
+def as_edge_mask(edge_type_mask) -> Optional[jax.Array]:
+    """Normalises the two spellings of an edge-type filter: a (T,) mask
+    array (indexed by edge type) passes through; an iterable of edge-type
+    ids — the query engine's ``Traverse(edge_types=…)`` — compiles to one
+    via ``graph_store.edge_type_lut``. Edge types ≥ T read as excluded."""
+    if edge_type_mask is None or hasattr(edge_type_mask, "shape"):
+        return edge_type_mask
+    return edge_type_lut(edge_type_mask)
 
 
 def frontier_expand(g: GraphStore, seed_scores: jax.Array, *, n_hops: int,
@@ -40,8 +50,14 @@ def frontier_expand(g: GraphStore, seed_scores: jax.Array, *, n_hops: int,
     """
     n = g.n_nodes
     ew = g.edge_weight
+    edge_type_mask = as_edge_mask(edge_type_mask)
     if edge_type_mask is not None:
-        ew = ew * edge_type_mask[g.edge_type]
+        # safe gather: types beyond the mask's domain are excluded (a
+        # clamped gather would silently reuse the last type's weight)
+        t = edge_type_mask.shape[0]
+        ew = ew * jnp.where(g.edge_type < t,
+                            edge_type_mask[jnp.clip(g.edge_type, 0, t - 1)],
+                            0.0)
     # out-degree normalisation (random-walk style push)
     deg_w = jax.ops.segment_sum(ew, g.src, num_segments=n)
     inv_deg = jnp.where(deg_w > 0, 1.0 / jnp.maximum(deg_w, 1e-12), 0.0)
@@ -84,7 +100,11 @@ def multi_hop_batch(g: GraphStore, ids: jax.Array, scores: jax.Array, *,
     """Vmapped traversal for a batch of vector-search results.
 
     ids/scores: (Q, k) -> (Q, N) graph relevance (mean per-hop mass).
-    node_mask: (N,) bool predicate mask shared across the batch."""
+    node_mask: (N,) bool predicate mask shared across the batch.
+    edge_type_mask: a (T,) mask or an iterable of edge-type ids (see
+    ``as_edge_mask``)."""
+    edge_type_mask = as_edge_mask(edge_type_mask)
+
     def one(i, s):
         seed = seeds_from_topk(g.n_nodes, i, s)
         return frontier_expand(g, seed, n_hops=n_hops,

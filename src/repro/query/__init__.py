@@ -1,0 +1,10 @@
+# Declarative hybrid query engine: AST + builder (ast), cost-based
+# logical->physical compiler (planner), staged executor over the core's
+# jitted primitives (executor). Public surface:
+#
+#     from repro.query import Q
+#     scores, ids = index.query(Q.vector("text", q).traverse(2).topk(10))
+from repro.query.ast import (CrossModal, Plan, Q, SetOp, Traverse,
+                             VectorSeed, Where)
+from repro.query.planner import PhysicalPlan, compile_plan
+from repro.query.executor import execute

@@ -52,14 +52,12 @@ class RAGEngine:
         self._pos = 0
         self.stats = {"ticks": 0, "tokens": 0, "retrievals": 0}
 
-    # -- query embedding (mean-pooled final hidden states) --------------------
+    # -- query embedding (mean-pooled token embeddings) -----------------------
     def _embed(self, params, tokens):
-        logits, _ = lm.forward(self.lm_cfg, params, tokens, self.mesh, self._opts)
-        # cheap sentence embedding: mean logits projection is vocab-sized;
-        # instead reuse the embedding table: mean of token embeddings
+        # cheap sentence embedding from the embedding table alone — no
+        # transformer forward (a full prefill here would be pure wasted
+        # compute: its logits were never used)
         emb = jnp.take(params["embed"], tokens, axis=0)
-        if emb.ndim == 3 and emb.shape[-1] != self.lm_cfg.d_model:
-            emb = emb  # tied table layout (V, D) -> fine
         return jnp.mean(emb, axis=1)
 
     def embed_queries(self, token_batch: np.ndarray) -> np.ndarray:
