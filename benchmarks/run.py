@@ -9,6 +9,7 @@
   filtered_bench — attribute-filtered search: pushdown vs post-filter sweep
   query_bench   — declarative query engine: relationship-heavy canned plans
                   (ms/query + compiled plan choice)
+  sharded_bench — sharded execution path: 1/2/4/8-shard probe+merge scaling
 
 Prints ``name,us_per_call,derived`` CSV.
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module>]
@@ -25,7 +26,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     choices=["paper_tables", "ablations", "scaling",
                              "kernels_bench", "hybrid_bench",
-                             "filtered_bench", "query_bench"])
+                             "filtered_bench", "query_bench",
+                             "sharded_bench"])
     args = ap.parse_args()
 
     rows = []
@@ -35,11 +37,12 @@ def main() -> None:
         print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
     from benchmarks import (ablations, filtered_bench, hybrid_bench,
-                            kernels_bench, paper_tables, query_bench, scaling)
+                            kernels_bench, paper_tables, query_bench, scaling,
+                            sharded_bench)
     mods = {"paper_tables": paper_tables, "ablations": ablations,
             "scaling": scaling, "kernels_bench": kernels_bench,
             "hybrid_bench": hybrid_bench, "filtered_bench": filtered_bench,
-            "query_bench": query_bench}
+            "query_bench": query_bench, "sharded_bench": sharded_bench}
     selected = [mods[args.only]] if args.only else list(mods.values())
 
     print("name,us_per_call,derived")

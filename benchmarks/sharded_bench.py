@@ -1,0 +1,55 @@
+"""Sharded execution path: per-shard probe + cross-shard merge scaling.
+
+Rows: the single-device probe scan, then ``search_sharded`` at 1/2/4/8
+shards (as many as the process has devices — run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the full sweep
+on CPU). Derived columns report the speedup over the single-device scan and
+the merge overhead (sharded end-to-end minus one shard's local scan — the
+all-gather + top-k merge the distribution pays per query).
+
+On forced-host-device CPU the "shards" share one socket, so wall-clock
+speedup is not the point — the merge overhead and the scaling shape are.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import ivf as ivf_mod
+from benchmarks.common import timeit
+
+N, D, K_PARTS, N_PROBE, K, Q = 8192, 64, 32, 8, 10, 32
+
+
+def run(report):
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=(N, D)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    idx, _ = ivf_mod.build(jax.random.PRNGKey(0), jnp.asarray(v),
+                           jnp.arange(N), n_partitions=K_PARTS, bits=8)
+    q = jnp.asarray(v[:Q] + 0.02 * rng.normal(size=(Q, D)).astype(np.float32))
+
+    t_single = timeit(lambda: ivf_mod.search(idx, q, n_probe=N_PROBE, k=K))
+    report("sharded/single_device", t_single * 1e6 / Q, f"n={N} d={D}")
+
+    n_dev = len(jax.devices())
+    for s in (1, 2, 4, 8):
+        if s > n_dev:
+            report(f"sharded/x{s}", 0.0,
+                   f"skipped: {n_dev} devices (set XLA_FLAGS="
+                   f"--xla_force_host_platform_device_count=8)")
+            continue
+        mesh = Mesh(np.array(jax.devices()[:s]).reshape(s), ("data",))
+        sh = ivf_mod.shard_index(idx, s)
+        fn = jax.jit(lambda st, qq, m=mesh: ivf_mod.search_sharded(
+            st, qq, m, n_probe=N_PROBE, k=K))
+        t_shard = timeit(fn, sh, q)
+        # one shard's local scan in isolation: the compute each device does
+        loc = ivf_mod.IVFIndex(sh.centroids[0], sh.data[0], sh.vmin[0],
+                               sh.scale[0], sh.ids[0], sh.counts[0], sh.bits)
+        t_local = timeit(lambda: ivf_mod.search(loc, q, n_probe=N_PROBE, k=K))
+        report(f"sharded/x{s}", t_shard * 1e6 / Q,
+               f"speedup_vs_single={t_single / t_shard:.2f}x "
+               f"merge_overhead_us={(t_shard - t_local) * 1e6 / Q:.1f}")

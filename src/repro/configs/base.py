@@ -225,4 +225,9 @@ class HMGIConfig(ArchConfig):
     # attribute-filtered search (predicate pushdown vs oversampling)
     filter_prefilter_max_sel: float = 0.5  # pushdown when sel <= this
     filter_oversample: float = 3.0         # initial k inflation when not
+    # sharded execution path (cost_model.plan_device_layout)
+    shard_layout: str = "auto"             # "auto" | "single" | "sharded"
+    shard_device_budget_bytes: int = 256 << 20   # shard the stable scan when
+                                           # one device's quantized slab share
+                                           # would exceed this
     dtype: str = "float32"

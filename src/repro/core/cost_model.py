@@ -130,6 +130,42 @@ def plan_filtered_scan(selectivity: float, k: int, *, n_rows: int,
 
 
 # ---------------------------------------------------------------------------
+# device layout planning (single-device vs row-sharded stable scan)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceLayoutPlan:
+    """Where a modality's stable scan runs: "single" (one device holds the
+    whole slab) or "sharded" (row-sharded over the mesh's db axes, per-shard
+    probes + cross-shard top-k merge — see ivf.shard_index)."""
+    layout: str               # "single" | "sharded"
+    n_shards: int             # 1 for "single"
+
+
+def plan_device_layout(n_rows: int, dim: int, *, n_shards: int,
+                       budget_bytes: int, bytes_per_elem: int = 1,
+                       force: Optional[str] = None) -> DeviceLayoutPlan:
+    """Shard the stable scan when one device's slab share would exceed the
+    per-device budget (n_rows·dim quantized bytes — the HBM-residency the
+    probe path actually touches), single-device otherwise. Sharding below
+    that is pure overhead: the probe scan is already one device's flops, and
+    the cross-shard all-gather+merge adds a collective per query.
+
+    force: "single"/"sharded" overrides the decision (cfg.shard_layout);
+    forcing "sharded" on a 1-shard mesh still degenerates to "single"."""
+    if force not in (None, "auto", "single", "sharded"):
+        raise ValueError(f"unknown layout {force!r}")
+    if n_shards <= 1 or force == "single":
+        return DeviceLayoutPlan("single", 1)
+    if force == "sharded":
+        return DeviceLayoutPlan("sharded", n_shards)
+    slab_bytes = n_rows * dim * bytes_per_elem
+    if budget_bytes > 0 and slab_bytes > budget_bytes:
+        return DeviceLayoutPlan("sharded", n_shards)
+    return DeviceLayoutPlan("single", 1)
+
+
+# ---------------------------------------------------------------------------
 # query-engine stage planning (repro/query/planner.py consumes these)
 # ---------------------------------------------------------------------------
 

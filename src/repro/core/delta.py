@@ -234,6 +234,20 @@ def _scan_delta(delta: DeltaStore, queries: jax.Array, *, k: int,
     return pad_topk(vals, di, k)
 
 
+def _stable_visibility(delta: DeltaStore, node_pass: Optional[jax.Array],
+                       mvcc_filter: bool) -> Optional[jax.Array]:
+    """The stable scan's pre-top-k validity mask: MVCC visibility
+    (tombstones | superseded out) ∧ the optional predicate. The one spelling
+    shared by the single-device and sharded paths — their results must stay
+    bit-identical, so their visibility semantics must not be able to drift.
+    mvcc_filter=False is the caller-asserted never-mutated fast path (no
+    (N,) mask built when there is no predicate either)."""
+    if not mvcc_filter:
+        return node_pass
+    dead = jnp.logical_or(delta.tombstones, delta.superseded)
+    return ~dead if node_pass is None else jnp.logical_and(~dead, node_pass)
+
+
 def search_with_delta(index: IVFIndex, delta: DeltaStore, queries: jax.Array, *,
                       n_probe: int, k: int,
                       rescore_margin: int = _RESCORE_MARGIN,
@@ -256,12 +270,7 @@ def search_with_delta(index: IVFIndex, delta: DeltaStore, queries: jax.Array, *,
     have never seen a delete or update (the facade tracks this per
     modality): it skips building the (N,) visibility mask and keeps the
     unfiltered scan off the masked-gather lane."""
-    if mvcc_filter:
-        dead = jnp.logical_or(delta.tombstones, delta.superseded)
-        visible = ~dead if node_pass is None \
-            else jnp.logical_and(~dead, node_pass)
-    else:
-        visible = node_pass
+    visible = _stable_visibility(delta, node_pass, mvcc_filter)
     sv, si = ivf_mod.search(index, queries, n_probe=n_probe, k=k,
                             probes=probes, node_pass=visible, impl=impl)
     dv, di = _scan_delta(delta, queries, k=k, margin=rescore_margin,
@@ -270,6 +279,40 @@ def search_with_delta(index: IVFIndex, delta: DeltaStore, queries: jax.Array, *,
     # versions are masked in _scan_delta; dedup covers stable-vs-delta overlap
     mv, mi = ivf_mod.dedup_merge_topk(sv, si, dv, di, k)
     # -inf slots are "no result": don't leak a masked (e.g. tombstoned) id
+    return mv, jnp.where(jnp.isfinite(mv), mi, -1)
+
+
+def search_with_delta_sharded(sharded: IVFIndex, delta: DeltaStore,
+                              queries: jax.Array, mesh, *, n_probe: int, k: int,
+                              rescore_margin: int = _RESCORE_MARGIN,
+                              probes: Optional[jax.Array] = None,
+                              node_pass: Optional[jax.Array] = None,
+                              impl: str = "auto",
+                              mvcc_filter: bool = True) -> Tuple[jax.Array, jax.Array]:
+    """``search_with_delta`` over a row-sharded stable store (the sharded
+    execution path): per-shard masked probes + cross-shard merge via
+    ``ivf.search_sharded``, one replicated delta scan, dedup-merge.
+
+    ``sharded`` is an ``ivf.shard_index`` layout (leading shard dim per
+    leaf). The MVCC visibility mask and the predicate mask are built exactly
+    as in the single-device path and broadcast (replicated) into every
+    shard's scan — pre-top-k, so per-shard top-k lists only ever hold
+    visible, qualifying rows. The delta is replicated state: scanning it once
+    outside the shard_map and merging host-side is both cheaper than S
+    redundant scans and keeps the two paths' results identical."""
+    visible = _stable_visibility(delta, node_pass, mvcc_filter)
+    sv, si = ivf_mod.search_sharded(sharded, queries, mesh, n_probe=n_probe,
+                                    k=k, probes=probes, node_pass=visible,
+                                    impl=impl)
+    # the distributed section ends at the cross-shard merge: the (Q, k)
+    # candidate state is tiny, and every downstream stage (delta merge,
+    # traversal, fusion) is a single-device computation — pulling the
+    # replicated result onto the default device here keeps those stages
+    # compiling exactly as in the single-device path
+    sv, si = jax.device_put((sv, si), jax.devices()[0])
+    dv, di = _scan_delta(delta, queries, k=k, margin=rescore_margin,
+                         node_pass=node_pass)
+    mv, mi = ivf_mod.dedup_merge_topk(sv, si, dv, di, k)
     return mv, jnp.where(jnp.isfinite(mv), mi, -1)
 
 

@@ -23,7 +23,8 @@ from repro.core import ivf as ivf_mod
 from repro.core import nsw as nsw_mod
 from repro.core import community as comm_mod
 from repro.core import rerank as rerank_mod
-from repro.core.cost_model import CostModel, select_plan
+from repro.core.cost_model import (CostModel, DeviceLayoutPlan,
+                                   plan_device_layout, select_plan)
 from repro.core.fusion import FusionWeights, fuse_topk_sparse
 from repro.core import graph_store as graph_mod
 from repro.core.graph_store import (GraphStore, NodeAttributes,
@@ -110,6 +111,10 @@ class ModalityIndex:
     # (n_nodes,) global-id -> row cache for cross-modal re-scoring; rebuilt
     # lazily by the executor, invalidated when ``ids`` gains new entries
     id_rows: Optional[jax.Array] = None
+    # row-sharded replica of ``ivf`` (ivf.shard_index layout, leaves placed
+    # over the mesh's db axes); built lazily when the device-layout plan
+    # says "sharded", dropped whenever the stable store is rebuilt
+    ivf_sharded: Optional[ivf_mod.IVFIndex] = None
 
 
 class HMGIIndex:
@@ -202,6 +207,32 @@ class HMGIIndex:
             raise ValueError("filtered search needs attributes: call "
                              "set_attributes() or ingest(node_attrs=...)")
         return self.attributes.node_pass(where)
+
+    def device_layout(self, modality: str) -> DeviceLayoutPlan:
+        """Where this modality's stable scan runs: row-sharded over the
+        mesh's db axes when the quantized slab exceeds
+        cfg.shard_device_budget_bytes (cfg.shard_layout forces either way),
+        single-device otherwise. No mesh ⇒ always single."""
+        from repro.sharding.rules import db_shards
+        m = self.modalities[modality]
+        force = None if self.cfg.shard_layout == "auto" else self.cfg.shard_layout
+        return plan_device_layout(
+            int(np.prod(m.ivf.data.shape[:2])), int(m.ivf.data.shape[-1]),
+            n_shards=db_shards(self.mesh),
+            budget_bytes=self.cfg.shard_device_budget_bytes,
+            bytes_per_elem=int(m.ivf.data.dtype.itemsize), force=force)
+
+    def _ensure_sharded(self, modality: str, n_shards: int) -> ivf_mod.IVFIndex:
+        """The row-sharded stable replica (built lazily, leaves placed over
+        the mesh's db axes; invalidated whenever the stable store changes)."""
+        m = self.modalities[modality]
+        if m.ivf_sharded is None or m.ivf_sharded.ids.shape[0] != n_shards:
+            sh = ivf_mod.shard_index(m.ivf, n_shards)
+            if self.mesh is not None:
+                sh = jax.tree_util.tree_map(ivf_mod.shard_placement(self.mesh),
+                                            sh)
+            m.ivf_sharded = sh
+        return m.ivf_sharded
 
     def query(self, plan):
         """Runs a declarative plan (see ``repro.query.Q``): compiles it
@@ -341,6 +372,7 @@ class HMGIIndex:
         m = self.modalities[modality]
         m.ivf, m.delta = delta_mod.compact(self._split(), m.ivf, m.delta,
                                            m.vectors, m.ids)
+        m.ivf_sharded = None    # stable store rebuilt -> sharded replica stale
         if m.nsw is not None:
             # compaction clears the superseded mask, which is what hid
             # updated rows from the NSW lane — refresh it over the latest
@@ -369,6 +401,7 @@ class HMGIIndex:
             n_partitions=m.ivf.n_partitions, bits=m.ivf.bits,
             capacity=m.ivf.capacity, centroids=new.centroids)
         m.ivf = index
+        m.ivf_sharded = None    # stable store rebuilt -> sharded replica stale
         # overflow -> delta (skip tombstoned ids: delta.insert would clear
         # their tombstones and resurrect deleted rows)
         over = np.array(overflow)                      # writable host copy

@@ -22,10 +22,19 @@ as the benchmark baseline), or "auto" (kernel whenever bits == 8). Off-TPU
 the kernel runs under ``interpret=True``, probed once on the first kernel
 call (see ``kernels/ivf_topk/ops._interpret_mode``).
 
-``search_sharded`` distributes over the ("pod","data") mesh axes: the corpus
-is row-sharded (each shard owns its own partitioning of its rows), every
-shard emits a local top-k, and one small all-gather + merge produces the
-global result (k ≪ N ⇒ collective-light).
+Sharded execution path. ``shard_index`` re-lays the stable slab out as S
+per-shard replicas with a leading shard dim: partition ``p``'s capacity slots
+are dealt round-robin across shards (slot j -> shard j % S, local slot
+j // S), the quantized rows move untouched (same int8 bytes, same per-row
+vmin/scale), and the centroids are replicated. Every shard therefore holds
+the same K partitions over a 1/S row slice, so a query's probe list —
+scored against identical centroids — selects exactly the single-device
+candidate set, split S ways. ``search_sharded`` runs the per-shard scan
+(kernel or einsum, with the same validity ∧ predicate mask pushdown as
+``search``) under ``shard_map`` over the ("pod","data") mesh axes, then
+all-gathers the S local top-k lists and merges — bit-identical scores to the
+single-device scan at any ``n_probe`` (k ≪ N ⇒ collective-light; ids may
+permute only where scores tie exactly).
 """
 from __future__ import annotations
 
@@ -302,34 +311,116 @@ def dedup_merge_topk(scores_a, ids_a, scores_b, ids_b, k: int):
     return vals, jnp.take_along_axis(i, pos, axis=-1)
 
 
-def search_sharded(index: IVFIndex, queries: jax.Array, mesh, *, n_probe: int,
-                   k: int, query_block: int = 64, impl: str = "auto"):
-    """Distributed search: index leaves carry a leading shard dim (S, ...)
-    row-sharded over ("pod","data"); queries replicated; local top-k then
-    all-gather(k)+merge. Local ids must already be globally unique. The local
-    scan uses the same kernel/einsum path selection as ``search``."""
-    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+def shard_index(index: IVFIndex, n_shards: int) -> IVFIndex:
+    """Re-lays the stable store out for ``n_shards``-way row-parallel search.
 
-    def local(cent, data, vmin, scale, ids, counts, q):
+    Returns an ``IVFIndex`` whose every leaf carries a leading shard dim
+    (S, ...): partition ``p``'s capacity slots are dealt round-robin (slot j
+    -> shard j % S, local slot j // S — builds pack live rows into the low
+    slots, so live rows spread evenly), the quantized rows are moved without
+    re-quantization (identical int8 bytes + per-row vmin/scale ⇒ identical
+    dequantized scores), and the centroids are replicated. A probe list
+    computed against the (identical) centroids therefore selects exactly the
+    single-device candidate set, split S ways — ``search_sharded`` over this
+    layout is score-bit-identical to ``search`` at any ``n_probe``.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    k, cap = index.ids.shape
+    cap_l = (cap + n_shards - 1) // n_shards
+    pad = n_shards * cap_l - cap
+
+    def deal(a, fill):
+        if pad:
+            widths = [(0, 0)] * a.ndim
+            widths[1] = (0, pad)
+            a = jnp.pad(a, widths, constant_values=fill)
+        # (K, cap_l·S, ...) -> (K, cap_l, S, ...) -> (S, K, cap_l, ...):
+        # local slot l of shard s is global slot l·S + s
+        a = a.reshape((k, cap_l, n_shards) + a.shape[2:])
+        return jnp.moveaxis(a, 2, 0)
+
+    ids = deal(index.ids, -1)
+    return IVFIndex(
+        centroids=jnp.broadcast_to(index.centroids,
+                                   (n_shards,) + index.centroids.shape),
+        data=deal(index.data, 0),
+        vmin=deal(index.vmin, 0.0),
+        scale=deal(index.scale, 1.0),
+        ids=ids,
+        counts=jnp.sum((ids >= 0).astype(jnp.int32), axis=2),
+        bits=index.bits,
+    )
+
+
+def shard_placement(mesh):
+    """NamedSharding placing shard_index leaves: leading shard dim over the
+    mesh's db axes (sharding/rules.py), everything else replicated."""
+    from jax.sharding import NamedSharding
+    from repro.sharding.rules import db_axes
+    axes = db_axes(mesh)
+    spec = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def place(a):
+        return jax.device_put(
+            a, NamedSharding(mesh, P(*((spec,) + (None,) * (a.ndim - 1)))))
+    return place
+
+
+def search_sharded(index: IVFIndex, queries: jax.Array, mesh, *, n_probe: int,
+                   k: int, query_block: int = 64, impl: str = "auto",
+                   probes: Optional[jax.Array] = None,
+                   node_pass: Optional[jax.Array] = None):
+    """Distributed search: index leaves carry a leading shard dim (S, ...)
+    row-sharded over ("pod","data") (see ``shard_index``); queries (and the
+    optional precomputed ``probes`` / ``node_pass`` predicate-or-visibility
+    mask) replicated; per-shard local top-k, then all-gather(k) + merge.
+    Local ids must already be globally unique (they are global node ids).
+    The local scan is ``search`` itself — same kernel/einsum selection, same
+    pre-top-k mask pushdown, same -inf/-1 padding semantics — so the merged
+    result carries the single-device scores exactly."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    bits = index.bits
+
+    have_probes = probes is not None
+    have_pass = node_pass is not None
+
+    def local(cent, data, vmin, scale, ids, counts, q, *rest):
+        rest = iter(rest)
+        pr = next(rest) if have_probes else None
+        npass = next(rest) if have_pass else None
         loc = IVFIndex(cent[0], data[0], vmin[0], scale[0], ids[0], counts[0],
-                       index.bits)
+                       bits)
         vals, lids = search(loc, q, n_probe=n_probe, k=k,
-                            query_block=query_block, impl=impl)
+                            query_block=query_block, impl=impl,
+                            probes=pr, node_pass=npass)
         allv = jax.lax.all_gather(vals, data_axes, axis=0, tiled=False)   # (S,Q,k)
         alli = jax.lax.all_gather(lids, data_axes, axis=0, tiled=False)
         ns = allv.shape[0]
         allv = jnp.moveaxis(allv, 0, 1).reshape(q.shape[0], ns * k)
         alli = jnp.moveaxis(alli, 0, 1).reshape(q.shape[0], ns * k)
         mv, pos = jax.lax.top_k(allv, k)
-        return mv, jnp.take_along_axis(alli, pos, axis=1)
+        mi = jnp.take_along_axis(alli, pos, axis=1)
+        # shards pad ragged tails with (-inf, -1): never let a pad slot of
+        # one shard surface another's id through the merge
+        return mv, jnp.where(jnp.isfinite(mv), mi, -1)
 
     shard_spec = P(data_axes if len(data_axes) > 1 else data_axes[0])
+    # shard_map pytrees can't hold None leaves: absent optionals are dropped
+    # from the arg list and re-inserted as None inside ``local``
+    in_specs = [shard_spec] * 6 + [P(None, None)]
+    args = [index.centroids, index.data, index.vmin, index.scale, index.ids,
+            index.counts, queries]
+    if have_probes:
+        in_specs.append(P(None, None))
+        args.append(probes)
+    if have_pass:
+        in_specs.append(P(None))
+        args.append(node_pass)
     fn = _shard_map(
         local, mesh=mesh,
-        in_specs=(shard_spec, shard_spec, shard_spec, shard_spec, shard_spec,
-                  shard_spec, P(None, None)),
+        in_specs=tuple(in_specs),
         out_specs=(P(None, None), P(None, None)),
         **_SHARD_MAP_KW,
     )
-    return fn(index.centroids, index.data, index.vmin, index.scale, index.ids,
-              index.counts, queries)
+    return fn(*args)

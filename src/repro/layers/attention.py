@@ -133,19 +133,23 @@ def gqa_forward(cfg, p, x, positions, *, mode: str, cache=None, cache_pos=None,
                           unroll=unroll_blocks, mesh=mesh)
         new_cache = (k, v)
     elif mode == "decode":
-        k_cache, v_cache, slot_pos = cache                     # (B,S,Hkv,hd) x2, (S,)
-        slot = cache_pos % k_cache.shape[1]                    # rolling for SWA
-        k_cache = jax.lax.dynamic_update_slice_in_dim(k_cache, k, slot, axis=1)
-        v_cache = jax.lax.dynamic_update_slice_in_dim(v_cache, v, slot, axis=1)
-        slot_pos = jax.lax.dynamic_update_slice_in_dim(
-            slot_pos, positions.reshape(1).astype(slot_pos.dtype), slot, axis=0)
+        # cache: (B,S,Hkv,hd) x2, slot_pos (B,S); cache_pos (B,) per-sequence
+        # positions — each row writes its own slot and masks its own history
+        # (continuous batching: ragged prompts put rows at different lengths)
+        k_cache, v_cache, slot_pos = cache
+        bsz = x.shape[0]
+        rows = jnp.arange(bsz)
+        slot = cache_pos % k_cache.shape[1]                    # (B,) rolling for SWA
+        k_cache = k_cache.at[rows, slot].set(k[:, 0])
+        v_cache = v_cache.at[rows, slot].set(v[:, 0])
+        slot_pos = slot_pos.at[rows, slot].set(
+            cache_pos.astype(slot_pos.dtype))
         k_cache = with_sharding(k_cache, ("batch", "cache_seq", None, None), mesh)
         v_cache = with_sharding(v_cache, ("batch", "cache_seq", None, None), mesh)
-        pos_now = positions.reshape(())
+        pos_now = cache_pos[:, None]                           # (B, 1)
         valid = jnp.logical_and(slot_pos >= 0, slot_pos <= pos_now)
         if cfg.sliding_window:
             valid = jnp.logical_and(valid, slot_pos > pos_now - cfg.sliding_window)
-        valid = jnp.broadcast_to(valid[None, :], (x.shape[0], slot_pos.shape[0]))
         out = attend_decode(q, k_cache, v_cache, valid, mesh=mesh)
         new_cache = (k_cache, v_cache, slot_pos)
     else:

@@ -58,12 +58,15 @@ def mla_forward(cfg, p, x, positions, *, mode: str, cache=None, cache_pos=None,
                           q_block=q_block, unroll=unroll_blocks, mesh=mesh)
         new_cache = (latent, k_rope)
     elif mode == "decode":
-        lat_cache, rope_cache, slot_pos = cache                # (B,S,r),(B,S,dr),(S,)
-        slot = cache_pos % lat_cache.shape[1]
-        lat_cache = jax.lax.dynamic_update_slice_in_dim(lat_cache, latent, slot, axis=1)
-        rope_cache = jax.lax.dynamic_update_slice_in_dim(rope_cache, k_rope, slot, axis=1)
-        slot_pos = jax.lax.dynamic_update_slice_in_dim(
-            slot_pos, positions.reshape(1).astype(slot_pos.dtype), slot, axis=0)
+        # cache: (B,S,r), (B,S,dr), slot_pos (B,S); cache_pos (B,) —
+        # per-sequence positions (see layers/attention.py decode branch)
+        lat_cache, rope_cache, slot_pos = cache
+        bsz = x.shape[0]
+        rows = jnp.arange(bsz)
+        slot = cache_pos % lat_cache.shape[1]                  # (B,)
+        lat_cache = lat_cache.at[rows, slot].set(latent[:, 0])
+        rope_cache = rope_cache.at[rows, slot].set(k_rope[:, 0])
+        slot_pos = slot_pos.at[rows, slot].set(cache_pos.astype(slot_pos.dtype))
         lat_cache = with_sharding(lat_cache, ("batch", "cache_seq", None), mesh)
         rope_cache = with_sharding(rope_cache, ("batch", "cache_seq", None), mesh)
         # absorbed scores: q_nope W_uk · latent  +  q_rope · k_rope
@@ -71,9 +74,9 @@ def mla_forward(cfg, p, x, positions, *, mode: str, cache=None, cache_pos=None,
         s = (jnp.einsum("bshr,btr->bhst", q_lat, lat_cache)
              + jnp.einsum("bshk,btk->bhst", q_rope, rope_cache))
         s = s.astype(jnp.float32) / math.sqrt(scale_dim)
-        pos_now = positions.reshape(())
-        valid = jnp.logical_and(slot_pos >= 0, slot_pos <= pos_now)
-        s = s + jnp.where(valid[None, None, None, :], 0.0, -jnp.inf)
+        valid = jnp.logical_and(slot_pos >= 0,
+                                slot_pos <= cache_pos[:, None])  # (B, S)
+        s = s + jnp.where(valid[:, None, None, :], 0.0, -jnp.inf)
         pr = jax.nn.softmax(s, axis=-1).astype(dtype)
         o_lat = jnp.einsum("bhst,btr->bshr", pr, lat_cache)    # (B,1,H,r)
         out = jnp.einsum("bshr,rhk->bshk", o_lat, p["w_uv"].astype(dtype))

@@ -293,18 +293,18 @@ def init_cache(cfg, batch: int, cache_len: int, dtype=None):
     if cfg.attention == "mla":
         cache = (jnp.zeros((L, batch, cache_len, cfg.kv_lora_rank), dt),
                  jnp.zeros((L, batch, cache_len, cfg.qk_rope_head_dim), dt),
-                 jnp.full((L, cache_len), -(10 ** 9), jnp.int32))
+                 jnp.full((L, batch, cache_len), -(10 ** 9), jnp.int32))
         axes = ((None, "batch", "cache_seq", None),
                 (None, "batch", "cache_seq", None),
-                (None, None))
+                (None, "batch", None))
     else:
         hkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
         cache = (jnp.zeros((L, batch, cache_len, hkv, hd), dt),
                  jnp.zeros((L, batch, cache_len, hkv, hd), dt),
-                 jnp.full((L, cache_len), -(10 ** 9), jnp.int32))
+                 jnp.full((L, batch, cache_len), -(10 ** 9), jnp.int32))
         axes = ((None, "batch", "cache_seq", None, None),
                 (None, "batch", "cache_seq", None, None),
-                (None, None))
+                (None, "batch", None))
     return cache, axes
 
 
@@ -348,23 +348,32 @@ def prefill(cfg, params, tokens, mesh=None, opts: ExecOpts = ExecOpts(),
         slot_vals = jnp.concatenate([
             jnp.arange(s, dtype=jnp.int32),
             jnp.full((clen - s,), -(10 ** 9), jnp.int32)])
-    slot_pos = jnp.broadcast_to(slot_vals[None, :], (cfg.n_layers, clen))
+    # per-sequence slot positions (L, B, clen): decode advances each batch
+    # row at its own position (continuous batching over ragged prompts)
+    slot_pos = jnp.broadcast_to(slot_vals[None, None, :],
+                                (cfg.n_layers, bsz, clen))
     new_cache = tuple(fit(c) for c in caches) + (slot_pos,)
     return logits[:, 0], new_cache
 
 
 def decode_step(cfg, params, cache, token, pos, mesh=None,
                 opts: ExecOpts = ExecOpts()):
-    """One decode step. token: (B,) int32; pos: scalar int32 (shared position).
+    """One decode step. token: (B,) int32; pos: scalar int32 (every sequence
+    at the same position) or (B,) int32 (per-sequence positions — the
+    continuous-batching case, where ragged prompts put each cache row at its
+    own length). Each row writes KV at its own slot and attends only to its
+    own history.
 
     Returns (logits (B, V[sharded]), new_cache).
     """
     x = jnp.take(params["embed"], token[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
     x = with_sharding(x, ("batch", "seq", None), mesh)
-    positions = jnp.asarray(pos).reshape(())[None]      # (1,)
+    pos_b = jnp.broadcast_to(jnp.asarray(pos, jnp.int32).reshape(-1),
+                             (token.shape[0],))          # (B,)
+    positions = pos_b[:, None]                           # (B, 1)
     dec_opts = dataclasses.replace(opts, remat=False)
     x, new_cache, _ = _run_layers(cfg, dec_opts, mesh, params, x, positions,
-                                  "decode", cache, jnp.asarray(pos))
+                                  "decode", cache, pos_b)
     x = rms_norm(x, params["final_ln"], cfg.norm_eps)
     if getattr(cfg, "tie_embeddings", False):
         logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(x.dtype))

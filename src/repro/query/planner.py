@@ -15,6 +15,13 @@ the cost model (core/cost_model.py):
   greedy-cheapest-feasible), else the config default. Seed *scan* width is
   ``plan_seed_width``: bare k when the seeds are the answer, oversampled
   when downstream stages re-rank them.
+- **Device layout** — per seed stage, ``plan_device_layout`` decides whether
+  the stable scan runs single-device or row-sharded over the index's mesh
+  (per-shard masked probes + cross-shard top-k merge): sharded when the
+  quantized slab exceeds the per-device budget, forced by
+  ``cfg.shard_layout`` either way. The two layouts scan the same candidate
+  set in the same stored representation, so the choice never changes
+  results — only where the flops land.
 - **Fusion representation** — per traverse stage, ``plan_fusion`` chooses
   candidate-sparse fusion (seeds ∪ frontier, O(Q·C) memory) vs one dense
   scatter over all N (when the frontier would cover the corpus anyway).
@@ -35,9 +42,9 @@ from typing import Any, Optional, Tuple, Union
 
 import jax
 
-from repro.core.cost_model import (FilteredScanPlan, estimate_selectivity,
-                                   plan_filtered_scan, plan_fusion,
-                                   plan_seed_width, select_plan)
+from repro.core.cost_model import (DeviceLayoutPlan, FilteredScanPlan,
+                                   estimate_selectivity, plan_filtered_scan,
+                                   plan_fusion, plan_seed_width, select_plan)
 from repro.core import traversal as trav_mod
 from repro.query.ast import CrossModal, Q, SetOp, Traverse, Where
 
@@ -50,6 +57,9 @@ class PSeed:
     n_probe: int
     impl: str
     filter_plan: Optional[FilteredScanPlan]  # None = unfiltered scan
+    # where the stable scan runs: single-device or row-sharded over the
+    # mesh (cost_model.plan_device_layout against the index's mesh)
+    layout: DeviceLayoutPlan = DeviceLayoutPlan("single", 1)
 
 
 @dataclasses.dataclass(eq=False)
@@ -94,7 +104,9 @@ class PhysicalPlan:
             f = ("" if s.filter_plan is None else
                  f" filter={s.filter_plan.mode}"
                  f"(sel={s.filter_plan.selectivity:.3f})")
-            parts.append(f"seed[{s.modality} k={s.k} probe={s.n_probe}{f}]")
+            lay = ("" if s.layout.layout == "single" else
+                   f" layout=sharded(x{s.layout.n_shards})")
+            parts.append(f"seed[{s.modality} k={s.k} probe={s.n_probe}{f}{lay}]")
         for st in self.stages:
             if isinstance(st, PTraverse):
                 t = "" if st.edge_type_mask is None else " typed"
@@ -154,7 +166,8 @@ def compile_plan(index, plan, *, k: Optional[int] = None,
                 oversample=cfg.filter_oversample,
                 prefilter_max_sel=cfg.filter_prefilter_max_sel)
         source = PSeed(vs.modality, index._norm_queries(vs.query), k_seed,
-                       int(n_probe or cfg.n_probe), vs.impl, fplan)
+                       int(n_probe or cfg.n_probe), vs.impl, fplan,
+                       index.device_layout(vs.modality))
         c = k_seed
 
     stages = []

@@ -6,9 +6,14 @@ The end-to-end serving pipeline the paper targets (§1: "advanced RAG"):
   3. retrieved entity tokens are prepended and the LM generates with
      continuous batching over a shared fixed-shape KV cache.
 
-All device work is jitted fixed-shape (prefill once per admitted request,
-one decode step per engine tick); the scheduler fills freed slots every
-tick (iteration-level batching).
+All device work is jitted fixed-shape: one prefill per admitted request
+(spliced into that request's slot of the shared KV cache, including its
+per-slot position row), then one batched decode step per engine tick. The
+decode step takes a per-slot ``(n_slots,)`` position vector — with ragged
+prompts the slots sit at different sequence lengths, and each row writes KV
+at its own cache index and attends only to its own history, so a batched
+tick produces exactly the tokens sequential per-request decoding would.
+The scheduler fills freed slots every tick (iteration-level batching).
 """
 from __future__ import annotations
 
@@ -49,7 +54,6 @@ class RAGEngine:
             lambda p, c, t, pos: lm.decode_step(lm_cfg, p, c, t, pos, mesh, opts))
         self._encode = jax.jit(lambda p, toks: self._embed(p, toks))
         self._tokens = np.zeros((cfg.n_slots,), np.int32)
-        self._pos = 0
         self.stats = {"ticks": 0, "tokens": 0, "retrievals": 0}
 
     # -- query embedding (mean-pooled token embeddings) -----------------------
@@ -76,9 +80,13 @@ class RAGEngine:
     def submit(self, rid: int, prompt: np.ndarray, retrieved_ids=None,
                max_new_tokens: int = 16):
         if retrieved_ids is not None:
-            # entity ids map into reserved low vocab as context tokens
-            ctx = (np.asarray(retrieved_ids).reshape(-1)
-                   % max(self.lm_cfg.vocab_size // 4, 1)).astype(np.int32)
+            # entity ids map into reserved low vocab as context tokens.
+            # hybrid_search pads short candidate sets with -1 ("no result"):
+            # those must be dropped, not wrapped by the modulo into a real
+            # vocab token and prepended as phantom context.
+            rids = np.asarray(retrieved_ids).reshape(-1)
+            rids = rids[rids >= 0]
+            ctx = (rids % max(self.lm_cfg.vocab_size // 4, 1)).astype(np.int32)
             prompt = np.concatenate([ctx, prompt])
         self.batcher.submit(Request(rid, prompt.astype(np.int32),
                                     max_new_tokens))
@@ -89,27 +97,36 @@ class RAGEngine:
         logits, cache = lm.prefill(
             self.lm_cfg, self.params, toks, self.mesh, opts,
             margin=self._cache[0].shape[2] - len(prompt))
-        # splice this request's cache into the shared slot cache
+        # splice this request's cache into the shared slot cache — all
+        # leaves, including the (L, 1, clen) slot-position row: decode masks
+        # each slot's attention by its own positions
         def splice(shared, one):
             return shared.at[:, slot].set(one[:, 0])
-        new_cache = list(self._cache)
-        for i in range(len(new_cache) - 1):
-            new_cache[i] = splice(new_cache[i], cache[i])
-        self._cache = tuple(new_cache)
-        self._tokens[slot] = int(jnp.argmax(logits[0]))
+        self._cache = tuple(splice(s, o) for s, o in zip(self._cache, cache))
+        # the prefill logits produce this request's first generated token
+        # (fed to the first decode step at pos = len(prompt))
+        first = int(jnp.argmax(logits[0]))
+        self._tokens[slot] = first
+        self.batcher.record_prefill_token(slot, first)
 
     def tick(self) -> List[int]:
-        """One engine iteration: admit + prefill new, decode one token for all."""
+        """One engine iteration: admit + prefill new, decode one token for all.
+
+        Decode runs at a per-slot ``(n_slots,)`` position vector — slots hold
+        ragged sequences, and a shared scalar position would make lagging
+        slots write KV at the wrong cache index and attend beyond their own
+        history. Inactive slots decode garbage into their own rows only;
+        admission re-prefills the row before reuse."""
         admitted = self.batcher.admit()
         for slot in admitted:
             req = self.batcher.requests[self.batcher.slots[slot].rid]
             self._prefill_slot(slot, req.prompt)
         if not any(s.active for s in self.batcher.slots):
             return []
-        pos = max(s.pos for s in self.batcher.slots if s.active)
+        pos = np.array([s.pos for s in self.batcher.slots], np.int32)
         logits, self._cache = self._decode(
             self.params, self._cache, jnp.asarray(self._tokens),
-            jnp.asarray(pos, jnp.int32))
+            jnp.asarray(pos))
         nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
         self.batcher.record_tokens(nxt)
         self._tokens = nxt

@@ -42,17 +42,41 @@ class ContinuousBatcher:
         self.queue.append(req)
 
     def admit(self) -> List[int]:
-        """Fills free slots from the queue; returns newly admitted slot ids."""
+        """Fills free slots from the queue; returns newly admitted slot ids.
+
+        Requests with ``max_new_tokens <= 0`` complete at admission (empty
+        ``generated``) and never occupy a slot — a slot would still decode
+        one token for them (``remaining`` would go 0 -> -1 only after the
+        first ``record_tokens``)."""
         newly = []
         for i, s in enumerate(self.slots):
-            if not s.active and self.queue:
-                req = self.queue.popleft()
-                s.active = True
-                s.rid = req.rid
-                s.pos = len(req.prompt)
-                s.remaining = req.max_new_tokens
-                newly.append(i)
+            if s.active:
+                continue
+            while self.queue and self.queue[0].max_new_tokens <= 0:
+                self.queue.popleft().done = True
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            s.active = True
+            s.rid = req.rid
+            s.pos = len(req.prompt)
+            s.remaining = req.max_new_tokens
+            newly.append(i)
         return newly
+
+    def record_prefill_token(self, slot: int, token: int):
+        """The first generated token comes from the prefill logits, before
+        any decode step: record it (and possibly finish the request) so the
+        generated stream matches sequential per-request decoding exactly.
+        ``pos`` stays at the prompt length — that is where this token's KV
+        will be written when it is fed to the next decode step."""
+        s = self.slots[slot]
+        req = self.requests[s.rid]
+        req.generated.append(int(token))
+        s.remaining -= 1
+        if s.remaining <= 0:
+            req.done = True
+            s.active = False
 
     def record_tokens(self, tokens: np.ndarray):
         """tokens (n_slots,) — one decoded token per slot this step."""

@@ -1,4 +1,4 @@
 from repro.sharding.rules import (
-    DEFAULT_RULES, batch_axes, logical_to_spec, rule_overrides, shard_tree,
-    with_sharding,
+    DEFAULT_RULES, batch_axes, db_axes, db_shards, logical_to_spec,
+    rule_overrides, shard_tree, with_sharding,
 )

@@ -157,3 +157,17 @@ def batch_axes(mesh: Mesh, n: int) -> Tuple[str, ...]:
     if spec is None:
         return ()
     return (spec,) if isinstance(spec, str) else tuple(spec)
+
+
+def db_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes carrying the HMGI stable store's row shards (the "db"
+    logical axis — ("pod","data"), trimmed to what the mesh has)."""
+    return _present(mesh, DEFAULT_RULES["db"])
+
+
+def db_shards(mesh: Optional[Mesh]) -> int:
+    """Number of row shards the mesh supports for the stable store (1 when
+    there is no mesh — the single-device layout)."""
+    if mesh is None:
+        return 1
+    return _axes_size(mesh, db_axes(mesh))

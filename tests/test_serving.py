@@ -1,0 +1,188 @@
+"""Serving-layer tests: continuous batching over ragged prompts must equal
+sequential per-request decoding token for token (the per-slot position
+contract), the scheduler's admit/evict/refill lifecycle, and the RAG
+submit path's handling of padded retrieval ids.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import lm
+from repro.serving.engine import EngineConfig, RAGEngine
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+OPTS = lm.ExecOpts(q_block=0, remat=False)
+MAX_SEQ = 48
+
+
+@pytest.fixture(scope="module")
+def lm_setup():
+    # float32: batched-vs-single decode must agree to the argmax, and bf16
+    # rounding could flip near-ties between the two batch shapes
+    cfg = smoke_config("qwen2-72b").replace(dtype="float32")
+    params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _sequential(cfg, params, prompt, n):
+    """Reference: one request at a time, prefill then single-row decode."""
+    clen = lm.cache_len_for(cfg, MAX_SEQ)
+    logits, cache = lm.prefill(cfg, params, jnp.asarray(prompt)[None], None,
+                               OPTS, margin=clen - len(prompt))
+    gen = [int(jnp.argmax(logits[0]))]
+    pos = len(prompt)
+    while len(gen) < n:
+        l, cache = lm.decode_step(cfg, params, cache, jnp.asarray([gen[-1]]),
+                                  jnp.asarray([pos]), None, OPTS)
+        gen.append(int(jnp.argmax(l[0])))
+        pos += 1
+    return gen
+
+
+class TestPerSlotDecode:
+    """lm.decode_step with a (B,) position vector: each row must behave as
+    if decoded alone at its own position."""
+
+    @pytest.mark.parametrize("arch", ["qwen2-72b", "deepseek-v2-lite-16b"])
+    def test_ragged_batch_matches_single_rows(self, arch):
+        cfg = smoke_config(arch).replace(dtype="float32", capacity_factor=16.0)
+        params, _ = lm.init_lm(cfg, jax.random.PRNGKey(0))
+        rng = np.random.default_rng(1)
+        la, lb = 5, 9
+        pa = rng.integers(0, cfg.vocab_size, la).astype(np.int32)
+        pb = rng.integers(0, cfg.vocab_size, lb).astype(np.int32)
+        clen = lm.cache_len_for(cfg, 24)
+        _, ca = lm.prefill(cfg, params, jnp.asarray(pa)[None], None, OPTS,
+                           margin=clen - la)
+        _, cb = lm.prefill(cfg, params, jnp.asarray(pb)[None], None, OPTS,
+                           margin=clen - lb)
+        ta, tb = 7, 11
+        ra, _ = lm.decode_step(cfg, params, ca, jnp.asarray([ta]),
+                               jnp.asarray([la]), None, OPTS)
+        rb, _ = lm.decode_step(cfg, params, cb, jnp.asarray([tb]),
+                               jnp.asarray([lb]), None, OPTS)
+        # batch the two ragged rows into one step with a position vector
+        batched = jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=1),
+                               ca, cb)
+        rab, _ = lm.decode_step(cfg, params, batched, jnp.asarray([ta, tb]),
+                                jnp.asarray([la, lb]), None, OPTS)
+        np.testing.assert_allclose(np.asarray(rab[0]), np.asarray(ra[0]),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(rab[1]), np.asarray(rb[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_scalar_pos_still_accepted(self, lm_setup):
+        cfg, params = lm_setup
+        toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0,
+                                  cfg.vocab_size)
+        _, cache = lm.prefill(cfg, params, toks, None, OPTS, margin=4)
+        nxt = jax.random.randint(jax.random.PRNGKey(2), (2,), 0, cfg.vocab_size)
+        ls, _ = lm.decode_step(cfg, params, cache, nxt, jnp.asarray(12),
+                               None, OPTS)
+        lv, _ = lm.decode_step(cfg, params, cache, nxt, jnp.asarray([12, 12]),
+                               None, OPTS)
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(lv))
+
+
+class TestContinuousBatching:
+    def test_ragged_prompts_match_sequential(self, lm_setup):
+        """More requests than slots, all prompt lengths different: the
+        engine's generated streams must equal sequential decoding exactly."""
+        cfg, params = lm_setup
+        rng = np.random.default_rng(0)
+        lens = (3, 11, 7, 5, 9)
+        news = (6, 4, 8, 1, 5)
+        prompts = [rng.integers(0, cfg.vocab_size, L).astype(np.int32)
+                   for L in lens]
+        ref = {i: _sequential(cfg, params, p, n)
+               for i, (p, n) in enumerate(zip(prompts, news))}
+        eng = RAGEngine(cfg, params, None,
+                        EngineConfig(n_slots=2, max_seq=MAX_SEQ))
+        for i, (p, n) in enumerate(zip(prompts, news)):
+            eng.submit(i, p, max_new_tokens=n)
+        got = eng.run_to_completion()
+        assert got == ref
+
+    def test_zero_token_request_returns_empty(self, lm_setup):
+        """max_new_tokens=0 completes at admission: empty generated, no slot
+        occupied, and co-scheduled requests are unaffected."""
+        cfg, params = lm_setup
+        rng = np.random.default_rng(2)
+        p0 = rng.integers(0, cfg.vocab_size, 4).astype(np.int32)
+        p1 = rng.integers(0, cfg.vocab_size, 6).astype(np.int32)
+        eng = RAGEngine(cfg, params, None,
+                        EngineConfig(n_slots=2, max_seq=MAX_SEQ))
+        eng.submit(0, p0, max_new_tokens=0)
+        eng.submit(1, p1, max_new_tokens=3)
+        got = eng.run_to_completion()
+        assert got[0] == []
+        assert got[1] == _sequential(cfg, params, p1, 3)
+
+    def test_padded_retrieved_ids_dropped(self, lm_setup):
+        """hybrid_search pads short candidate sets with -1: those must not
+        alias into vocab via the modulo and become phantom context tokens."""
+        cfg, params = lm_setup
+        eng = RAGEngine(cfg, params, None,
+                        EngineConfig(n_slots=2, max_seq=MAX_SEQ))
+        prompt = np.arange(5, dtype=np.int32)
+        eng.submit(0, prompt, retrieved_ids=np.array([8, -1, 3, -1, -1]),
+                   max_new_tokens=1)
+        built = eng.batcher.requests[0].prompt
+        assert len(built) == len(prompt) + 2           # only the 2 real ids
+        assert np.array_equal(built[:2],
+                              np.array([8, 3]) % (cfg.vocab_size // 4))
+
+    def test_retrieval_context_changes_prompt(self, lm_setup):
+        cfg, params = lm_setup
+        eng = RAGEngine(cfg, params, None,
+                        EngineConfig(n_slots=1, max_seq=MAX_SEQ))
+        prompt = np.arange(4, dtype=np.int32)
+        eng.submit(0, prompt, retrieved_ids=np.array([17, 42]),
+                   max_new_tokens=2)
+        built = eng.batcher.requests[0].prompt
+        ref = _sequential(cfg, params, built, 2)
+        assert eng.run_to_completion()[0] == ref
+
+
+class TestScheduler:
+    def test_admit_evict_refill(self):
+        b = ContinuousBatcher(2)
+        for i in range(4):
+            b.submit(Request(i, np.arange(3 + i), max_new_tokens=2 + i))
+        assert b.admit() == [0, 1]
+        assert b.slots[0].pos == 3 and b.slots[1].pos == 4
+        assert b.admit() == []                          # both slots busy
+        b.record_tokens(np.array([10, 11]))             # remaining 1, 2
+        assert all(s.active for s in b.slots)
+        b.record_tokens(np.array([12, 13]))             # rid 0 done
+        assert not b.slots[0].active and b.slots[1].active
+        assert b.requests[0].done and b.requests[0].generated == [10, 12]
+        assert b.admit() == [0]                         # refill freed slot
+        assert b.slots[0].rid == 2
+        assert b.any_active
+
+    def test_pos_advances_per_slot(self):
+        b = ContinuousBatcher(2)
+        b.submit(Request(0, np.arange(2), max_new_tokens=5))
+        b.submit(Request(1, np.arange(9), max_new_tokens=5))
+        b.admit()
+        b.record_tokens(np.array([1, 1]))
+        assert (b.slots[0].pos, b.slots[1].pos) == (3, 10)
+
+    def test_zero_token_never_takes_a_slot(self):
+        b = ContinuousBatcher(1)
+        b.submit(Request(0, np.arange(3), max_new_tokens=0))
+        b.submit(Request(1, np.arange(3), max_new_tokens=2))
+        assert b.admit() == [0]
+        assert b.slots[0].rid == 1                      # rid 0 skipped
+        assert b.requests[0].done and b.requests[0].generated == []
+
+    def test_prefill_token_counts_toward_budget(self):
+        b = ContinuousBatcher(1)
+        b.submit(Request(0, np.arange(3), max_new_tokens=1))
+        (slot,) = b.admit()
+        b.record_prefill_token(slot, 7)
+        assert b.requests[0].done and b.requests[0].generated == [7]
+        assert not b.slots[0].active                    # freed without decode

@@ -1,0 +1,327 @@
+"""Sharded execution path: layout invariants of ``ivf.shard_index``, the
+cross-shard merge's equivalence to the single-device scan, and the facade's
+transparent routing through the sharded path (stable + delta, tombstones,
+predicates) against both the single-layout facade and the brute-force
+oracle in ``tests/query_ref.py``.
+
+Multi-device cases run when the process has >= 2 devices (the CI lane sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on one device the
+real shard_map path still runs with S=1, and multi-shard *layout* semantics
+are covered by a host-side shard-loop emulation that needs no mesh.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh
+
+from repro.configs import get_config
+from repro.core import HMGIIndex
+from repro.core import ivf as ivf_mod
+from repro.core.cost_model import plan_device_layout
+from repro.data.synthetic import make_corpus
+from repro.sharding.rules import db_shards
+
+from query_ref import assert_matches, reference_execute
+
+N_DEV = len(jax.devices())
+multi_device = pytest.mark.skipif(
+    N_DEV < 2, reason="needs >= 2 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _mesh(n):
+    return Mesh(np.array(jax.devices()[:n]).reshape(n), ("data",))
+
+
+def _corpus_index(rng, n=1200, d=32, k_parts=10):
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    v /= np.linalg.norm(v, axis=1, keepdims=True)
+    idx, _ = ivf_mod.build(jax.random.PRNGKey(0), jnp.asarray(v),
+                           jnp.arange(n), n_partitions=k_parts, bits=8)
+    q = jnp.asarray(v[:12] + 0.02 * rng.normal(size=(12, d)).astype(np.float32))
+    return v, idx, q
+
+
+class TestShardLayout:
+    def test_live_rows_and_partitions_preserved(self, rng):
+        """Every live (id, partition, quantized bytes) triple survives the
+        re-layout untouched — sharding moves rows, it never re-encodes."""
+        _, idx, _ = _corpus_index(rng)
+        s = 4
+        sh = ivf_mod.shard_index(idx, s)
+        k, cap = idx.ids.shape
+        single = {}
+        for p in range(k):
+            for j in range(cap):
+                i = int(idx.ids[p, j])
+                if i >= 0:
+                    single[i] = (p, idx.data[p, j].tobytes(),
+                                 float(idx.vmin[p, j]), float(idx.scale[p, j]))
+        sharded = {}
+        for si in range(s):
+            for p in range(k):
+                for j in range(sh.ids.shape[2]):
+                    i = int(sh.ids[si, p, j])
+                    if i >= 0:
+                        sharded[i] = (p, sh.data[si, p, j].tobytes(),
+                                      float(sh.vmin[si, p, j]),
+                                      float(sh.scale[si, p, j]))
+        assert sharded == single
+        np.testing.assert_array_equal(
+            np.asarray(sh.counts).sum(axis=0), np.asarray(idx.counts))
+
+    def test_round_robin_balance(self, rng):
+        """Builds pack live rows into low slots, so dealing slots round-robin
+        spreads each partition's rows within 1 of evenly across shards."""
+        _, idx, _ = _corpus_index(rng)
+        sh = ivf_mod.shard_index(idx, 4)
+        per_shard = np.asarray(sh.counts)                     # (S, K)
+        for p in range(idx.n_partitions):
+            col = per_shard[:, p]
+            assert col.max() - col.min() <= 1, (p, col)
+
+    def test_centroids_replicated(self, rng):
+        _, idx, _ = _corpus_index(rng)
+        sh = ivf_mod.shard_index(idx, 3)
+        for s in range(3):
+            np.testing.assert_array_equal(np.asarray(sh.centroids[s]),
+                                          np.asarray(idx.centroids))
+
+    def test_rejects_bad_shard_count(self, rng):
+        _, idx, _ = _corpus_index(rng, n=100, k_parts=4)
+        with pytest.raises(ValueError):
+            ivf_mod.shard_index(idx, 0)
+
+
+class TestShardedScanEquivalence:
+    """The merged sharded scan must carry the single-device scores exactly:
+    same probes against the same centroids select the same candidate set,
+    split S ways, in the same stored representation."""
+
+    def _emulated(self, idx, sh, q, *, n_probe, k, impl, node_pass=None):
+        """Host-side twin of search_sharded's shard_map body (no mesh)."""
+        parts = []
+        for s in range(sh.ids.shape[0]):
+            loc = ivf_mod.IVFIndex(sh.centroids[s], sh.data[s], sh.vmin[s],
+                                   sh.scale[s], sh.ids[s], sh.counts[s],
+                                   sh.bits)
+            parts.append(ivf_mod.search(loc, q, n_probe=n_probe, k=k,
+                                        impl=impl, node_pass=node_pass))
+        allv = jnp.concatenate([p[0] for p in parts], axis=1)
+        alli = jnp.concatenate([p[1] for p in parts], axis=1)
+        mv, pos = jax.lax.top_k(allv, k)
+        mi = jnp.take_along_axis(alli, pos, axis=1)
+        return mv, jnp.where(jnp.isfinite(mv), mi, -1)
+
+    @pytest.mark.parametrize("impl", ["kernel", "einsum"])
+    @pytest.mark.parametrize("n_shards", [2, 3, 8])
+    def test_emulated_shards_match_single(self, rng, impl, n_shards):
+        _, idx, q = _corpus_index(rng)
+        sh = ivf_mod.shard_index(idx, n_shards)
+        for n_probe in (3, idx.n_partitions):
+            se, ie = ivf_mod.search(idx, q, n_probe=n_probe, k=10, impl=impl)
+            sv, si = self._emulated(idx, sh, q, n_probe=n_probe, k=10,
+                                    impl=impl)
+            np.testing.assert_array_equal(np.asarray(sv), np.asarray(se))
+            _assert_ids_consistent(sv, si, se, ie)
+
+    def test_emulated_shards_respect_node_pass(self, rng):
+        v, idx, q = _corpus_index(rng)
+        npass = jnp.asarray(np.random.default_rng(5).random(len(v)) < 0.25)
+        sh = ivf_mod.shard_index(idx, 4)
+        se, ie = ivf_mod.search(idx, q, n_probe=idx.n_partitions, k=10,
+                                node_pass=npass)
+        sv, si = self._emulated(idx, sh, q, n_probe=idx.n_partitions, k=10,
+                                impl="auto", node_pass=npass)
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(se))
+        _assert_ids_consistent(sv, si, se, ie)
+        live = np.asarray(si)[np.isfinite(np.asarray(sv))]
+        assert np.all(np.asarray(npass)[live])
+
+    @pytest.mark.parametrize("impl", ["kernel", "einsum"])
+    def test_shard_map_path_matches_single(self, rng, impl):
+        """The real shard_map path, at however many devices we have."""
+        _, idx, q = _corpus_index(rng)
+        mesh = _mesh(N_DEV)
+        sh = ivf_mod.shard_index(idx, N_DEV)
+        for n_probe in (3, idx.n_partitions):
+            se, ie = ivf_mod.search(idx, q, n_probe=n_probe, k=10, impl=impl)
+            sv, si = ivf_mod.search_sharded(sh, q, mesh, n_probe=n_probe,
+                                            k=10, impl=impl)
+            np.testing.assert_array_equal(np.asarray(sv), np.asarray(se))
+            _assert_ids_consistent(sv, si, se, ie)
+
+    @multi_device
+    def test_shard_map_masks_and_probes(self, rng):
+        v, idx, q = _corpus_index(rng)
+        from repro.core.partitioner import assign_topk
+        mesh = _mesh(N_DEV)
+        sh = ivf_mod.shard_index(idx, N_DEV)
+        npass = jnp.asarray(np.random.default_rng(7).random(len(v)) < 0.3)
+        probes, _ = assign_topk(q, idx.centroids, 5)
+        se, ie = ivf_mod.search(idx, q, n_probe=5, k=10, probes=probes,
+                                node_pass=npass)
+        sv, si = ivf_mod.search_sharded(sh, q, mesh, n_probe=5, k=10,
+                                        probes=probes, node_pass=npass)
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(se))
+        _assert_ids_consistent(sv, si, se, ie)
+
+    def test_padding_semantics_tiny_corpus(self, rng):
+        """k far beyond the live rows: sharded merge must pad (-inf, -1)
+        exactly like the single scan — no shard's pad slot may leak."""
+        _, idx, q = _corpus_index(rng, n=40, d=16, k_parts=4)
+        sh = ivf_mod.shard_index(idx, 4)
+        se, ie = ivf_mod.search(idx, q[:4], n_probe=4, k=64)
+        sv, si = self._emulated(idx, sh, q[:4], n_probe=4, k=64, impl="auto")
+        np.testing.assert_array_equal(np.asarray(sv), np.asarray(se))
+        dead = ~np.isfinite(np.asarray(sv))
+        assert np.all(np.asarray(si)[dead] == -1)
+
+
+def _assert_ids_consistent(sv, si, se, ie):
+    """Scores must be identical; ids must agree except where the score ties
+    make the order legally ambiguous."""
+    sv, si = np.asarray(sv), np.asarray(si)
+    se, ie = np.asarray(se), np.asarray(ie)
+    for qi in range(sv.shape[0]):
+        ref = {}
+        for s, i in zip(se[qi], ie[qi]):
+            if np.isfinite(s):
+                ref.setdefault(float(s), set()).add(int(i))
+        for s, i in zip(sv[qi], si[qi]):
+            if np.isfinite(s):
+                assert int(i) in ref[float(s)], (qi, int(i), float(s))
+
+
+# ---------------------------------------------------------------------------
+# facade: the planner routes search/hybrid_search/query through the sharded
+# path transparently, and results stay bit-identical to the single layout
+# ---------------------------------------------------------------------------
+
+def _build_facade(corpus, layout, mesh=None):
+    cfg = get_config("hmgi").replace(n_partitions=8, n_probe=8, top_k=6,
+                                     kmeans_iters=4, delta_capacity=128,
+                                     shard_layout=layout)
+    idx = HMGIIndex(cfg, mesh=mesh, seed=0)
+    idx.ingest({m: (corpus.node_ids[m], corpus.vectors[m])
+                for m in corpus.vectors}, n_nodes=corpus.n_nodes,
+               edges=(corpus.src, corpus.dst, corpus.edge_type),
+               node_attrs={"year": np.arange(corpus.n_nodes) % 7})
+    rng = np.random.default_rng(3)
+    ids = np.asarray(corpus.node_ids["text"])
+    nv = rng.normal(size=(3, 32)).astype(np.float32)
+    idx.insert("text", ids[:3], nv)                    # MVCC updates
+    idx.delete("text", ids[10:13])                     # tombstones
+    return idx
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return make_corpus(n_nodes=700, modality_dims={"text": 32, "image": 48},
+                       seed=1)
+
+
+@multi_device
+class TestShardedFacade:
+    @pytest.fixture(scope="class")
+    def pair(self, corpus):
+        return (_build_facade(corpus, "single"),
+                _build_facade(corpus, "sharded", _mesh(N_DEV)))
+
+    def test_planner_reports_sharded_layout(self, pair, corpus):
+        from repro.query.ast import Q
+        _, b = pair
+        desc = b.explain(Q.vector("text", corpus.vectors["text"][:2]).topk(3))
+        assert f"layout=sharded(x{N_DEV})" in desc
+
+    def test_search_matches_single_layout(self, pair, corpus):
+        a, b = pair
+        q = corpus.vectors["text"][:10]
+        for kw in (dict(), dict(where=("year", "<", 3)), dict(n_probe=2),
+                   dict(impl="einsum")):
+            sa, ia = a.search(q, "text", k=6, **kw)
+            sb, ib = b.search(q, "text", k=6, **kw)
+            np.testing.assert_array_equal(np.asarray(sb), np.asarray(sa))
+            _assert_ids_consistent(sb, ib, sa, ia)
+
+    def test_hybrid_matches_single_layout(self, pair, corpus):
+        a, b = pair
+        q = corpus.vectors["text"][:8]
+        ha, hia = a.hybrid_search(q, "text", k=6, n_hops=2)
+        hb, hib = b.hybrid_search(q, "text", k=6, n_hops=2)
+        np.testing.assert_array_equal(np.asarray(hb), np.asarray(ha))
+        _assert_ids_consistent(hb, hib, ha, hia)
+
+    def test_query_plan_matches_oracle(self, pair, corpus):
+        """Full-probe declarative chains through the sharded path must equal
+        the brute-force numpy oracle (stable + delta, tombstones, Where)."""
+        from repro.query.ast import Q
+        from repro.query.planner import compile_plan
+        _, b = pair
+        q = corpus.vectors["text"][:6]
+        for plan in (Q.vector("text", q, n_probe=8).topk(6),
+                     Q.vector("text", q, n_probe=8)
+                      .where(("year", "<", 5)).topk(6),
+                     Q.vector("text", q, n_probe=8).traverse(1).topk(6)):
+            phys = compile_plan(b, plan)
+            assert_matches(b.query(plan), reference_execute(b, phys))
+
+    def test_mutation_invalidates_sharded_replica(self, corpus):
+        b = _build_facade(corpus, "sharded", _mesh(N_DEV))
+        q = corpus.vectors["text"][:4]
+        b.search(q, "text", k=4)                        # builds the replica
+        assert b.modalities["text"].ivf_sharded is not None
+        b.compact("text")
+        assert b.modalities["text"].ivf_sharded is None
+        a = _build_facade(corpus, "single")
+        a.compact("text")
+        sa, ia = a.search(q, "text", k=4)
+        sb, ib = b.search(q, "text", k=4)
+        np.testing.assert_array_equal(np.asarray(sb), np.asarray(sa))
+        _assert_ids_consistent(sb, ib, sa, ia)
+
+    def test_rag_engine_retrieves_through_sharded_path(self, pair, corpus):
+        """RAGEngine.retrieve -> hybrid_search -> sharded seed scan."""
+        from repro.serving.engine import EngineConfig, RAGEngine
+        a, b = pair
+        eng_b = RAGEngine.__new__(RAGEngine)   # retrieval only: no LM needed
+        eng_b.index = b
+        eng_b.cfg = EngineConfig(retrieve_k=4, hops=1)
+        eng_b.stats = {"retrievals": 0}
+        q = corpus.vectors["text"][:3]
+        np.testing.assert_array_equal(
+            RAGEngine.retrieve(eng_b, q),
+            np.asarray(a.hybrid_search(q, "text", k=4, n_hops=1)[1]))
+
+
+class TestDeviceLayoutPlanning:
+    def test_crossover(self):
+        small = plan_device_layout(10_000, 64, n_shards=8,
+                                   budget_bytes=1 << 30)
+        big = plan_device_layout(50_000_000, 128, n_shards=8,
+                                 budget_bytes=1 << 30)
+        assert small.layout == "single" and small.n_shards == 1
+        assert big.layout == "sharded" and big.n_shards == 8
+
+    def test_force_overrides(self):
+        assert plan_device_layout(10, 8, n_shards=4, budget_bytes=1 << 30,
+                                  force="sharded").layout == "sharded"
+        assert plan_device_layout(10 ** 9, 128, n_shards=4, budget_bytes=1,
+                                  force="single").layout == "single"
+        with pytest.raises(ValueError):
+            plan_device_layout(10, 8, n_shards=4, budget_bytes=0, force="bogus")
+
+    def test_one_shard_degenerates_to_single(self):
+        assert plan_device_layout(10 ** 9, 128, n_shards=1, budget_bytes=1,
+                                  force="sharded").layout == "single"
+
+    def test_facade_single_without_mesh(self, corpus):
+        idx = _build_facade(corpus, "sharded", mesh=None)   # no mesh => single
+        assert idx.device_layout("text").layout == "single"
+        idx.search(corpus.vectors["text"][:2], "text", k=3)
+        assert idx.modalities["text"].ivf_sharded is None
+
+    def test_db_shards(self):
+        assert db_shards(None) == 1
+        assert db_shards(_mesh(N_DEV)) == N_DEV
