@@ -10,6 +10,8 @@
   query_bench   — declarative query engine: relationship-heavy canned plans
                   (ms/query + compiled plan choice)
   sharded_bench — sharded execution path: 1/2/4/8-shard probe+merge scaling
+  maintenance_bench — adaptive maintenance: ingest stall (incremental drain
+                  vs full compact) + post-maintenance query latency
 
 Prints ``name,us_per_call,derived`` CSV.
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module>]
@@ -27,7 +29,7 @@ def main() -> None:
                     choices=["paper_tables", "ablations", "scaling",
                              "kernels_bench", "hybrid_bench",
                              "filtered_bench", "query_bench",
-                             "sharded_bench"])
+                             "sharded_bench", "maintenance_bench"])
     args = ap.parse_args()
 
     rows = []
@@ -37,12 +39,13 @@ def main() -> None:
         print(f"{name},{us_per_call:.3f},{derived}", flush=True)
 
     from benchmarks import (ablations, filtered_bench, hybrid_bench,
-                            kernels_bench, paper_tables, query_bench, scaling,
-                            sharded_bench)
+                            kernels_bench, maintenance_bench, paper_tables,
+                            query_bench, scaling, sharded_bench)
     mods = {"paper_tables": paper_tables, "ablations": ablations,
             "scaling": scaling, "kernels_bench": kernels_bench,
             "hybrid_bench": hybrid_bench, "filtered_bench": filtered_bench,
-            "query_bench": query_bench, "sharded_bench": sharded_bench}
+            "query_bench": query_bench, "sharded_bench": sharded_bench,
+            "maintenance_bench": maintenance_bench}
     selected = [mods[args.only]] if args.only else list(mods.values())
 
     print("name,us_per_call,derived")

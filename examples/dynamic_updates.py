@@ -1,5 +1,7 @@
-"""Streaming ingestion under MVCC: inserts/updates/deletes with live queries,
-automatic compaction, and workload-aware repartitioning.
+"""Streaming ingestion under MVCC with *adaptive* maintenance: inserts,
+updates and deletes with live queries — the delta drains in bounded
+incremental steps (no manual compact, no stop-the-world rebuild), cold
+partitions merge away, and workload skew splits the hot partition in place.
 
     PYTHONPATH=src python examples/dynamic_updates.py
 """
@@ -11,33 +13,49 @@ from repro.data.synthetic import make_corpus
 
 corpus = make_corpus(n_nodes=1000, modality_dims={"text": 48}, seed=0)
 cfg = get_config("hmgi").replace(n_partitions=16, n_probe=4, top_k=5,
-                                 delta_capacity=128, compact_threshold=0.5)
+                                 delta_capacity=128,
+                                 maint_chunk=32, maint_budget_rows=64)
 index = HMGIIndex(cfg, seed=0)
 index.ingest({"text": (corpus.node_ids["text"], corpus.vectors["text"])},
              n_nodes=corpus.n_nodes, edges=(corpus.src, corpus.dst))
 
+# 1. streaming writes: maint_auto (the default) lets insert/delete trigger
+#    bounded maintenance — watch the delta watermark stay bounded without a
+#    single explicit compact
 rng = np.random.default_rng(0)
-n_compactions = 0
 for step in range(8):
-    # streaming batch: 40 inserts (some are updates of existing ids)
-    ids = rng.integers(0, corpus.n_nodes, 40).astype(np.int32)
-    vecs = rng.normal(size=(40, 48)).astype(np.float32)
-    before = int(index.modalities["text"].delta.count)
+    ids = rng.integers(0, corpus.n_nodes, 40).astype(np.int32)  # some are
+    vecs = rng.normal(size=(40, 48)).astype(np.float32)         # updates
     index.insert("text", ids, vecs)
-    after = int(index.modalities["text"].delta.count)
-    compacted = after < before
-    n_compactions += compacted
     # live query against the newest version of a just-written id
     _, found = index.search(vecs[:1], "text", k=1)
     fresh = int(found[0, 0]) == int(ids[0])
-    print(f"step {step}: delta={after:4d} compacted={compacted} "
-          f"fresh-read={'OK' if fresh else 'STALE!'}")
+    delta_rows = int(index.modalities["text"].delta.count)
+    print(f"step {step}: delta={delta_rows:4d} "
+          f"fresh-read={'OK' if fresh else 'STALE!'}  "
+          f"maintenance: {index.metrics().get('maintenance', 'n/a')}")
 
-# skewed workload triggers online repartitioning
+# 2. an explicit budgeted pass: plan + apply ≤64 rows of work
+report = index.maintain("text", budget=64)
+print(f"explicit maintain: {report.describe()}")
+
+# 3. hollow out a partition with deletes -> delete's auto-trigger merges it
+#    into its nearest sibling and parks the slot (deleted ids never
+#    resurrect; the parked slot is reused by the next split)
 m = index.modalities["text"]
+p = int(np.argmin(np.asarray(m.ivf.counts)))
+victims = np.asarray(m.ivf.ids[p])
+victims = victims[victims >= 0]
+index.delete("text", victims)
+print(f"after deleting partition {p}'s rows: "
+      f"{index.metrics()['maintenance']}")
+print(f"live partitions: {int(np.sum(~m.stats.parked))}/{cfg.n_partitions}")
+
+# 4. workload skew triggers an in-place split of the hot partition (only
+#    its rows move, byte-identically — no full rebuild)
 m.workload.hits[:] = 0
-m.workload.hits[3] = 50_000
+m.workload.hits[int(np.argmax(np.asarray(m.ivf.counts)))] = 50_000
 if index.maybe_repartition("text"):
-    print("workload skew detected -> hot partition split (no downtime)")
-print(f"compactions: {n_compactions}; "
-      f"final delta size: {int(index.modalities['text'].delta.count)}")
+    print("workload skew detected -> hot partition split (bounded work)")
+print(f"final delta size: {int(m.delta.count)}; "
+      f"live partitions: {int(np.sum(~m.stats.parked))}/{cfg.n_partitions}")

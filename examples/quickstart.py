@@ -37,12 +37,17 @@ print(f"vector recall@10: {recall_at_k(np.asarray(ids), truth):.3f}")
 hscores, hids = index.hybrid_search(queries, "text", k=10, n_hops=2)
 print(f"hybrid top-1 ids: {np.asarray(hids)[:4, 0]}")
 
-# 5. dynamic update: insert a new vector, find it, delete it
+# 5. dynamic update: insert a new vector, find it, delete it. Writes land
+#    in the MVCC delta; adaptive maintenance (auto-triggered, or explicit
+#    via maintain(budget=...)) drains it in bounded steps — compact() is
+#    the synchronous full-merge fallback shown here.
 new_vec = np.zeros((1, 64), np.float32)
 new_vec[0, 0] = 1.0
 index.insert("text", np.array([1999]), new_vec)
 _, found = index.search(new_vec, "text", k=1)
 print(f"inserted id found: {int(found[0, 0]) == 1999}")
 index.delete("text", np.array([1999]))
+report = index.maintain("text", budget=256)   # bounded adaptive pass
+print(f"maintenance: {report.describe()}")
 index.compact("text")
 print("compacted; delta flushed into the stable index")

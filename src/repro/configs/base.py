@@ -222,6 +222,15 @@ class HMGIConfig(ArchConfig):
     cost_alpha: float = 1.0
     cost_beta: float = 0.01
     cost_gamma: float = 0.1
+    # adaptive maintenance (cost_model.plan_maintenance + repro.maintenance)
+    maint_auto: bool = True                # insert/delete auto-trigger maintain()
+    maint_budget_rows: int = 1024          # bounded work per maintain() call
+    maint_chunk: int = 256                 # delta rows drained per compact step
+    maint_delta_pressure: float = 0.5      # drain when delta watermark ≥ this
+    maint_heat_imbalance: float = 4.0      # split when hottest ≥ this × mean heat
+    maint_split_min_fill: float = 0.75     # ... and the hot partition is this full
+    maint_merge_max_fill: float = 0.10     # merge partitions emptier than this
+    maint_drift_threshold: float = 0.35    # recluster at +35% mean assigned dist
     # attribute-filtered search (predicate pushdown vs oversampling)
     filter_prefilter_max_sel: float = 0.5  # pushdown when sel <= this
     filter_oversample: float = 3.0         # initial k inflation when not

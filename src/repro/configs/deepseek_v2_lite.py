@@ -3,7 +3,7 @@
 [arXiv:2405.04434; hf]. The assignment block lists "MoE 64e top-6" and
 "2 shared+160 routed"; 160 routed is the full V2 config — the lite model
 (16B) has 64 routed experts, which matches the primary "64e top-6" spec,
-so we use 64 routed + 2 shared (noted in DESIGN.md §4).
+so we use 64 routed + 2 shared (noted in docs/DESIGN.md §4).
 """
 from repro.configs.base import LMConfig
 from repro.configs.lm_shapes import lm_shapes
@@ -33,5 +33,5 @@ CONFIG = LMConfig(
 
 # MLA latent KV cache (512+64 per token/layer) keeps the 500k decode cell's
 # memory term tractable (~16 GB at batch 1 before sharding); decode is O(seq)
-# per token. Run (justified in DESIGN.md §4).
+# per token. Run (justified in docs/DESIGN.md §4).
 SHAPES = lm_shapes(long_ok=True, long_note="MLA compressed KV cache")

@@ -12,6 +12,6 @@ def lm_shapes(*, long_ok: bool, long_note: str = "") -> list[ShapeSpec]:
             skip=not long_ok,
             skip_reason="" if long_ok else (
                 long_note or "pure full-attention arch: no sub-quadratic path at 500k "
-                "(skip recorded per DESIGN.md §4)"),
+                "(skip recorded per docs/DESIGN.md §4)"),
         ),
     ]

@@ -14,7 +14,7 @@ CONFIG = LMConfig(
     tie_embeddings=True,
     rope_theta=10_000.0,
     # 24 heads don't divide a 16-way "model" axis: phi4 uses context-parallel
-    # attention + TP mlp instead of head-sharding (DESIGN.md §5)
+    # attention + TP mlp instead of head-sharding (docs/DESIGN.md §5)
     sharding_overrides={"heads": None, "kv_heads": None, "seq_attn": "model"},
 )
 

@@ -197,3 +197,188 @@ def plan_fusion(n_nodes: int, k: int, c_in: int) -> FusionPlan:
     frontier = int(min(n_nodes, k_fuse + c_in))
     return FusionPlan("dense" if frontier >= n_nodes else "sparse",
                       k_fuse, frontier)
+
+
+# ---------------------------------------------------------------------------
+# adaptive index maintenance planning (repro/maintenance consumes this)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MaintenanceAction:
+    """One bounded-work maintenance step the executor can apply.
+
+    kind ∈ {"compact_chunk", "split_hot", "merge_cold", "recluster"};
+    ``rows`` is the estimated work (slab/delta rows touched — the budget
+    currency), ``benefit`` the estimated per-query saving in scanned-row
+    units (see ``plan_maintenance`` for the per-action model)."""
+    kind: str
+    partition: int = -1
+    rows: int = 0
+    benefit: float = 0.0
+
+    def describe(self) -> str:
+        p = "" if self.partition < 0 else f" p={self.partition}"
+        return (f"{self.kind}[{self.rows} rows{p} "
+                f"benefit={self.benefit:.1f}]")
+
+
+@dataclasses.dataclass(frozen=True)
+class MaintenanceSummary:
+    """Per-partition statistics snapshot ``plan_maintenance`` decides from
+    (assembled by maintenance/stats.py from its write-time accumulators)."""
+    live: np.ndarray          # (K,) live (visible) rows per partition
+    free: np.ndarray          # (K,) empty slots per partition
+    heat: np.ndarray          # (K,) probe hits since the last plan
+    dead: np.ndarray          # (K,) tombstoned/superseded stable rows
+    drift: np.ndarray         # (K,) mean assigned-distance growth vs build
+                              #      (0 = no drift, 0.5 = +50%)
+    parked: np.ndarray        # (K,) bool — merged-away partitions
+    delta_live: int           # live rows in the delta store
+    delta_used: int           # append watermark (slots consumed)
+    delta_capacity: int
+    cap: int                  # per-partition slot capacity
+
+
+def plan_maintenance(summary: MaintenanceSummary, *, budget_rows: int,
+                     chunk: int, need_rows: int = 0,
+                     delta_pressure: float = 0.5,
+                     heat_imbalance: float = 4.0,
+                     split_min_fill: float = 0.75,
+                     merge_max_fill: float = 0.10,
+                     drift_threshold: float = 0.35
+                     ) -> List[MaintenanceAction]:
+    """Cost-driven maintenance policy: choose the bounded-work actions worth
+    their cost, greedily by benefit/row under ``budget_rows``.
+
+    Per-action benefit model (scanned-row units per future query — the same
+    currency Eq. 5's γ term prices):
+
+    - **compact_chunk** — every query scans the whole delta, so draining
+      ``r`` slots saves ``r`` scanned rows per query. Triggered when the
+      delta's append watermark passes ``delta_pressure`` of capacity, or
+      unconditionally when the caller must free ``need_rows`` slots for a
+      pending insert (never drop a write).
+    - **merge_cold** — a partition whose live fill sank below
+      ``merge_max_fill`` (deletes/updates hollowed it out) still costs a
+      full ``cap``-row scan whenever probed; folding its survivors into the
+      nearest sibling retires that scan and frees the slot for a future
+      split. Benefit: its probe share × cap + the dead rows removed.
+    - **split_hot** — the probe-heat tracker shows one partition absorbing
+      ≥ ``heat_imbalance``× the mean probe traffic while ≥ ``split_min_fill``
+      full: its crowded slab degrades recall-per-probe and its overflow
+      pressures the delta. Splitting halves the hot slab's crowding for its
+      (dominant) probe share. Requires a parked partition or a viable merge
+      to free one — the planner emits that merge first.
+    - **recluster** — a partition whose incoming rows land ``drift_threshold``
+      further from the centroid than the build-time baseline routes future
+      probes badly; re-centering (no row moves) restores routing for its
+      probe share.
+
+    Returns actions in execution order; empty list = no-op. Estimates only —
+    the executor re-validates feasibility (e.g. sibling capacity) at apply
+    time."""
+    K = len(summary.live)
+    total_heat = float(summary.heat.sum()) or 1.0
+    heat_frac = summary.heat / total_heat
+    candidates: List[MaintenanceAction] = []
+
+    # --- delta drain ------------------------------------------------------
+    # forced chunks free exactly the slots a pending insert needs (every
+    # drain step also reclaims stale/dead watermark slack via the rebuild);
+    # draining the whole delta on a forced call would reinstate the very
+    # full-compaction stall this subsystem removes. Pressure-driven chunks
+    # beyond that compete under the budget like any other action.
+    force = max(0, int(need_rows))
+    n_forced = -(-force // max(chunk, 1))
+    fill = summary.delta_used / max(summary.delta_capacity, 1)
+    for _ in range(n_forced):
+        candidates.append(MaintenanceAction("compact_chunk", -1, chunk,
+                                            benefit=float(chunk)))
+    if fill >= delta_pressure:
+        if summary.delta_live == 0 and summary.delta_used and not n_forced:
+            # pure dead weight (e.g. everything inserted was deleted): one
+            # chunk reclaims the whole watermark via the drain's rebuild
+            candidates.append(MaintenanceAction(
+                "compact_chunk", -1, 1, benefit=float(summary.delta_used)))
+        drain = summary.delta_live - n_forced * chunk
+        while drain > 0:
+            r = min(chunk, drain)
+            candidates.append(MaintenanceAction("compact_chunk", -1, r,
+                                                benefit=float(r)))
+            drain -= r
+
+    # --- merge-cold -------------------------------------------------------
+    live_parts = ~summary.parked
+    n_live_parts = int(live_parts.sum())
+    mergeable = []
+    for p in range(K):
+        if summary.parked[p] or n_live_parts <= 1:
+            continue
+        fill_p = summary.live[p] / max(summary.cap, 1)
+        if summary.live[p] == 0 or fill_p <= merge_max_fill:
+            b = heat_frac[p] * summary.cap + float(summary.dead[p])
+            mergeable.append(MaintenanceAction(
+                "merge_cold", p, rows=max(int(summary.live[p]), 1),
+                benefit=float(b)))
+    mergeable.sort(key=lambda a: a.benefit / a.rows, reverse=True)
+    candidates.extend(mergeable)
+
+    # --- split-hot --------------------------------------------------------
+    if n_live_parts > 1 and total_heat > 1.0:
+        mean_heat = total_heat / max(n_live_parts, 1)
+        # a parked partition's accumulated (pre-merge) hits must not win
+        # the argmax and suppress splits of genuinely hot live partitions
+        hot = int(np.argmax(np.where(summary.parked, -1, summary.heat)))
+        if (summary.heat[hot] > heat_imbalance * mean_heat
+                and summary.live[hot] >= split_min_fill * summary.cap):
+            rows = int(summary.live[hot])
+            b = heat_frac[hot] * rows / 2.0
+            free_slot = bool(summary.parked.any())
+            if not free_slot and not any(a.kind == "merge_cold"
+                                         for a in candidates):
+                # a split needs an empty partition: free the best merge
+                # candidate first even if it didn't clear its own threshold
+                others = [p for p in range(K)
+                          if p != hot and not summary.parked[p]]
+                cold = min(others, key=lambda p: summary.live[p])
+                candidates.append(MaintenanceAction(
+                    "merge_cold", cold,
+                    rows=max(int(summary.live[cold]), 1),
+                    benefit=float(b) / 2))
+            candidates.append(MaintenanceAction("split_hot", hot, rows,
+                                                benefit=float(b)))
+
+    # --- recluster --------------------------------------------------------
+    for p in range(K):
+        if summary.parked[p] or summary.live[p] == 0:
+            continue
+        if summary.drift[p] >= drift_threshold:
+            candidates.append(MaintenanceAction(
+                "recluster", p, rows=max(int(summary.live[p]), 1),
+                benefit=float(heat_frac[p] * summary.drift[p]
+                              * summary.live[p])))
+
+    # --- greedy selection under the row budget ----------------------------
+    # the n_forced need_rows chunks (emitted first) are mandatory — a
+    # dropped write is not a cost decision; everything else competes on
+    # benefit/row, and at least one triggered action always runs (budget
+    # floors, never zeroes)
+    mandatory = candidates[:n_forced]
+    optional = candidates[n_forced:]
+    optional.sort(key=lambda a: a.benefit / max(a.rows, 1), reverse=True)
+    chosen: List[MaintenanceAction] = list(mandatory)
+    spent = sum(a.rows for a in chosen)
+    for a in optional:
+        if chosen and spent + a.rows > budget_rows:
+            continue
+        chosen.append(a)
+        spent += a.rows
+    # execution order: drain first (frees delta slots), then merges (free a
+    # partition), then splits (consume one), then reclusters. The executor
+    # re-validates feasibility (sibling capacity, parked-slot availability)
+    # at apply time, so a budget-dropped enabling merge degrades a split to
+    # a no-op rather than a fault.
+    rank = {"compact_chunk": 0, "merge_cold": 1, "split_hot": 2,
+            "recluster": 3}
+    chosen.sort(key=lambda a: rank[a.kind])
+    return chosen

@@ -12,8 +12,11 @@ that counter (``row_version``). Visibility rules per read:
 supersede(old) + insert(new)); the latest-version mask covers the
 delta-vs-delta case (insert-then-update before compaction), where a stale
 row would otherwise outrank the update purely on score. Compaction folds the
-latest versions back into the stable index and clears both. Readers are
-wait-free: search takes a consistent (stable, delta) snapshot pair.
+latest versions back into the stable index and clears both — either the full
+synchronous ``compact`` or, on the adaptive path, fixed-size incremental
+drains (``live_slots`` + ``rebuild_keep``, driven by repro/maintenance).
+Readers are wait-free: search takes a consistent (stable, delta) snapshot
+pair.
 
 Scan path: rows are quantized to int8 at insert time (mirroring the stable
 slab layout), so the delta scan runs through the same fused Pallas kernel as
@@ -35,6 +38,7 @@ from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import ivf as ivf_mod
 from repro.core.graph_store import mask_pass
@@ -317,15 +321,74 @@ def search_with_delta_sharded(sharded: IVFIndex, delta: DeltaStore,
 
 
 def should_compact(delta: DeltaStore, threshold: float = 0.5) -> bool:
+    """True when the delta holds ≥ threshold·capacity rows (counting stale
+    and drained slots: ``count`` is the append watermark, the quantity that
+    actually exhausts capacity)."""
     return int(delta.count) >= int(threshold * delta.vectors.shape[0])
+
+
+# ---------------------------------------------------------------------------
+# incremental drain (bounded-work compaction steps; maintenance/executor.py)
+# ---------------------------------------------------------------------------
+
+def live_slots(delta: DeltaStore):
+    """Host: slot indices (ascending — oldest write first) of rows visible
+    to the delta scan: latest version per id, not tombstoned. The incremental
+    compactor drains a bounded prefix of this list per step."""
+    ids = np.asarray(delta.ids)
+    tomb = np.asarray(delta.tombstones)
+    ok = np.asarray(_latest_version_mask(delta)) \
+        & ~tomb[np.clip(ids, 0, tomb.shape[0] - 1)]
+    return np.where(ok)[0]
+
+
+def rebuild_keep(delta: DeltaStore, keep_slots, clear_superseded_ids=None
+                 ) -> DeltaStore:
+    """Fresh store holding only ``keep_slots``'s rows — the drain step's
+    tail: drained / stale / tombstone-shadowed slots vanish and the kept
+    rows re-pack from slot 0 as one fixed-(cap,)-shape gather (their stored
+    bytes move untouched — and the shape never depends on how many rows
+    survive, so repeated drain steps hit the same compiled executables).
+    Tombstones carry over; the version stays monotone.
+    ``clear_superseded_ids`` marks ids whose latest version just moved into
+    the stable store — their stable row is live again, so the superseded
+    bit must drop with the delta row."""
+    sp = delta.superseded
+    if clear_superseded_ids is not None and len(clear_superseded_ids):
+        sp = sp.at[_clip_ids(delta, jnp.asarray(
+            np.asarray(clear_superseded_ids, np.int32)))].set(False)
+    cap = delta.vectors.shape[0]
+    keep_slots = np.asarray(keep_slots, np.int64)
+    n = int(keep_slots.size)
+    # (cap,) gather map: kept rows to the front, slot 0 as a harmless
+    # source for the (masked-out) tail
+    src = np.zeros(cap, np.int64)
+    src[:n] = keep_slots
+    gs = jnp.asarray(src)
+    valid = jnp.arange(cap) < n
+    return DeltaStore(
+        vectors=jnp.where(valid[:, None], delta.vectors[gs], 0.0),
+        qdata=jnp.where(valid[:, None], delta.qdata[gs], 0),
+        qvmin=jnp.where(valid, delta.qvmin[gs], 0.0),
+        qscale=jnp.where(valid, delta.qscale[gs], 1.0),
+        ids=jnp.where(valid, delta.ids[gs], -1),
+        row_version=jnp.where(valid, delta.row_version[gs], -1),
+        stale=jnp.zeros((cap,), bool),      # kept rows are one-per-id live
+        count=jnp.asarray(n, jnp.int32),
+        version=delta.version + 1,
+        tombstones=delta.tombstones,
+        superseded=sp,
+    )
 
 
 def compact(key, index: IVFIndex, delta: DeltaStore,
             all_vectors: jax.Array, all_ids: jax.Array) -> Tuple[IVFIndex, DeltaStore]:
-    """Asynchronous-vacuum analogue: merge live delta rows into the stable
+    """Full synchronous compaction: merge live delta rows into the stable
     index by re-running the (cheap) assignment against *existing* centroids —
-    no K-means refit, no full rebuild (paper: "incremental merges into
-    snapshots"). Centroid drift is handled by the workload-aware repartitioner.
+    no K-means refit (paper: "incremental merges into snapshots"). This is
+    the one-shot fallback; the bounded-work path drains chunks instead
+    (``live_slots``/``rebuild_keep`` + repro/maintenance, docs/DESIGN.md
+    §3.4). Centroid drift is handled there too (recluster/split actions).
 
     all_vectors/all_ids: the full live corpus with one latest row per id
     (facade-provided); returns (new_index, fresh_delta). Overflow rows that

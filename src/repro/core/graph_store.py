@@ -4,7 +4,7 @@ This is HMGI's relational side (the paper's Neo4j role): entities are nodes,
 relationships are typed weighted edges, and each node carries the id of its
 embedding in the vector side of the index. Traversal operators live in
 ``core/traversal.py`` and run as fixed-hop masked frontier pushes over these
-arrays (DESIGN.md §2.3).
+arrays (docs/DESIGN.md §2.3).
 
 ``NodeAttributes`` is the relational *predicate* side: a small fixed set of
 int/categorical columns per global node id, held column-major on device, so

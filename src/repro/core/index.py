@@ -29,12 +29,15 @@ from repro.core.fusion import FusionWeights, fuse_topk_sparse
 from repro.core import graph_store as graph_mod
 from repro.core.graph_store import (GraphStore, NodeAttributes,
                                     from_edges as graph_from_edges)
-from repro.core.partitioner import WorkloadStats
+from repro.core.cost_model import plan_maintenance
+from repro.core.partitioner import WorkloadStats, assign_with_distance
 from repro.core.quantization import AdaptiveQuantPolicy
+from repro.maintenance import MaintenanceReport, PartitionStats
 
 # NOTE: repro.query (the declarative engine this facade compiles onto) is
 # imported lazily inside methods — repro.query.planner/executor import core
 # submodules at module scope, so a top-level import here would cycle.
+# repro.maintenance.executor is imported lazily for the same hygiene.
 
 
 @functools.partial(jax.jit, static_argnames=("k_fuse", "frontier"))
@@ -104,6 +107,10 @@ class ModalityIndex:
     ids: jax.Array              # (N,) global node ids
     nsw: Optional[nsw_mod.NSWGraph] = None
     workload: Optional[WorkloadStats] = None
+    # write-time per-partition maintenance statistics (heat lives in
+    # ``workload``; this adds delta pressure, tombstone ratio, drift) —
+    # consumed by cost_model.plan_maintenance via HMGIIndex.maintain
+    stats: Optional[PartitionStats] = None
     # True once any delete/update touched this modality: gates the MVCC
     # visibility pushdown in the scan (never reset — conservative; False
     # guarantees no dead row can be visible, so scans skip the mask)
@@ -144,9 +151,16 @@ class HMGIIndex:
                n_nodes: int, edges: Optional[Tuple] = None,
                build_nsw: bool = False,
                node_attrs: Optional[Dict[str, np.ndarray]] = None):
-        """embeddings: modality -> (node_ids (N_m,), vectors (N_m, d_m)).
-        edges: (src, dst[, edge_type[, edge_weight]]) arrays.
-        node_attrs: column name -> (n_nodes,) int values (WHERE-clause side)."""
+        """Builds the index over a multimodal corpus.
+
+        embeddings: modality -> (node_ids (N_m,) int, vectors (N_m, d_m));
+        vectors are L2-normalised here (all similarity is dot-product over
+        unit vectors). edges: (src, dst[, edge_type[, edge_weight]]) arrays
+        over global node ids. node_attrs: column name -> (n_nodes,) int
+        values (the WHERE-clause side). Build overflow (rows beyond a
+        partition's capacity) is routed to the delta store — grown if
+        needed, never dropped — and per-partition maintenance statistics
+        are baselined from the build's own assignment."""
         self.n_nodes = n_nodes
         for mod, (ids, vecs) in embeddings.items():
             vecs = jnp.asarray(vecs, jnp.float32)
@@ -168,7 +182,9 @@ class HMGIIndex:
                 ov = jnp.where(overflow)[0]
                 dstore = delta_mod.insert_grow(dstore, vecs[ov], ids[ov])
             m = ModalityIndex(ivf=index, delta=dstore, vectors=vecs, ids=ids,
-                              workload=WorkloadStats(k))
+                              workload=WorkloadStats(k),
+                              stats=PartitionStats.from_build(
+                                  vecs, ids, index, max_ids=max(n_nodes, 1)))
             if build_nsw or self.cfg.use_nsw_refine:
                 m.nsw = nsw_mod.build(self._split(), vecs,
                                       degree=min(self.cfg.nsw_degree, vecs.shape[0] - 1))
@@ -330,10 +346,41 @@ class HMGIIndex:
         return fvals[:, :k], fids[:, :k]
 
     # ----------------------------------------------------------------- update
+    def _record_dead(self, m: ModalityIndex, ids_np: np.ndarray):
+        """Maintenance stats: ids whose stable row just became invisible
+        (tombstoned or superseded). Counts only freshly dead ids — an id
+        already hidden must not inflate the partition's dead counter."""
+        if m.stats is None or not ids_np.size:
+            return
+        tomb = np.asarray(m.delta.tombstones)
+        sup = np.asarray(m.delta.superseded)
+        c = np.clip(ids_np, 0, tomb.shape[0] - 1)
+        m.stats.record_dead(ids_np[~(tomb[c] | sup[c])], m.ivf)
+
     def insert(self, modality: str, ids, vectors):
-        """Insert-or-update: existing ids are superseded (MVCC update path)."""
+        """Insert-or-update a batch.
+
+        ids: (B,) global node ids; vectors: (B, d_m) — L2-normalised here.
+        Existing ids are superseded (MVCC update path): the stable row is
+        hidden, the fp32 master row is rewritten in place, and the new
+        version lands in the delta. When the delta lacks room (or crosses
+        the compaction threshold), ``cfg.maint_auto`` routes the work
+        through ``maintain`` — bounded incremental drains instead of a
+        stop-the-world ``compact`` — growing the delta only if maintenance
+        could not free enough slots. Writes are never dropped."""
         m = self.modalities[modality]
         v = self._norm_queries(vectors)
+        # free delta room BEFORE any visibility change: a forced drain here
+        # still sees consistent MVCC state. Draining after supersede() would
+        # move the id's *old* delta version into stable and clear its
+        # superseded bit — then appending the new version would leave two
+        # visible copies (the stale one served from stable).
+        if delta_mod.free_slots(m.delta) < v.shape[0]:
+            if self.cfg.maint_auto:
+                self.maintain(modality,
+                              need_rows=v.shape[0] - delta_mod.free_slots(m.delta))
+            else:
+                self.compact(modality)
         ids32 = jnp.asarray(ids, jnp.int32)
         ids_np = np.asarray(ids32)
         existing_np = np.asarray(m.ids)
@@ -346,6 +393,7 @@ class HMGIIndex:
             else np.zeros(ids_np.shape, bool)
         if upd_mask.any():
             m.has_dead = True
+            self._record_dead(m, ids_np[upd_mask])
             m.delta = delta_mod.supersede(m.delta, ids32[jnp.asarray(upd_mask)])
             rows = order[pos_c[upd_mask]]
             m.vectors = m.vectors.at[jnp.asarray(rows)].set(v[jnp.asarray(upd_mask)])
@@ -354,25 +402,45 @@ class HMGIIndex:
             m.vectors = jnp.concatenate([m.vectors, v[sel]], axis=0)
             m.ids = jnp.concatenate([m.ids, ids32[sel]])
             m.id_rows = None        # new ids -> the row cache is stale
-        # never drop writes: compact to make room, then grow if the batch
-        # alone exceeds the (fresh) delta's capacity
-        if delta_mod.free_slots(m.delta) < v.shape[0]:
-            self.compact(modality)
+        # never drop writes: insert_grow widens the store if the (already
+        # drained, above) delta still lacks room for the batch
         m.delta = delta_mod.insert_grow(m.delta, v, ids32)
+        if m.stats is not None:
+            a, d2 = assign_with_distance(v, m.ivf.centroids)
+            m.stats.record_writes(np.asarray(a), np.asarray(d2))
         if delta_mod.should_compact(m.delta, self.cfg.compact_threshold):
-            self.compact(modality)
+            if self.cfg.maint_auto:
+                self.maintain(modality)
+            else:
+                self.compact(modality)
 
     def delete(self, modality: str, ids):
+        """Tombstones the ids in ``modality`` (O(B) mask writes; the rows
+        vanish from every scan path immediately and are physically purged by
+        maintenance/compaction). Auto-triggers a maintenance pass so
+        hollowed-out partitions eventually merge away."""
         m = self.modalities[modality]
+        ids_np = np.asarray(jnp.asarray(ids, jnp.int32))
+        self._record_dead(m, ids_np)
         m.has_dead = True
         m.delta = delta_mod.delete(m.delta, jnp.asarray(ids, jnp.int32))
+        if self.cfg.maint_auto:
+            self.maintain(modality)
 
     def compact(self, modality: str):
-        """Merge delta into stable (async-vacuum analogue; see core/delta.py)."""
+        """Full compaction: merge the whole delta into the stable store in
+        one synchronous rebuild (async-vacuum analogue; see core/delta.py).
+        The adaptive path (``maintain`` / ``cfg.maint_auto``) drains the
+        delta in bounded chunks instead — this remains the one-shot fallback
+        and the reference the incremental drain must match."""
         m = self.modalities[modality]
         m.ivf, m.delta = delta_mod.compact(self._split(), m.ivf, m.delta,
                                            m.vectors, m.ids)
         m.ivf_sharded = None    # stable store rebuilt -> sharded replica stale
+        if m.stats is not None:
+            # the rebuild dropped every dead stable row and re-packed slots
+            m.stats.dead[:] = 0
+            m.stats.invalidate_slab()
         if m.nsw is not None:
             # compaction clears the superseded mask, which is what hid
             # updated rows from the NSW lane — refresh it over the latest
@@ -382,41 +450,113 @@ class HMGIIndex:
                 degree=min(self.cfg.nsw_degree, m.vectors.shape[0] - 1))
 
     def maybe_repartition(self, modality: str):
-        """Workload-aware online adjustment (paper §3.2).
+        """Workload-aware online adjustment (paper §3.2), as bounded work.
 
-        Rows that don't fit their partition after the split are routed into
-        the delta store exactly as ``ingest`` does — the post-split build's
-        overflow mask must never be discarded, or those rows silently vanish
-        from search until the next compaction."""
-        from repro.core.partitioner import KMeansState, split_hot_partition
+        When the probe-heat tracker reports imbalance, the hottest
+        partition is split in place by the maintenance executor: a local
+        K=2 fit over that partition's stored rows, moved byte-identically
+        between the hot slab and a freed partition (merging the coldest
+        away first when none is parked). Only the hot partition's rows move
+        — no full rebuild, and survivors that don't fit anywhere are routed
+        to the delta, never dropped. Returns True if a split was applied."""
+        from repro.maintenance import executor as maint_exec
         m = self.modalities[modality]
         if m.workload is None or not m.workload.should_repartition():
             return False
-        hot = int(np.argmax(m.workload.hits))
-        st = KMeansState(m.ivf.centroids, jnp.asarray(m.ivf.counts, jnp.float32),
-                         jnp.zeros(()))
-        new = split_hot_partition(self._split(), m.vectors, st, hot)
-        index, overflow = ivf_mod.build(
-            self._split(), m.vectors, m.ids,
-            n_partitions=m.ivf.n_partitions, bits=m.ivf.bits,
-            capacity=m.ivf.capacity, centroids=new.centroids)
-        m.ivf = index
-        m.ivf_sharded = None    # stable store rebuilt -> sharded replica stale
-        # overflow -> delta (skip tombstoned ids: delta.insert would clear
-        # their tombstones and resurrect deleted rows)
-        over = np.array(overflow)                      # writable host copy
-        dead = np.asarray(m.delta.tombstones)
-        ids_np = np.asarray(m.ids)
-        over &= ~dead[np.clip(ids_np, 0, dead.shape[0] - 1)]
-        n_over = int(over.sum())
-        if n_over:
-            sel = jnp.asarray(np.where(over)[0])
-            m.delta = delta_mod.insert_grow(m.delta, m.vectors[sel], m.ids[sel])
+        # a parked partition's pre-merge hits must not win the argmax (its
+        # heat is never reset on merge) and suppress the real hot split
+        hits = (np.where(m.stats.parked, -1, m.workload.hits)
+                if m.stats is not None else m.workload.hits)
+        hot = int(np.argmax(hits))
+        res = maint_exec.split_hot(m, self.cfg, self._split(), m.stats, hot)
+        m.ivf_sharded = None    # stable slots moved -> sharded replica stale
         m.workload.reset()
-        return True
+        return bool(res.get("moved", 0))
+
+    def maintain(self, modality: Optional[str] = None,
+                 budget: Optional[int] = None, *, need_rows: int = 0):
+        """One adaptive-maintenance pass (docs/DESIGN.md §3.4): plan
+        cost-worthy actions from the write-time partition statistics and
+        apply them as bounded-work steps.
+
+        budget: row budget for this pass (default ``cfg.maint_budget_rows``)
+        — the planner picks the best benefit/row actions that fit.
+        need_rows: caller must free at least this many delta slots (the
+        insert path's never-drop-a-write hook); forces drain chunks ahead
+        of the budget.
+
+        Returns the ``MaintenanceReport`` for ``modality`` (or a dict of
+        reports over all modalities when ``modality`` is None). The applied
+        decision trail is also surfaced in ``metrics()['maintenance']``."""
+        from repro.maintenance import executor as maint_exec
+        cfg = self.cfg
+        budget = cfg.maint_budget_rows if budget is None else int(budget)
+        if budget <= 0 and need_rows <= 0:
+            # an explicit zero budget is "no optional work", not "default"
+            return ({m: MaintenanceReport(m) for m in self.modalities}
+                    if modality is None else MaintenanceReport(modality))
+        reports: Dict[str, MaintenanceReport] = {}
+        for mod in ([modality] if modality else list(self.modalities)):
+            m = self.modalities[mod]
+            if m.stats is None:
+                m.stats = PartitionStats.from_build(
+                    m.vectors, m.ids, m.ivf,
+                    max_ids=int(m.delta.tombstones.shape[0]))
+            heat = None if m.workload is None else m.workload.hits
+            actions = plan_maintenance(
+                m.stats.summarize(m, heat),
+                budget_rows=budget,
+                chunk=cfg.maint_chunk, need_rows=need_rows,
+                delta_pressure=cfg.maint_delta_pressure,
+                heat_imbalance=cfg.maint_heat_imbalance,
+                split_min_fill=cfg.maint_split_min_fill,
+                merge_max_fill=cfg.maint_merge_max_fill,
+                drift_threshold=cfg.maint_drift_threshold)
+            report = MaintenanceReport(mod)
+            cleared = 0
+            skip_chunks = False
+            for act in actions:
+                if act.kind == "compact_chunk" and skip_chunks:
+                    continue
+                res = maint_exec.apply(m, cfg, self._split(), m.stats, act)
+                report.actions.append((act, res))
+                cleared += res.get("cleared_superseded", 0)
+                if act.kind == "compact_chunk" and not (
+                        res.get("drained", 0) or res.get("reclaimed", 0)):
+                    # every target partition is full (or the delta emptied):
+                    # further chunks this pass would spin without progress
+                    skip_chunks = True
+                if res.get("ivf_changed", False):
+                    m.ivf_sharded = None    # slots/centroids moved
+                    if act.kind == "split_hot" and m.workload is not None:
+                        m.workload.reset()
+            if cleared and m.nsw is not None:
+                # drained updates cleared superseded bits — exactly like a
+                # full compaction, the NSW layer must refresh over the
+                # latest master rows or it would serve pre-update scores
+                m.nsw = nsw_mod.build(
+                    self._split(), m.vectors,
+                    degree=min(cfg.nsw_degree, m.vectors.shape[0] - 1))
+            reports[mod] = report
+        trail = "; ".join(r.describe() for r in reports.values()
+                          if not r.is_noop)
+        if trail:
+            # the latest *applied* decision trail (a no-op pass leaves the
+            # last real decision visible — that is the interesting one)
+            self._metrics["maintenance"] = trail
+        return reports[modality] if modality else reports
 
     # ------------------------------------------------------------------ stats
+    def metrics(self) -> Dict[str, object]:
+        """Execution-side observability: filter selectivity/mode recorded by
+        the last filtered seed scan, and the latest maintenance decision
+        trail under ``"maintenance"`` (one line per modality acted on)."""
+        return dict(self._metrics)
+
     def memory_usage(self) -> Dict[str, int]:
+        """Bytes per component: one entry per modality's stable slab, one
+        per delta store (fp32 master + int8 mirror + dequant terms), the
+        graph, and a "total" sum."""
         out = {}
         for mod, m in self.modalities.items():
             out[mod] = m.ivf.nbytes

@@ -1,6 +1,6 @@
 """Partitioned ANNS — the TPU-native realisation of the paper's search layer.
 
-Two-level search (DESIGN.md §2.1): centroid scoring (small matmul) selects
+Two-level search (docs/DESIGN.md §2.1): centroid scoring (small matmul) selects
 ``n_probe`` partitions per query; probed partitions are scored over their
 *quantized* rows; exact top-k over the probed candidates. Cost ∝
 n_probe·N/K + K instead of N — the paper's sub-linear claim, with every FLOP
@@ -165,6 +165,52 @@ def build(key, vectors: jax.Array, ids: jax.Array, *, n_partitions: int,
         bits=bits,
     )
     return idx, ~keep
+
+
+# ---------------------------------------------------------------------------
+# slot-level slab surgery (the maintenance executor's primitives)
+# ---------------------------------------------------------------------------
+# Maintenance actions (incremental compaction, merge-cold, split-hot — see
+# repro/maintenance/executor.py) rewrite bounded sets of slab slots in place
+# instead of rebuilding the (K, cap, d) store. Rows always move as their
+# stored bytes: identical int8 data + per-row vmin/scale ⇒ identical
+# dequantized scores, exactly like ``shard_index``'s re-layout. ``rows`` are
+# flat slab indices (partition p's slots are [p·cap, (p+1)·cap), matching
+# ``slab_view``). Host-side orchestration — dynamic shapes are fine here.
+
+def set_slots(index: IVFIndex, rows, data, vmin, scale, ids) -> IVFIndex:
+    """Writes quantized rows (byte-identical) into the given flat slab slots
+    and refreshes the per-partition counts."""
+    k, cap = index.ids.shape
+    rows = jnp.asarray(rows, jnp.int32)
+    flat_ids = index.ids.reshape(-1).at[rows].set(jnp.asarray(ids, jnp.int32))
+    return index._replace(
+        data=index.data.reshape(k * cap, -1).at[rows].set(data)
+            .reshape(index.data.shape),
+        vmin=index.vmin.reshape(-1).at[rows].set(vmin).reshape(k, cap),
+        scale=index.scale.reshape(-1).at[rows].set(scale).reshape(k, cap),
+        ids=flat_ids.reshape(k, cap),
+        counts=jnp.sum(flat_ids.reshape(k, cap) >= 0, axis=1,
+                       dtype=jnp.int32))
+
+
+def clear_slots(index: IVFIndex, rows) -> IVFIndex:
+    """Empties the given flat slab slots (-1 id, zero data, unit scale)."""
+    rows = jnp.asarray(rows, jnp.int32)
+    n = rows.shape[0]
+    return set_slots(
+        index, rows,
+        jnp.zeros((n,) + index.data.shape[2:], index.data.dtype),
+        jnp.zeros((n,), jnp.float32), jnp.ones((n,), jnp.float32),
+        jnp.full((n,), -1, jnp.int32))
+
+
+def gather_slots(index: IVFIndex, rows):
+    """(data, vmin, scale, ids) of the given flat slab slots — the stored
+    bytes, ready to be ``set_slots`` elsewhere byte-identically."""
+    data, vmin, scale, ids = index.slab_view()
+    rows = jnp.asarray(rows, jnp.int32)
+    return data[rows], vmin[rows], scale[rows], ids[rows]
 
 
 def _dequant_rows(index: IVFIndex, rows_data, rows_vmin, rows_scale):

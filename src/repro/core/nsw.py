@@ -1,5 +1,5 @@
 """Navigable-small-world graph index — the paper's HNSW component, re-expressed
-for TPU (DESIGN.md §2.2): fixed out-degree adjacency + fixed-width beam search
+for TPU (docs/DESIGN.md §2.2): fixed out-degree adjacency + fixed-width beam search
 (`ef` candidates) as batched gathers inside ``lax.while_loop``; vmapped over
 queries. Validates the paper's graph-index semantics (recall vs ef) even
 though the production hot path is the IVF scan.

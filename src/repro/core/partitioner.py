@@ -1,9 +1,18 @@
 """Modality-aware K-means partitioning (paper Eq. 1) + workload-aware repartitioning.
 
-``Cluster Assignment = argmin_c ||e - mu_c||^2``  — fitted per modality, so each
-modality gets its own centroid set and per-partition index (DESIGN.md C2). On
-TPU the assignment is a single matmul: argmin_c ||e-mu||² = argmax_c (e·mu -
-||mu||²/2), which is how both ``fit`` and ``assign`` are written here.
+``Cluster Assignment = argmin_c ||e - mu_c||^2``  — fitted per modality, so
+each modality gets its own centroid set and per-partition index
+(docs/DESIGN.md C2). On TPU the assignment is a single matmul:
+argmin_c ||e-mu||² = argmax_c (e·mu - ||mu||²/2), which is how both ``fit``
+and ``assign`` are written here.
+
+Parked partitions (docs/DESIGN.md §3.4): a merged-away partition keeps its
+slot in the fixed-shape (K, ...) layout but its centroid is replaced with the
+``parked_centroid`` sentinel — a vector whose norm is so large that the
+assignment score ``e·mu - ||mu||²/2`` is astronomically negative, so neither
+``assign`` nor ``assign_topk`` ever routes a vector or a probe there ahead of
+a live partition. Parking frees a partition for a later split without
+changing any jitted shape.
 """
 from __future__ import annotations
 
@@ -34,6 +43,47 @@ def assign_topk(x: jax.Array, centroids: jax.Array, k: int):
     scores = x @ centroids.T - half_sq[None, :]
     vals, idx = jax.lax.top_k(scores, k)
     return idx.astype(jnp.int32), vals
+
+
+@jax.jit
+def assign_with_distance(x: jax.Array, centroids: jax.Array):
+    """Eq. 1 assignment plus the squared distance to the winning centroid.
+
+    Returns ``(assignment (N,) int32, dist2 (N,) fp32)``. The distance feeds
+    the write-time drift statistics (maintenance/stats.py): the mean assigned
+    distance of *new* rows vs. the build-time baseline is the centroid-drift
+    signal that triggers a local recluster."""
+    a = assign(x, centroids)
+    d = x - centroids[a]
+    return a, jnp.sum(d * d, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# parked partitions (merge-cold leaves the slot, retires the centroid)
+# ---------------------------------------------------------------------------
+
+# any centroid with norm beyond this is a parked sentinel: its assignment
+# score e·mu - ||mu||²/2 ≈ -PARKED_NORM²/2 can never beat a live centroid's
+# (unit-norm corpora score in [-1, 1])
+PARKED_NORM = 32768.0
+
+
+def parked_centroid(dim: int) -> np.ndarray:
+    """The sentinel centroid of a merged-away partition (see module doc)."""
+    c = np.zeros((dim,), np.float32)
+    c[0] = PARKED_NORM
+    return c
+
+
+def parked_mask(centroids) -> np.ndarray:
+    """(K,) bool — which partitions are parked (centroid is the sentinel)."""
+    c = np.asarray(centroids)
+    return np.sum(c * c, axis=-1) >= (0.5 * PARKED_NORM) ** 2
+
+
+def live_partitions(centroids) -> int:
+    """Number of partitions that can win an assignment / deserve a probe."""
+    return int(np.sum(~parked_mask(centroids)))
 
 
 @functools.partial(jax.jit, static_argnames=("n_clusters", "n_iters"))
@@ -86,10 +136,21 @@ class WorkloadStats:
         self.hits[:] = 0
 
 
+def split_two(key, members: jax.Array, n_iters: int = 8):
+    """K=2 Lloyd's fit over one partition's members — the local step behind
+    an incremental split (maintenance/executor.py). Returns
+    ``(centroids (2, d), assignment (n,))``; only the members move, never the
+    rest of the corpus."""
+    sub = fit(key, members, 2, n_iters)
+    return sub.centroids, assign(members, sub.centroids)
+
+
 def split_hot_partition(key, x, state: KMeansState, hot: int) -> KMeansState:
-    """Online adjustment: split the hottest partition's centroid in two by
-    re-fitting K=2 on its members and replacing (hot, coldest) centroids —
-    incremental, no full rebuild (paper: "zero-downtime incremental migration")."""
+    """Legacy stop-the-world split: re-fit K=2 on the hot partition's members
+    and overwrite (hot, coldest) centroids; the caller then rebuilds the whole
+    slab against the new centroid set. Superseded by the bounded-work split in
+    ``repro.maintenance.executor`` (which moves only the hot partition's rows,
+    byte-identically) — kept as the reference implementation."""
     a = assign(x, state.centroids)
     # host-side path (numpy): membership gather of the hot partition
     xs = np.asarray(x)

@@ -9,7 +9,7 @@ For each cell: jit(step).lower(**input_specs).compile() on the single-pod
 memory_analysis() / cost_analysis() / collective bytes (HLO text parse) to
 ``results/dryrun/<mesh>/<arch>__<shape>.json``.
 
-Cost-analysis calibration (DESIGN.md §6): LM layer stacks lower with
+Cost-analysis calibration (docs/DESIGN.md §6): LM layer stacks lower with
 ``unroll=n_layers`` so scan bodies are counted; GNN ring scans stay rolled
 (HLO size) and the true cost is extrapolated from two extra small lowerings
 (R=1 and R=2-unrolled ring variants): true = f(R1) + (R-1)·(f(R2) - f(R1)).

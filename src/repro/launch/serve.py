@@ -1,5 +1,8 @@
 """Serving launcher: builds an HMGI index over a synthetic multimodal corpus
-and serves batched hybrid queries (+ optional RAG generation).
+and serves batched hybrid queries, then an ingest-while-search phase
+(streaming inserts/deletes interleaved with queries, adaptive maintenance
+draining the delta in bounded steps between batches) and optional RAG
+generation with maintenance paced between decode steps.
 
 ``python -m repro.launch.serve --n-nodes 2000 --queries 64 [--rag]``
 """
@@ -23,6 +26,8 @@ def main():
     ap.add_argument("--k", type=int, default=10)
     ap.add_argument("--hops", type=int, default=2)
     ap.add_argument("--rag", action="store_true")
+    ap.add_argument("--ingest-steps", type=int, default=4,
+                    help="ingest-while-search streaming steps (0 = skip)")
     args = ap.parse_args()
 
     cfg = get_config("hmgi").replace(n_partitions=32, n_probe=8,
@@ -56,6 +61,27 @@ def main():
     jax.block_until_ready(hv)
     dt = time.perf_counter() - t0
     print(f"hybrid search ({args.hops} hops): {dt*1e3/args.queries:.3f} ms/q")
+
+    # ingest-while-search: streaming writes interleaved with queries; the
+    # adaptive maintenance hooks (insert/delete auto-trigger) drain the
+    # delta in bounded steps instead of stop-the-world compactions
+    if args.ingest_steps > 0:
+        batch = max(args.n_nodes // 20, 8)
+        worst = 0.0
+        for step in range(args.ingest_steps):
+            wid = rng.integers(0, args.n_nodes, batch).astype(np.int32)
+            wv = rng.normal(size=(batch, 64)).astype(np.float32)
+            t0 = time.perf_counter()
+            index.insert("text", wid, wv)
+            index.delete("text", wid[:batch // 8])
+            worst = max(worst, time.perf_counter() - t0)
+            sv2, _ = index.search(q[:8], "text", k=args.k)
+            jax.block_until_ready(sv2)
+        m = index.modalities["text"]
+        print(f"ingest-while-search: {args.ingest_steps} steps x {batch} "
+              f"writes, worst write stall {worst*1e3:.1f} ms, "
+              f"delta={int(m.delta.count)}  "
+              f"maintenance: {index.metrics().get('maintenance', 'n/a')}")
 
     if args.rag:
         from repro.models import lm

@@ -5,7 +5,7 @@ Blocking: training/prefill attention is computed per q-block (online softmax
 free — each q-block sees the full K prefix, masked), bounding the live score
 matrix to (B, H, q_block, S_kv). The q-block loop is a ``lax.scan`` whose
 ``unroll`` the dry-run sets to the full trip count so cost_analysis counts
-every block (see DESIGN.md §6 calibration note).
+every block (see docs/DESIGN.md §6 calibration note).
 """
 from __future__ import annotations
 

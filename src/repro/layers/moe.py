@@ -1,6 +1,6 @@
 """Mixture-of-Experts FFN: top-k routing, capacity-bounded local dispatch.
 
-Distribution (DESIGN.md §5): expert weights are laid out (E, D, F) with
+Distribution (docs/DESIGN.md §5): expert weights are laid out (E, D, F) with
 D sharded over "data" (ZeRO-3) and F over "model" (tensor parallel); the
 expert dim is *not* device-sharded (8 experts don't divide a 16-way axis, and
 keeping dispatch local to each data shard avoids the all-to-all entirely —

@@ -1,0 +1,348 @@
+"""Bounded-work executors for maintenance actions (docs/DESIGN.md §3.4).
+
+Each function applies one ``cost_model.MaintenanceAction`` to a modality's
+state (``m`` is the facade's ``ModalityIndex``, duck-typed: ``ivf``,
+``delta``, ``vectors``, ``ids``) as in-place slot surgery instead of a
+stop-the-world rebuild:
+
+- **compact_chunk** — drains a fixed-size chunk of live delta rows into the
+  stable slab, each row placed by its *current* centroid assignment (an
+  update whose vector moved must land where future probes will look for
+  it; its old slot is cleared, or overwritten in place when the assigned
+  partition is full — and the superseded bit clears either way). Rows move
+  as their stored int8 bytes (the delta quantizes at insert with the same
+  per-row affine scheme the slab uses), so the post-drain scan scores are
+  exactly what a full ``delta.compact`` would produce for those rows. Rows
+  that fit nowhere stay in the delta for a later step — never dropped.
+- **merge_cold** — folds a cold partition's live rows byte-identically into
+  the free slots of its nearest sibling (the ``shard_index`` move idiom);
+  tombstoned/superseded rows are purged, not moved, and purged tombstones
+  stay set (a deleted id must never resurrect). Survivors that don't fit
+  the sibling go to the delta (fp32 master rows — the repartition-overflow
+  contract). The emptied partition's centroid is parked
+  (``partitioner.parked_centroid``), freeing the slot for a future split.
+- **split_hot** — K=2 local Lloyd's fit over the hot partition's stored
+  (dequantized) members, then a byte-identical redistribution of those rows
+  between the hot partition and a parked one (merging the coldest partition
+  away first if none is parked). Only the hot partition's rows move.
+- **recluster** — re-centers a drifted partition's centroid on the mean of
+  its live members. No rows move; only future routing changes.
+
+Every executor returns a result dict (``note`` for the report, plus
+counters); ``apply`` dispatches. Invariants these must preserve — at full
+probe the visible corpus (stable ∪ delta under MVCC masks) is unchanged
+except where an action intentionally changes a row's *representation*
+(delta fp32 → stable int8 on drain, stable int8 → delta fp32 on merge
+overflow) — are spelled out in docs/DESIGN.md §3.5 and pinned by
+tests/test_maintenance.py's oracle checks.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import delta as delta_mod
+from repro.core import ivf as ivf_mod
+from repro.core import partitioner
+from repro.core.cost_model import MaintenanceAction
+from repro.maintenance.stats import PartitionStats
+
+
+def apply(m, cfg, key, stats: PartitionStats,
+          action: MaintenanceAction) -> Dict:
+    if action.kind == "compact_chunk":
+        # transfers always pad to the configured chunk width, even for a
+        # planner-trimmed partial chunk — one compiled executable per config
+        return compact_chunk(m, stats, action.rows,
+                             pad_to=cfg.maint_chunk)
+    if action.kind == "merge_cold":
+        return merge_cold(m, stats, action.partition)
+    if action.kind == "split_hot":
+        return split_hot(m, cfg, key, stats, action.partition)
+    if action.kind == "recluster":
+        return recluster(m, stats, action.partition)
+    raise ValueError(f"unknown maintenance action {action.kind!r}")
+
+
+def _flat_rows(ivf, p: int, occupied: bool) -> np.ndarray:
+    """Flat slab row indices of partition ``p``'s occupied (or free) slots."""
+    ids = np.asarray(ivf.ids[p])
+    sel = (ids >= 0) if occupied else (ids < 0)
+    return p * ivf.capacity + np.where(sel)[0]
+
+
+def _master_rows(m, gids: np.ndarray) -> np.ndarray:
+    """Global id -> row in the fp32 master array (``m.vectors``)."""
+    existing = np.asarray(m.ids)
+    order = np.argsort(existing, kind="stable")
+    pos = np.searchsorted(existing[order], gids)
+    pos = np.minimum(pos, existing.size - 1)
+    assert np.all(existing[order[pos]] == gids), "stable id missing a master row"
+    return order[pos]
+
+
+# --------------------------------------------------------------------- drain
+def compact_chunk(m, stats: PartitionStats, chunk: int,
+                  pad_to: int = 0) -> Dict:
+    """One incremental compaction step: drain ≤ ``chunk`` live delta rows
+    into the stable slab (see module doc for placement rules). ``pad_to``
+    widens the padded device transfers beyond ``chunk`` (the facade passes
+    ``cfg.maint_chunk`` so partial trailing chunks reuse the same compiled
+    executables as full ones)."""
+    delta = m.delta
+    live = delta_mod.live_slots(delta)
+    used_before = int(delta.count)
+    if live.size == 0:
+        if used_before:
+            # only dead weight left (stale versions, tombstone shadows):
+            # reclaim the slots, nothing moves to stable
+            m.delta = delta_mod.rebuild_keep(delta, np.empty(0, np.int64))
+            return {"drained": 0, "reclaimed": used_before,
+                    "ivf_changed": False,
+                    "note": f"reclaimed {used_before} dead slots"}
+        return {"drained": 0, "ivf_changed": False, "note": "empty delta"}
+
+    take = live[:chunk]
+    d_ids = np.asarray(delta.ids)[take]
+    cap = m.ivf.capacity
+    width = max(chunk, pad_to)
+
+    # every drained row is placed by its *current* assignment (an update
+    # may have moved the vector far from its old partition — leaving it in
+    # place would make probe-limited queries for the new vector miss it).
+    # Gathers are padded to the (configured) chunk width so repeated drain
+    # steps hit one compiled executable instead of one per distinct size.
+    src = np.full(width, take[0], np.int64)
+    src[:take.size] = take
+    assign = np.asarray(partitioner.assign(
+        delta.vectors[jnp.asarray(src)], m.ivf.centroids))[:take.size]
+
+    # an update's old stable slot: the in-place fallback (and, when the row
+    # moves partitions, the slot to clear)
+    slab_ids = np.asarray(m.ivf.ids).reshape(-1)
+    order = np.argsort(slab_ids, kind="stable")
+    sorted_ids = slab_ids[order]
+    pos = np.minimum(np.searchsorted(sorted_ids, d_ids), sorted_ids.size - 1)
+    has_slot = sorted_ids[pos] == d_ids
+    old_slot = np.full(d_ids.size, -1, np.int64)
+    old_slot[has_slot] = order[pos[has_slot]]
+
+    target = np.full(d_ids.size, -1, np.int64)
+    clear_old = np.zeros(d_ids.size, bool)
+    free = np.where(slab_ids < 0)[0]
+    free_part = free // cap
+    for part in np.unique(assign):
+        members = np.where(assign == part)[0]
+        # already in the right partition: overwrite in place
+        in_place = members[old_slot[members] // cap == part]
+        in_place = in_place[old_slot[in_place] >= 0]
+        target[in_place] = old_slot[in_place]
+        rest = members[~np.isin(members, in_place)]
+        rows = free[free_part == part]
+        n = min(rows.size, rest.size)
+        target[rest[:n]] = rows[:n]
+        clear_old[rest[:n]] = old_slot[rest[:n]] >= 0
+        # no free slot in the assigned partition: fall back to the old
+        # slot (placement is recall policy, not correctness —
+        # docs/DESIGN.md §3.5); rows with neither stay in the delta for a
+        # later step — never dropped
+        fb = rest[n:][old_slot[rest[n:]] >= 0]
+        target[fb] = old_slot[fb]
+
+    drained = target >= 0
+    n_drained = int(drained.sum())
+    if n_drained:
+        co = old_slot[drained & clear_old]
+        if co.size:
+            # padded to the chunk width (duplicate clears are idempotent)
+            # for the same compiled-executable reuse as the transfer below
+            cop = np.full(width, co[0], np.int64)
+            cop[:co.size] = co
+            m.ivf = ivf_mod.clear_slots(m.ivf, cop)
+        # fixed-width transfer: the tail re-writes slot target[0] with
+        # its own bytes (idempotent duplicate), keeping shapes stable
+        src = np.full(width, take[drained][0], np.int64)
+        src[:n_drained] = take[drained]
+        tgt = np.full(width, target[drained][0], np.int64)
+        tgt[:n_drained] = target[drained]
+        sel = jnp.asarray(src)
+        if m.ivf.bits == 8:
+            # the delta's int8 mirror shares the slab's scheme: move bytes
+            data, vmin, scale = (delta.qdata[sel], delta.qvmin[sel],
+                                 delta.qscale[sel])
+        else:
+            # 4/16-bit slabs store a different layout than the delta's int8
+            # mirror: re-quantize the fp32 master rows at the slab's width
+            # (exactly what a full compact stores for these rows)
+            from repro.core.quantization import quantize
+            qv = quantize(delta.vectors[sel], m.ivf.bits)
+            data, vmin, scale = qv.data, qv.vmin[:, 0], qv.scale[:, 0]
+        m.ivf = ivf_mod.set_slots(m.ivf, tgt, data, vmin, scale,
+                                  np.asarray(delta.ids)[src])
+        # the old slots held the superseded pre-update rows: overwritten or
+        # cleared, that dead weight is gone
+        part_old = old_slot[drained & has_slot] // cap
+        np.subtract.at(stats.dead, part_old, 1)
+        np.maximum(stats.dead, 0, out=stats.dead)
+        stats.invalidate_slab()
+    keep = np.setdiff1d(live, take[drained])
+    # count ids whose superseded bit was actually SET (not just those with
+    # a stable slot): an updated ingest-overflow row has the bit but no
+    # slot, and the facade's NSW refresh keys on this count — an
+    # undercount would let the NSW lane serve the pre-update vector
+    sup_np = np.asarray(delta.superseded)
+    n_cleared = int(sup_np[np.clip(d_ids[drained], 0,
+                                   sup_np.shape[0] - 1)].sum())
+    m.delta = delta_mod.rebuild_keep(delta, keep,
+                                     clear_superseded_ids=d_ids[drained])
+    return {"drained": n_drained, "ivf_changed": n_drained > 0,
+            "cleared_superseded": n_cleared,
+            "left": int(keep.size),
+            "note": (f"drained {n_drained} rows "
+                     f"(delta {used_before}->{int(m.delta.count)})")}
+
+
+# --------------------------------------------------------------------- merge
+def merge_cold(m, stats: PartitionStats, p: int) -> Dict:
+    """Folds partition ``p`` into its nearest live sibling and parks it."""
+    ivf = m.ivf
+    cents = np.asarray(ivf.centroids)
+    parked = partitioner.parked_mask(cents)
+    if parked[p]:
+        return {"note": f"p={p} already parked", "moved": 0,
+                "ivf_changed": False}
+    siblings = [q for q in range(ivf.n_partitions) if q != p and not parked[q]]
+    if not siblings:
+        return {"note": "no live sibling", "moved": 0, "ivf_changed": False}
+    d2 = np.sum((cents[siblings] - cents[p]) ** 2, axis=1)
+    sib = siblings[int(np.argmin(d2))]
+
+    rows_p = _flat_rows(ivf, p, occupied=True)
+    gids = np.asarray(ivf.ids).reshape(-1)[rows_p]
+    tomb = np.asarray(m.delta.tombstones)
+    sup = np.asarray(m.delta.superseded)
+    gc = np.clip(gids, 0, tomb.shape[0] - 1)
+    dead = tomb[gc] | sup[gc]
+    live_rows = rows_p[~dead]           # dead rows are purged, not moved
+    # (purged tombstones stay set: the id must not resurrect; a purged
+    # superseded row's latest version lives in the delta and its bit is
+    # cleared when that row drains)
+
+    free_sib = _flat_rows(ivf, sib, occupied=False)
+    n_fit = min(free_sib.size, live_rows.size)
+    if n_fit:
+        data, vmin, scale, ids = ivf_mod.gather_slots(ivf, live_rows[:n_fit])
+        ivf = ivf_mod.set_slots(ivf, free_sib[:n_fit], data, vmin, scale, ids)
+    overflow = live_rows[n_fit:]
+    if overflow.size:
+        over_ids = np.asarray(m.ivf.ids).reshape(-1)[overflow]
+        rows = _master_rows(m, over_ids)
+        m.delta = delta_mod.insert_grow(
+            m.delta, m.vectors[jnp.asarray(rows)],
+            jnp.asarray(over_ids.astype(np.int32)))
+    ivf = ivf_mod.clear_slots(ivf, rows_p)
+    ivf = ivf._replace(centroids=ivf.centroids.at[p].set(
+        jnp.asarray(partitioner.parked_centroid(cents.shape[1]))))
+    m.ivf = ivf
+    stats.reset_partition(p, 0.0, parked=True)
+    stats.invalidate_slab()
+    return {"moved": n_fit, "purged": int(dead.sum()), "ivf_changed": True,
+            "overflow": int(overflow.size), "sibling": sib,
+            "note": (f"p={p} -> p={sib}: moved {n_fit}, purged "
+                     f"{int(dead.sum())} dead, {int(overflow.size)} to delta")}
+
+
+# --------------------------------------------------------------------- split
+def split_hot(m, cfg, key, stats: PartitionStats, hot: int) -> Dict:
+    """Splits the hot partition's members across (hot, a freed partition)
+    via a local K=2 fit. Merges the coldest partition away first when no
+    parked slot is available."""
+    parked = partitioner.parked_mask(np.asarray(m.ivf.centroids))
+    merge_note = ""
+    if parked.any():
+        target = int(np.where(parked)[0][0])
+    else:
+        live = np.asarray(m.ivf.counts)
+        others = [q for q in range(m.ivf.n_partitions) if q != hot]
+        if not others:
+            return {"note": "single partition, cannot split", "moved": 0,
+                    "ivf_changed": False}
+        target = min(others, key=lambda q: int(live[q]))
+        res = merge_cold(m, stats, target)
+        merge_note = f"; freed via {res['note']}"
+        if not partitioner.parked_mask(np.asarray(m.ivf.centroids))[target]:
+            return {"note": f"could not free a partition{merge_note}",
+                    "moved": 0, "ivf_changed": True}
+
+    ivf = m.ivf
+    rows_all = _flat_rows(ivf, hot, occupied=True)
+    gids = np.asarray(ivf.ids).reshape(-1)[rows_all]
+    tomb = np.asarray(m.delta.tombstones)
+    sup = np.asarray(m.delta.superseded)
+    gc = np.clip(gids, 0, tomb.shape[0] - 1)
+    alive = ~(tomb[gc] | sup[gc])
+    rows_h = rows_all[alive]            # dead rows purged with the rewrite
+    if rows_h.size < 2:
+        return {"note": f"p={hot} has <2 live rows{merge_note}", "moved": 0,
+                "ivf_changed": bool(merge_note)}
+
+    data, vmin, scale, ids = ivf_mod.gather_slots(ivf, rows_h)
+    members = ivf_mod._dequant_rows(ivf, data, vmin, scale)
+    cents2, sub_assign = partitioner.split_two(key, members)
+    sub = np.asarray(sub_assign)
+    if (sub == 0).all() or (sub == 1).all():
+        # degenerate fit (duplicated members): treat as a recluster
+        return recluster(m, stats, hot)
+
+    cap = ivf.capacity
+    ivf = ivf_mod.clear_slots(ivf, rows_all)
+    halves = []
+    for g, part in ((np.where(sub == 0)[0], hot),
+                    (np.where(sub == 1)[0], target)):
+        sel = jnp.asarray(g)
+        ivf = ivf_mod.set_slots(
+            ivf, part * cap + np.arange(g.size),
+            data[sel], vmin[sel], scale[sel], ids[sel])
+        halves.append(g.size)
+    ivf = ivf._replace(centroids=ivf.centroids.at[hot].set(cents2[0])
+                                              .at[target].set(cents2[1]))
+    m.ivf = ivf
+    for g, part, c in ((np.where(sub == 0)[0], hot, 0),
+                       (np.where(sub == 1)[0], target, 1)):
+        d = np.asarray(members[jnp.asarray(g)]) - np.asarray(cents2[c])
+        stats.reset_partition(part, float(np.mean(
+            np.linalg.norm(d, axis=-1))) if g.size else 0.0, parked=False)
+    stats.invalidate_slab()
+    return {"moved": int(rows_h.size), "halves": tuple(halves),
+            "ivf_changed": True,
+            "target": target,
+            "note": (f"p={hot} split {halves[0]}/{halves[1]} "
+                     f"into p={target}{merge_note}")}
+
+
+# ----------------------------------------------------------------- recluster
+def recluster(m, stats: PartitionStats, p: int) -> Dict:
+    """Re-centers partition ``p``'s centroid on its live members' mean (no
+    row moves — a drifted centroid only mis-routes *future* probes/writes)."""
+    ivf = m.ivf
+    rows_p = _flat_rows(ivf, p, occupied=True)
+    gids = np.asarray(ivf.ids).reshape(-1)[rows_p]
+    tomb = np.asarray(m.delta.tombstones)
+    sup = np.asarray(m.delta.superseded)
+    gc = np.clip(gids, 0, tomb.shape[0] - 1)
+    rows_p = rows_p[~(tomb[gc] | sup[gc])]
+    if rows_p.size == 0:
+        return {"note": f"p={p} has no live rows", "moved": 0,
+                "ivf_changed": False}
+    data, vmin, scale, _ = ivf_mod.gather_slots(ivf, rows_p)
+    members = ivf_mod._dequant_rows(ivf, data, vmin, scale)
+    centroid = jnp.mean(members, axis=0)
+    m.ivf = ivf._replace(centroids=ivf.centroids.at[p].set(centroid))
+    dist = np.linalg.norm(np.asarray(members) - np.asarray(centroid), axis=-1)
+    old = stats.baseline[p]
+    stats.reset_partition(p, float(np.mean(dist)))
+    return {"moved": 0, "members": int(rows_p.size), "ivf_changed": True,
+            "note": (f"p={p} re-centered over {int(rows_p.size)} rows "
+                     f"(baseline {old:.3f}->{stats.baseline[p]:.3f})")}

@@ -1,7 +1,7 @@
 """GNN execution substrate: flat graphs, a ring-distributed gather engine,
 and the generic train/serve steps shared by all four assigned archs.
 
-Execution layouts (DESIGN.md §5):
+Execution layouts (docs/DESIGN.md §5):
 
   * ``FlatGraph`` — one (possibly huge) graph as flat padded arrays. Single
     device: plain segment ops. Distributed: nodes block-sharded over the
@@ -19,7 +19,7 @@ Execution layouts (DESIGN.md §5):
 
 Geometric archs on non-geometric graphs (Cora/ogbn-products have no 3D
 coordinates) get synthetic unit-sphere positions — the assignment pairs
-molecular archs with citation graphs; the arch must still run (DESIGN.md §4).
+molecular archs with citation graphs; the arch must still run (docs/DESIGN.md §4).
 """
 from __future__ import annotations
 

@@ -250,7 +250,7 @@ def node_logits(cfg, params, feats, positions, node_mask, ex,
 # distributed (ring) path: node ring for edge endpoints + line-graph ring for
 # triplets (edges are entities; triplet lists grouped by source-edge-owner
 # rounds). Edges live with their destination-node owner, so edge->node
-# aggregation is local. See DESIGN.md §5.
+# aggregation is local. See docs/DESIGN.md §5.
 # ---------------------------------------------------------------------------
 
 def node_logits_ring(cfg, params, feats, positions, node_mask, ex_nodes,

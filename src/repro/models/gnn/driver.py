@@ -25,7 +25,7 @@ N_CLASSES = 16
 def make_flat_graph(n_nodes: int, n_edges: int, d_feat: int, seed: int = 0,
                     n_classes: int = N_CLASSES) -> FlatGraph:
     """Synthetic flat graph; unit-sphere positions (geometric archs on
-    non-geometric graphs — DESIGN.md §4)."""
+    non-geometric graphs — docs/DESIGN.md §4)."""
     rng = np.random.default_rng(seed)
     feats = rng.normal(size=(n_nodes, d_feat)).astype(np.float32)
     pos = rng.normal(size=(n_nodes, 3)).astype(np.float32)

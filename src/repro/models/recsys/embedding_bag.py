@@ -1,4 +1,4 @@
-"""EmbeddingBag — JAX has no native one (DESIGN.md: build it, don't stub).
+"""EmbeddingBag — JAX has no native one (docs/DESIGN.md: build it, don't stub).
 
 Lookup = ``jnp.take``; multi-hot reduce = ``segment_sum`` (or the Pallas
 one-hot-matmul kernel on TPU). Tables shard their *rows* over the "model"

@@ -125,15 +125,23 @@ class Q:
     @classmethod
     def vector(cls, modality: str, query, *, n_probe: Optional[int] = None,
                min_recall: Optional[float] = None, impl: str = "auto") -> "Q":
+        """ANNS seed source. query: (Q, d_modality) array-like (the planner
+        L2-normalises). n_probe: partitions probed (None -> cost model via
+        min_recall when given, else cfg default; always clamped to the live
+        partition count). impl: IVF probe path ("kernel"/"einsum"/"auto")."""
         return cls(Plan(VectorSeed(modality, query, n_probe, min_recall,
                                    impl)))
 
     @staticmethod
     def union(a: "Q", b: "Q") -> "Q":
+        """Candidate-set union of two plans: ids from either side, duplicate
+        ids keep the higher score."""
         return Q(Plan(SetOp("union", a.plan, b.plan)))
 
     @staticmethod
     def intersect(a: "Q", b: "Q") -> "Q":
+        """Candidate-set intersection: ids present on both sides, score =
+        mean of the two sides' scores."""
         return Q(Plan(SetOp("intersect", a.plan, b.plan)))
 
     # -------------------------------------------------------------- stages
@@ -143,16 +151,27 @@ class Q:
 
     def traverse(self, hops: Optional[int] = None, *, edge_types=None,
                  damping: float = 0.85) -> "Q":
+        """h-hop graph traversal from the current candidates, fused back by
+        Eq. 3. hops=None -> cfg.max_hops; edge_types: edge-type ids or a
+        prebuilt (T,) mask (None = all types)."""
         return self._append(Traverse(hops, edge_types, damping))
 
     def where(self, *predicates) -> "Q":
+        """Relational constraint: (column, op, value) tuples (or sequences
+        thereof), AND-conjoined with every other Where of the chain and
+        enforced at every stage. A no-op with no predicates."""
         preds = _norm_predicates(predicates)
         if not preds:
             return self
         return self._append(Where(preds))
 
     def cross_modal(self, modality: str, query, *, weight: float = 0.5) -> "Q":
+        """Width-preserving re-score in a second modality's embedding space:
+        new = (1-weight)·current + weight·sim(query, emb[id]); candidates
+        without a (live) embedding there read sim = 0."""
         return self._append(CrossModal(modality, query, weight))
 
     def topk(self, k: int) -> "Q":
+        """Terminal width: execution returns (scores (Q, k), ids (Q, k)),
+        scores descending, (-inf, -1) on empty slots."""
         return Q(dataclasses.replace(self.plan, k=int(k)))

@@ -27,6 +27,12 @@ the cost model (core/cost_model.py):
   scatter over all N (when the frontier would cover the corpus anyway).
   ``fusion_repr`` forces a choice (the facade's hybrid_search pins "sparse"
   to stay bit-identical with its historic path).
+- **Maintenance awareness** — probe widths clamp to the *live* partition
+  count: ``plan_maintenance``-driven merges park emptied partitions
+  (docs/DESIGN.md §3.4), and a probe spent on a parked slab scans nothing.
+  The parked sentinel centroids rank below every live centroid, so the
+  clamp never changes which rows are scanned — full probe stays full
+  coverage of the live corpus.
 
 Set-op sources compile each branch as an independent physical plan (its own
 Where scope, its own widths — a branch without an explicit ``topk`` gets
@@ -41,6 +47,7 @@ import dataclasses
 from typing import Any, Optional, Tuple, Union
 
 import jax
+import numpy as np
 
 from repro.core.cost_model import (DeviceLayoutPlan, FilteredScanPlan,
                                    estimate_selectivity, plan_filtered_scan,
@@ -155,6 +162,13 @@ def compile_plan(index, plan, *, k: Optional[int] = None,
             n_probe = select_plan(index.cost_model, n=int(m.ids.shape[0]),
                                   d=int(m.vectors.shape[1]),
                                   min_recall=vs.min_recall).n_probe
+        # maintenance can park (merge away) partitions: a probe slot spent
+        # on a parked, empty slab is pure waste, and the parked sentinel
+        # centroids always rank last — clamping to the live count scans
+        # exactly the same rows (full probe stays full coverage)
+        n_live = (int(np.sum(~m.stats.parked)) if m.stats is not None
+                  else m.ivf.n_partitions)
+        n_probe = min(int(n_probe or cfg.n_probe), max(n_live, 1))
         k_seed = plan_seed_width(k, downstream)
         fplan = None
         if node_pass is not None:

@@ -1,4 +1,4 @@
-"""Three-term roofline analysis over dry-run records (DESIGN.md §6).
+"""Three-term roofline analysis over dry-run records (docs/DESIGN.md §6).
 
     compute    = HLO_FLOPs / (chips x peak)       [s]
     memory     = HLO_bytes / (chips x HBM_bw)     [s]

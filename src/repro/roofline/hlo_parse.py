@@ -1,4 +1,4 @@
-"""Collective-byte extraction from compiled HLO text (DESIGN.md §6).
+"""Collective-byte extraction from compiled HLO text (docs/DESIGN.md §6).
 
 ``cost_analysis`` has no collective numbers, so the roofline's third term
 comes from parsing ``compiled.as_text()``: sum the result sizes of every

@@ -13,7 +13,10 @@ decode step takes a per-slot ``(n_slots,)`` position vector — with ragged
 prompts the slots sit at different sequence lengths, and each row writes KV
 at its own cache index and attends only to its own history, so a batched
 tick produces exactly the tokens sequential per-request decoding would.
-The scheduler fills freed slots every tick (iteration-level batching).
+The scheduler fills freed slots every tick (iteration-level batching), and
+a ``MaintenanceDriver`` (when an index is attached) runs one bounded
+adaptive-maintenance step between decode steps — ingest-while-search pays a
+small constant tax per tick instead of rare full-compaction stalls.
 """
 from __future__ import annotations
 
@@ -26,7 +29,8 @@ import numpy as np
 
 from repro.core import HMGIIndex
 from repro.models import lm
-from repro.serving.scheduler import ContinuousBatcher, Request
+from repro.serving.scheduler import (ContinuousBatcher, MaintenanceDriver,
+                                     Request)
 
 
 @dataclasses.dataclass
@@ -35,6 +39,11 @@ class EngineConfig:
     max_seq: int = 256
     retrieve_k: int = 4
     hops: int = 1
+    # adaptive index maintenance between decode steps (0 = off): every
+    # maintenance_interval-th tick runs index.maintain(budget=...) so
+    # ingest-while-search pays bounded work per tick, never a full rebuild
+    maintenance_interval: int = 4
+    maintenance_budget_rows: int = 256
 
 
 class RAGEngine:
@@ -54,7 +63,12 @@ class RAGEngine:
             lambda p, c, t, pos: lm.decode_step(lm_cfg, p, c, t, pos, mesh, opts))
         self._encode = jax.jit(lambda p, toks: self._embed(p, toks))
         self._tokens = np.zeros((cfg.n_slots,), np.int32)
-        self.stats = {"ticks": 0, "tokens": 0, "retrievals": 0}
+        self.maintenance = (
+            MaintenanceDriver(index, cfg.maintenance_budget_rows,
+                              cfg.maintenance_interval)
+            if index is not None and cfg.maintenance_interval > 0 else None)
+        self.stats = {"ticks": 0, "tokens": 0, "retrievals": 0,
+                      "maintenance_runs": 0}
 
     # -- query embedding (mean-pooled token embeddings) -----------------------
     def _embed(self, params, tokens):
@@ -121,6 +135,11 @@ class RAGEngine:
         for slot in admitted:
             req = self.batcher.requests[self.batcher.slots[slot].rid]
             self._prefill_slot(slot, req.prompt)
+        if self.maintenance is not None:
+            # between decode steps: one bounded maintenance step keeps
+            # ingest-while-search from ever paying a full compaction stall
+            if self.maintenance.tick() is not None:
+                self.stats["maintenance_runs"] += 1
         if not any(s.active for s in self.batcher.slots):
             return []
         pos = np.array([s.pos for s in self.batcher.slots], np.int32)

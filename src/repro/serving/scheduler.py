@@ -97,3 +97,32 @@ class ContinuousBatcher:
 
     def active_mask(self) -> np.ndarray:
         return np.array([s.active for s in self.slots])
+
+
+class MaintenanceDriver:
+    """Paces adaptive index maintenance between decode steps.
+
+    Serving interleaves ingest with search: without maintenance the delta
+    store fills and every query's scan slows; with synchronous compaction a
+    full rebuild stalls an entire decode tick. This driver runs
+    ``index.maintain(budget=budget_rows)`` — bounded work by construction —
+    every ``interval``-th tick, so the ingest-while-search steady state pays
+    a small, constant maintenance tax per tick instead of rare large stalls.
+    The engine calls ``tick()`` after each decode step; a no-op maintain
+    costs one O(K) planning pass."""
+
+    def __init__(self, index, budget_rows: int = 256, interval: int = 4):
+        self.index = index
+        self.budget_rows = budget_rows
+        self.interval = max(int(interval), 1)
+        self.ticks = 0
+        self.runs = 0
+        self.last_report = None
+
+    def tick(self):
+        self.ticks += 1
+        if self.index is None or self.ticks % self.interval:
+            return None
+        self.last_report = self.index.maintain(budget=self.budget_rows)
+        self.runs += 1
+        return self.last_report

@@ -20,7 +20,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
 
-# Logical axis vocabulary used across the framework (see DESIGN.md §5):
+# Logical axis vocabulary used across the framework (see docs/DESIGN.md §5):
 DEFAULT_RULES: Dict[Optional[str], MeshAxes] = {
     # activations
     "batch": ("pod", "data"),            # prefix-fallback trims to what divides

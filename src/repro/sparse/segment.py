@@ -1,4 +1,4 @@
-"""Segment primitives (the JAX message-passing substrate — DESIGN.md: BCOO-free,
+"""Segment primitives (the JAX message-passing substrate — docs/DESIGN.md: BCOO-free,
 ``segment_sum``-based; this IS part of the system, not a gap).
 """
 from __future__ import annotations

@@ -1,0 +1,91 @@
+"""Docs smoke: extract every ```python fence from README.md and docs/*.md
+and execute them, in document order, in one shared namespace seeded with
+the identifiers the snippets assume (a built index, queries, attribute
+columns, ...). API drift in a documented snippet then fails CI instead of
+silently rotting.
+
+    PYTHONPATH=src python tools/docs_smoke.py
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+FENCE = re.compile(r"```python\n(.*?)```", re.DOTALL)
+
+
+def _unit(v):
+    return v / np.linalg.norm(v, axis=-1, keepdims=True)
+
+
+def build_namespace():
+    """The documented snippets' world: a built two-modality index with a
+    typed graph and attribute columns, a fresh un-ingested index (the
+    attribute section's ingest snippet builds it), queries, and a write
+    batch for the maintenance section."""
+    from repro.configs import get_config
+    from repro.core import HMGIIndex
+
+    rng = np.random.default_rng(0)
+    n, dt, di = 300, 32, 24
+    vt = _unit(rng.normal(size=(n, dt)).astype(np.float32))
+    vi = _unit(rng.normal(size=(n, di)).astype(np.float32))
+    ids = np.arange(n, dtype=np.int32)
+    year = rng.integers(2000, 2030, n).astype(np.int32)
+    cat = rng.integers(0, 6, n).astype(np.int32)
+    price = rng.integers(1, 200, n).astype(np.int32)
+    e = 1200
+    src = rng.integers(0, n, e).astype(np.int32)
+    dst = rng.integers(0, n, e).astype(np.int32)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    et = rng.integers(0, 3, len(src)).astype(np.int32)
+
+    cfg = get_config("hmgi").replace(n_partitions=8, n_probe=8, top_k=10,
+                                     kmeans_iters=4, delta_capacity=128)
+    index = HMGIIndex(cfg, seed=0)
+    index.ingest({"text": (ids, vt), "image": (ids, vi)}, n_nodes=n,
+                 edges=(src, dst, et),
+                 node_attrs={"year": year, "category": cat})
+
+    q = (vt[:5] + 0.05 * rng.normal(size=(5, dt))).astype(np.float32)
+    qi = (vi[:5] + 0.05 * rng.normal(size=(5, di))).astype(np.float32)
+    return {
+        "np": np, "index": index, "q": q, "qi": qi,
+        "q1": q, "q2": (vt[5:10] + 0.05 * rng.normal(size=(5, dt))
+                        ).astype(np.float32),
+        "AUTHORED": 1,
+        # the attribute section's snippet ingests this one itself
+        "idx": HMGIIndex(cfg, seed=1),
+        "embeddings": {"text": (ids, vt), "image": (ids, vi)},
+        "n_nodes": n, "edges": (src, dst, et), "cat": cat, "price": price,
+        # the maintenance section's write batch — large enough to cross the
+        # delta-pressure threshold, so the snippet's auto-drain is real
+        "wid": np.arange(200, 280, dtype=np.int32),
+        "wvecs": rng.normal(size=(80, dt)).astype(np.float32),
+    }
+
+
+def main() -> int:
+    docs = [ROOT / "README.md", *sorted((ROOT / "docs").glob("*.md"))]
+    ns = build_namespace()
+    failures = 0
+    for doc in docs:
+        for i, snippet in enumerate(FENCE.findall(doc.read_text())):
+            label = f"{doc.relative_to(ROOT)}#fence{i}"
+            try:
+                exec(compile(snippet, label, "exec"), ns)   # noqa: S102
+                print(f"ok   {label}")
+            except Exception as exc:                        # noqa: BLE001
+                failures += 1
+                print(f"FAIL {label}: {type(exc).__name__}: {exc}")
+    print(f"# docs-smoke: {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
