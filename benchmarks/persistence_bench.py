@@ -1,0 +1,138 @@
+"""Durability cost benchmark: snapshot latency, WAL append overhead,
+recovery time vs replay length.
+
+The claims under test (docs/DESIGN.md §7):
+
+- snapshots are cheap enough to pace from the serving loop (a full-state
+  write is one host gather + sequential .npy writes, no device sync stalls)
+- the write-ahead log costs <5% p50 on the ingest path (one CRC-framed
+  append + fsync per facade call, amortised over the batch it covers)
+- recovery time is snapshot restore + linear replay: bounded by how often
+  the serving loop snapshots, not by index size
+
+Rows:
+  persistence/snapshot_write_{n}    us per full-state snapshot, corpus n
+  persistence/snapshot_restore_{n}  us per restore (recover, empty tail)
+  persistence/insert_{plain,durable}  p50 per-insert-batch wall us on a
+                                    write stream; derived: WAL overhead %
+  persistence/recover_tail_{r}      us to recover with r ops of log tail
+                                    replayed on top of the base snapshot
+"""
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import timeit
+from repro.configs import get_config
+from repro.core import HMGIIndex
+from repro.data.synthetic import make_corpus
+from repro.persistence import DurableHMGIIndex, recover
+
+DIM = 64
+BATCH = 64
+
+
+def _cfg():
+    return get_config("hmgi").replace(
+        n_partitions=32, n_probe=8, top_k=10, kmeans_iters=8,
+        delta_capacity=2048, maint_auto=False)
+
+
+def _ingest(idx, n):
+    corpus = make_corpus(n_nodes=n, modality_dims={"text": DIM}, seed=0)
+    idx.ingest({"text": (corpus.node_ids["text"], corpus.vectors["text"])},
+               n_nodes=n + 64 * BATCH, edges=(corpus.src, corpus.dst))
+
+
+def _write_stream(idx, steps, rng, base):
+    """Applies ``steps`` insert batches; returns per-batch wall seconds."""
+    stalls = []
+    for s in range(steps):
+        ids = (base + s * BATCH + np.arange(BATCH)).astype(np.int32)
+        vecs = rng.standard_normal((BATCH, DIM)).astype(np.float32)
+        t0 = time.perf_counter()
+        idx.insert("text", ids, vecs)
+        stalls.append(time.perf_counter() - t0)
+    return stalls
+
+
+def run(report) -> None:
+    cfg = _cfg()
+
+    # -- snapshot write / restore latency vs corpus size ---------------------
+    for n in (1000, 4000):
+        work = tempfile.mkdtemp(prefix="hmgi_pbench_")
+        try:
+            idx = DurableHMGIIndex(cfg, work, seed=0)
+            _ingest(idx, n)
+            # each trial must actually write: bump last_seq with a no-op-ish
+            # tiny insert so snapshot() isn't skipped as unchanged
+            rng = np.random.default_rng(1)
+
+            def snap(i=[0]):
+                i[0] += 1
+                idx.insert("text", np.asarray([n + i[0]], np.int32),
+                           rng.standard_normal((1, DIM)).astype(np.float32))
+                return idx.snapshot()
+
+            dt = timeit(snap, trials=3, warmup=1)
+            report(f"persistence/snapshot_write_{n}", dt * 1e6)
+            idx.close()
+            dt = timeit(lambda: recover(cfg, work, seed=0).close(),
+                        trials=3, warmup=1)
+            report(f"persistence/snapshot_restore_{n}", dt * 1e6)
+        finally:
+            shutil.rmtree(work, ignore_errors=True)
+
+    # -- WAL append overhead on the ingest path ------------------------------
+    n, steps = 2000, 24
+    # untimed warm-up stream on a throwaway index: the insert path retraces
+    # as the delta fills, and both measured streams walk the same fill
+    # sequence — without this, whichever stream runs first pays every
+    # compile and the comparison measures XLA caching, not the WAL
+    warm = HMGIIndex(cfg, seed=0)
+    _ingest(warm, n)
+    _write_stream(warm, steps, np.random.default_rng(2), n)
+    plain = HMGIIndex(cfg, seed=0)
+    _ingest(plain, n)
+    s_plain = _write_stream(plain, steps, np.random.default_rng(2), n)
+    p50_plain = float(np.median(s_plain))
+    report("persistence/insert_plain", p50_plain * 1e6)
+    # sync_every=1: every append fsyncs before returning (durable at return;
+    # the fsync dominates the overhead). sync_every=16: group commit — the
+    # p50 append only buffers, and this is where the <5% ingest-overhead
+    # target holds (a crash loses at most 15 trailing ops, which were never
+    # acknowledged as durable)
+    for sync_every, tag in ((1, "durable"), (16, "durable_grouped")):
+        work = tempfile.mkdtemp(prefix="hmgi_pbench_")
+        try:
+            dcfg = cfg.replace(wal_sync_every=sync_every)
+            durable = DurableHMGIIndex(dcfg, work, seed=0)
+            _ingest(durable, n)
+            s_dur = _write_stream(durable, steps, np.random.default_rng(2), n)
+            durable.close()
+        finally:
+            shutil.rmtree(work, ignore_errors=True)
+        p50 = float(np.median(s_dur))
+        overhead = (p50 - p50_plain) / p50_plain * 100.0
+        report(f"persistence/insert_{tag}", p50 * 1e6,
+               f"wal_overhead_pct={overhead:.2f}")
+
+    # -- recovery time vs replayed-op count ----------------------------------
+    for tail in (0, 16, 64):
+        work = tempfile.mkdtemp(prefix="hmgi_pbench_")
+        try:
+            idx = DurableHMGIIndex(cfg, work, seed=0)
+            _ingest(idx, n)
+            idx.snapshot()
+            _write_stream(idx, tail, np.random.default_rng(3), n)
+            idx.close()
+            dt = timeit(lambda: recover(cfg, work, seed=0).close(),
+                        trials=3, warmup=1)
+            report(f"persistence/recover_tail_{tail}", dt * 1e6)
+        finally:
+            shutil.rmtree(work, ignore_errors=True)

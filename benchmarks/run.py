@@ -12,6 +12,8 @@
   sharded_bench — sharded execution path: 1/2/4/8-shard probe+merge scaling
   maintenance_bench — adaptive maintenance: ingest stall (incremental drain
                   vs full compact) + post-maintenance query latency
+  persistence_bench — durability: snapshot write/restore latency, WAL append
+                  overhead on ingest, recovery time vs replay length
 
 Prints ``name,us_per_call,derived`` CSV.
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module>]
@@ -29,7 +31,8 @@ def main() -> None:
                     choices=["paper_tables", "ablations", "scaling",
                              "kernels_bench", "hybrid_bench",
                              "filtered_bench", "query_bench",
-                             "sharded_bench", "maintenance_bench"])
+                             "sharded_bench", "maintenance_bench",
+                             "persistence_bench"])
     args = ap.parse_args()
 
     rows = []
@@ -40,12 +43,14 @@ def main() -> None:
 
     from benchmarks import (ablations, filtered_bench, hybrid_bench,
                             kernels_bench, maintenance_bench, paper_tables,
-                            query_bench, scaling, sharded_bench)
+                            persistence_bench, query_bench, scaling,
+                            sharded_bench)
     mods = {"paper_tables": paper_tables, "ablations": ablations,
             "scaling": scaling, "kernels_bench": kernels_bench,
             "hybrid_bench": hybrid_bench, "filtered_bench": filtered_bench,
             "query_bench": query_bench, "sharded_bench": sharded_bench,
-            "maintenance_bench": maintenance_bench}
+            "maintenance_bench": maintenance_bench,
+            "persistence_bench": persistence_bench}
     selected = [mods[args.only]] if args.only else list(mods.values())
 
     print("name,us_per_call,derived")

@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpoint import (
-    CheckpointManager, restore_checkpoint, save_checkpoint,
+    CheckpointError, CheckpointManager, checkpoint_steps, latest_step,
+    restore_checkpoint, save_checkpoint,
 )

@@ -1,16 +1,28 @@
 """Sharded, atomic, async-capable checkpointing (fault-tolerance substrate).
 
 Layout: ``<dir>/step_<N>/`` holds one ``.npy`` per pytree leaf (flattened
-key paths) + a ``manifest.json`` (treedef, shapes, dtypes, step, config
-fingerprint). Writes go to ``step_<N>.tmp`` and are atomically renamed —
-a crashed writer never corrupts the latest checkpoint. On multi-host
-deployments each host writes its own shard files (``shard_<k>``); here
-(single host) arrays are gathered before write, which is also the path the
-dry-run exercises.
+key paths) + a ``manifest.json`` (treedef, shapes, dtypes, per-leaf crc32,
+step, config fingerprint). Writes go to ``step_<N>.tmp`` and are atomically
+renamed — and every leaf file, the manifest, and the directories are
+fsync'd *before* the rename, so a crashed writer never corrupts the latest
+checkpoint under power loss, not just SIGKILL. On multi-host deployments
+each host writes its own shard files (``shard_<k>``); here (single host)
+arrays are gathered before write, which is also the path the dry-run
+exercises.
+
+Restore validates structure, per-leaf key/shape/dtype, and the recorded
+crc32 of each leaf's bytes; any mismatch raises ``CheckpointError`` naming
+the offending leaf instead of silently ``view()``-reinterpreting bytes.
+``restore_checkpoint(dir, like=None)`` restores a flat ``{key: np.ndarray}``
+dict straight from the manifest (host dtypes preserved exactly — the
+persistence layer's snapshot path, where the shapes aren't known up front).
 
 ``CheckpointManager`` adds: retention (keep last k), async background
-writes (thread pool), and restore-latest-on-restart (the trainer's
-restart-from-step contract).
+writes (thread pool) whose failures surface on the next ``save``/``wait``/
+``restore_latest`` instead of vanishing in the pool, and
+restore-latest-on-restart (the trainer's restart-from-step contract) which
+skips and garbage-collects leftover ``step_<N>.tmp`` dirs from crashed
+writers.
 """
 from __future__ import annotations
 
@@ -19,6 +31,7 @@ import os
 import re
 import shutil
 import threading
+import zlib
 from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Optional, Tuple
 
@@ -27,6 +40,8 @@ import jax.numpy as jnp
 import ml_dtypes
 import numpy as np
 
+from repro.persistence.faultpoints import crash_point
+
 # numpy can't serialise ML dtypes natively: store as a same-width integer
 # view and restore via the manifest's recorded dtype
 _EXOTIC_VIEWS = {
@@ -34,6 +49,18 @@ _EXOTIC_VIEWS = {
     "float8_e4m3fn": np.uint8,
     "float8_e5m2": np.uint8,
 }
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint failed validation. ``leaf`` names the offending leaf
+    (or "" for manifest/structure-level failures), ``reason`` says why."""
+
+    def __init__(self, path: str, leaf: str, reason: str):
+        super().__init__(f"checkpoint {path}: "
+                         + (f"leaf {leaf!r}: " if leaf else "") + reason)
+        self.path = path
+        self.leaf = leaf
+        self.reason = reason
 
 
 def _to_savable(arr: np.ndarray):
@@ -68,9 +95,35 @@ def _path_str(p) -> str:
     return str(p)
 
 
+def fsync_file(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def fsync_dir(path: str) -> None:
+    fd = os.open(path, os.O_RDONLY | getattr(os, "O_DIRECTORY", 0))
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _leaf_crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
 def save_checkpoint(directory: str, step: int, tree: Any,
                     extra: Optional[dict] = None) -> str:
-    """Atomic checkpoint write. Returns the final path."""
+    """Atomic checkpoint write. Returns the final path.
+
+    Durability order: leaf files -> manifest -> fsync(every file) ->
+    fsync(tmp dir) -> rename -> fsync(parent dir). A crash anywhere before
+    the rename leaves only a ``.tmp`` dir (skipped + GC'd by restore); a
+    crash after it leaves a complete, checksummed checkpoint."""
+    os.makedirs(directory, exist_ok=True)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -78,55 +131,123 @@ def save_checkpoint(directory: str, step: int, tree: Any,
     os.makedirs(tmp, exist_ok=True)
     leaves, _ = _flatten_with_paths(tree)
     manifest = {"step": step, "leaves": [], "extra": extra or {}}
+    written = []
     for i, (key, leaf) in enumerate(leaves):
         arr = np.asarray(jax.device_get(leaf))
         savable, dtype_name = _to_savable(arr)
         fname = f"leaf_{i:05d}.npy"
         np.save(os.path.join(tmp, fname), savable)
+        written.append(os.path.join(tmp, fname))
         manifest["leaves"].append(
             {"key": key, "file": fname, "shape": list(arr.shape),
-             "dtype": dtype_name})
+             "dtype": dtype_name, "crc32": _leaf_crc(savable)})
+        crash_point("snapshot.mid_write")
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+    written.append(os.path.join(tmp, "manifest.json"))
+    for path in written:
+        fsync_file(path)
+    fsync_dir(tmp)
+    crash_point("snapshot.pre_rename")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
+    crash_point("snapshot.post_rename")
+    fsync_dir(directory)
     return final
 
 
-def restore_checkpoint(directory: str, like: Any, step: Optional[int] = None
+def _load_manifest(path: str) -> dict:
+    mpath = os.path.join(path, "manifest.json")
+    if not os.path.exists(mpath):
+        raise CheckpointError(path, "", "missing manifest.json")
+    try:
+        with open(mpath) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointError(path, "", f"unreadable manifest: {e}") from e
+
+
+def _load_leaf(path: str, rec: dict) -> np.ndarray:
+    """One leaf, validated against its manifest record (shape + crc32)."""
+    fpath = os.path.join(path, rec["file"])
+    try:
+        raw = np.load(fpath)
+    except (OSError, ValueError) as e:
+        raise CheckpointError(path, rec["key"], f"unreadable leaf: {e}") from e
+    if "crc32" in rec and _leaf_crc(raw) != rec["crc32"]:
+        raise CheckpointError(path, rec["key"], "crc32 mismatch (corrupt leaf)")
+    arr = _from_saved(raw, rec["dtype"])
+    if list(arr.shape) != list(rec["shape"]):
+        raise CheckpointError(
+            path, rec["key"],
+            f"stored shape {list(arr.shape)} != manifest {rec['shape']}")
+    return arr
+
+
+def restore_checkpoint(directory: str, like: Any = None,
+                       step: Optional[int] = None
                        ) -> Tuple[Any, int, dict]:
-    """Restores into the structure of ``like`` (shapes/dtypes validated).
-    step=None -> latest. Returns (tree, step, extra)."""
+    """Restores a checkpoint. step=None -> latest. Returns
+    (tree, step, extra).
+
+    like provided: restores into its structure, with every leaf validated
+    (key order, shape, dtype, stored crc32) — any mismatch raises
+    ``CheckpointError`` naming the offending leaf. like=None: returns the
+    flat ``{key: np.ndarray}`` dict as written (the tree must have been a
+    flat dict) — host dtypes preserved exactly, no device transfer."""
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory}")
     path = os.path.join(directory, f"step_{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _load_manifest(path)
+
+    if like is None:
+        out = {}
+        for rec in manifest["leaves"]:
+            out[rec["key"]] = _load_leaf(path, rec)
+        return out, manifest["step"], manifest.get("extra", {})
+
     leaves, treedef = _flatten_with_paths(like)
-    assert len(leaves) == len(manifest["leaves"]), "pytree structure changed"
+    if len(leaves) != len(manifest["leaves"]):
+        raise CheckpointError(
+            path, "", f"pytree structure changed: {len(leaves)} leaves "
+            f"expected, manifest has {len(manifest['leaves'])}")
     restored = []
     for (key, leaf), rec in zip(leaves, manifest["leaves"]):
-        assert key == rec["key"], f"leaf order mismatch: {key} vs {rec['key']}"
-        arr = _from_saved(np.load(os.path.join(path, rec["file"])), rec["dtype"])
-        want = tuple(getattr(leaf, "shape", arr.shape))
-        assert tuple(arr.shape) == want, (key, arr.shape, want)
+        if key != rec["key"]:
+            raise CheckpointError(
+                path, rec["key"], f"leaf order mismatch: expected {key!r}")
+        arr = _load_leaf(path, rec)
+        want_shape = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != want_shape:
+            raise CheckpointError(
+                path, key, f"shape {tuple(arr.shape)} != expected {want_shape}")
+        want_dtype = getattr(leaf, "dtype", None)
+        if want_dtype is not None and arr.dtype != want_dtype:
+            raise CheckpointError(
+                path, key, f"dtype {arr.dtype} != expected {want_dtype}")
         restored.append(jnp.asarray(arr))
     tree = jax.tree_util.tree_unflatten(treedef, restored)
     return tree, manifest["step"], manifest.get("extra", {})
 
 
-def latest_step(directory: str) -> Optional[int]:
+def checkpoint_steps(directory: str):
+    """All complete checkpoint steps under ``directory``, ascending."""
     if not os.path.isdir(directory):
-        return None
+        return []
     steps = []
     for name in os.listdir(directory):
         m = re.fullmatch(r"step_(\d+)", name)
         if m and os.path.exists(os.path.join(directory, name, "manifest.json")):
             steps.append(int(m.group(1)))
-    return max(steps) if steps else None
+    return sorted(steps)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    steps = checkpoint_steps(directory)
+    return steps[-1] if steps else None
 
 
 class CheckpointManager:
@@ -137,8 +258,25 @@ class CheckpointManager:
         self.keep = keep
         self._pool = ThreadPoolExecutor(max_workers=1) if async_writes else None
         self._pending = None
+        self._error: Optional[BaseException] = None
         self._lock = threading.Lock()
         os.makedirs(directory, exist_ok=True)
+
+    def _drain_pending_locked(self):
+        """Joins the in-flight write; a stored failure surfaces here (and is
+        cleared — one failed background write raises exactly once, on the
+        next save/wait/restore_latest, instead of disappearing in the pool)."""
+        if self._pending is not None:
+            try:
+                self._pending.result()
+            except BaseException as e:  # noqa: BLE001 — surface, don't classify
+                self._error = e
+            self._pending = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointError(
+                self.directory, "",
+                f"background checkpoint write failed: {err}") from err
 
     def save(self, step: int, tree: Any, extra: Optional[dict] = None):
         # materialise on host *now* (snapshot semantics), write in background
@@ -154,19 +292,26 @@ class CheckpointManager:
             work()
         else:
             with self._lock:
-                if self._pending is not None:
-                    self._pending.result()
+                self._drain_pending_locked()
                 self._pending = self._pool.submit(work)
 
     def wait(self):
         with self._lock:
-            if self._pending is not None:
-                self._pending.result()
-                self._pending = None
+            self._drain_pending_locked()
 
-    def restore_latest(self, like: Any):
+    def restore_latest(self, like: Any = None):
         self.wait()
+        self._gc_tmp()
         return restore_checkpoint(self.directory, like)
+
+    def _gc_tmp(self):
+        """Removes leftover ``step_<N>.tmp`` dirs (crashed writers). They are
+        never a restore candidate — ``latest_step`` only matches completed
+        dirs — but they hold disk and would shadow a same-step rewrite."""
+        for name in os.listdir(self.directory):
+            if re.fullmatch(r"step_\d+\.tmp", name):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
 
     def _gc(self):
         steps = sorted(

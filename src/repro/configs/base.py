@@ -239,4 +239,9 @@ class HMGIConfig(ArchConfig):
     shard_device_budget_bytes: int = 256 << 20   # shard the stable scan when
                                            # one device's quantized slab share
                                            # would exceed this
+    # durability (repro.persistence; docs/DESIGN.md §7)
+    wal_sync_every: int = 1                # fsync the op log every N appends
+                                           # (1 = durable at return)
+    snapshot_keep: int = 2                 # retained snapshots; ≥2 keeps a
+                                           # fallback if the newest corrupts
     dtype: str = "float32"

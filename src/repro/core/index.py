@@ -546,6 +546,139 @@ class HMGIIndex:
             self._metrics["maintenance"] = trail
         return reports[modality] if modality else reports
 
+    # ------------------------------------------------------- durability state
+    # The complete durable state, as a flat {key: array} dict + JSON-able
+    # structural metadata. This is THE definition of "what must survive a
+    # crash" — anything that influences a search result or a future
+    # mutation's outcome is here (quantized slabs byte-identical, centroids
+    # incl. parked sentinels, delta + staleness bits, graph CSR, attributes,
+    # MVCC tombstone/superseded bits, partition stats, workload heat, PRNG
+    # key). Derived caches (id_rows, ivf_sharded, _part_of) are excluded:
+    # they rebuild lazily and deterministically from this state. Consumed by
+    # repro.persistence.snapshot; keep the two restore paths in sync when
+    # adding fields.
+
+    def state_tree(self) -> Tuple[Dict[str, object], Dict[str, object]]:
+        """Returns ``(tree, meta)``: every durable array keyed by a flat
+        path, plus the structural metadata needed to rebuild the facade.
+        Host-side numpy leaves (stats, heat) keep their exact dtypes —
+        they must round-trip bit-identically, not through jnp's 32-bit
+        coercion."""
+        tree: Dict[str, object] = {"key": self.key}
+        meta: Dict[str, object] = {
+            "n_nodes": int(self.n_nodes),
+            "modalities": {},
+            "graph": self.graph is not None,
+            "communities": self.communities is not None,
+            "boosted_weights": self.boosted_weights is not None,
+            "attr_columns": None,
+            "sparse_docs": self.sparse_docs is not None,
+        }
+        for mod, m in self.modalities.items():
+            p = f"m/{mod}"
+            for f in ("centroids", "data", "vmin", "scale", "ids", "counts"):
+                tree[f"{p}/ivf/{f}"] = getattr(m.ivf, f)
+            for f in delta_mod.DeltaStore._fields:
+                tree[f"{p}/delta/{f}"] = getattr(m.delta, f)
+            tree[f"{p}/vectors"] = m.vectors
+            tree[f"{p}/ids"] = m.ids
+            if m.nsw is not None:
+                for f in ("vectors", "neighbors", "entry"):
+                    tree[f"{p}/nsw/{f}"] = getattr(m.nsw, f)
+            if m.workload is not None:
+                tree[f"{p}/workload_hits"] = np.asarray(m.workload.hits)
+            if m.stats is not None:
+                st = m.stats
+                for f in ("baseline", "drift_sum", "drift_cnt", "dead",
+                          "parked"):
+                    tree[f"{p}/stats/{f}"] = np.asarray(getattr(st, f))
+            meta["modalities"][mod] = {
+                "bits": int(m.ivf.bits),
+                "has_dead": bool(m.has_dead),
+                "nsw": m.nsw is not None,
+                "workload": m.workload is not None,
+                "stats": m.stats is not None,
+                "stats_max_ids": (int(m.stats.max_ids)
+                                  if m.stats is not None else 0),
+            }
+        if self.graph is not None:
+            for f in GraphStore._fields:
+                tree[f"graph/{f}"] = getattr(self.graph, f)
+        if self.communities is not None:
+            tree["communities"] = np.asarray(self.communities)
+        if self.boosted_weights is not None:
+            tree["boosted_weights"] = self.boosted_weights
+        if self.attributes is not None:
+            tree["attributes/values"] = self.attributes.values
+            cols = sorted(self.attributes.columns, key=self.attributes.columns.get)
+            meta["attr_columns"] = cols
+        if self.sparse_docs is not None:
+            tree["sparse/term_ids"] = self.sparse_docs.term_ids
+            tree["sparse/term_weights"] = self.sparse_docs.term_weights
+        return tree, meta
+
+    def restore_state(self, tree: Dict[str, object],
+                      meta: Dict[str, object]) -> None:
+        """Rebuilds this (freshly constructed) index from ``state_tree``
+        output. Device arrays re-enter via jnp; host-side stat arrays stay
+        numpy with their stored dtypes. The result is bit-identical to the
+        snapshotted index for every search path."""
+        self.n_nodes = int(meta["n_nodes"])
+        self.key = jnp.asarray(np.asarray(tree["key"]))
+        self.modalities = {}
+        for mod, mm in meta["modalities"].items():
+            p = f"m/{mod}"
+            ivf = ivf_mod.IVFIndex(
+                **{f: jnp.asarray(np.asarray(tree[f"{p}/ivf/{f}"]))
+                   for f in ("centroids", "data", "vmin", "scale", "ids",
+                             "counts")},
+                bits=int(mm["bits"]))
+            dstore = delta_mod.DeltaStore(
+                **{f: jnp.asarray(np.asarray(tree[f"{p}/delta/{f}"]))
+                   for f in delta_mod.DeltaStore._fields})
+            m = ModalityIndex(
+                ivf=ivf, delta=dstore,
+                vectors=jnp.asarray(np.asarray(tree[f"{p}/vectors"])),
+                ids=jnp.asarray(np.asarray(tree[f"{p}/ids"])),
+                has_dead=bool(mm["has_dead"]))
+            if mm["nsw"]:
+                m.nsw = nsw_mod.NSWGraph(
+                    vectors=jnp.asarray(np.asarray(tree[f"{p}/nsw/vectors"])),
+                    neighbors=jnp.asarray(np.asarray(tree[f"{p}/nsw/neighbors"])),
+                    entry=jnp.asarray(np.asarray(tree[f"{p}/nsw/entry"])))
+            k = ivf.n_partitions
+            if mm["workload"]:
+                m.workload = WorkloadStats(k)
+                m.workload.hits = np.asarray(tree[f"{p}/workload_hits"]).copy()
+            if mm["stats"]:
+                st = PartitionStats(k, int(mm["stats_max_ids"]))
+                for f in ("baseline", "drift_sum", "drift_cnt", "dead",
+                          "parked"):
+                    setattr(st, f, np.asarray(tree[f"{p}/stats/{f}"]).copy())
+                m.stats = st
+            self.modalities[mod] = m
+        self.graph = (GraphStore(
+            **{f: jnp.asarray(np.asarray(tree[f"graph/{f}"]))
+               for f in GraphStore._fields})
+            if meta["graph"] else None)
+        self.communities = (np.asarray(tree["communities"]).copy()
+                            if meta["communities"] else None)
+        self.boosted_weights = (
+            jnp.asarray(np.asarray(tree["boosted_weights"]))
+            if meta["boosted_weights"] else None)
+        if meta["attr_columns"] is not None:
+            self.attributes = NodeAttributes(
+                {n: i for i, n in enumerate(meta["attr_columns"])},
+                jnp.asarray(np.asarray(tree["attributes/values"])))
+        else:
+            self.attributes = None
+        if meta["sparse_docs"]:
+            self.sparse_docs = rerank_mod.SparseVectors(
+                term_ids=jnp.asarray(np.asarray(tree["sparse/term_ids"])),
+                term_weights=jnp.asarray(np.asarray(tree["sparse/term_weights"])))
+        else:
+            self.sparse_docs = None
+
     # ------------------------------------------------------------------ stats
     def metrics(self) -> Dict[str, object]:
         """Execution-side observability: filter selectivity/mode recorded by

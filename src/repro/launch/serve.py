@@ -5,6 +5,11 @@ draining the delta in bounded steps between batches) and optional RAG
 generation with maintenance paced between decode steps.
 
 ``python -m repro.launch.serve --n-nodes 2000 --queries 64 [--rag]``
+
+Durability: ``--data-dir DIR`` makes the index durable (write-ahead op log +
+periodic snapshots under DIR); ``--recover`` restarts from DIR's latest
+valid snapshot plus log-tail replay instead of rebuilding — search results
+are bit-identical to the pre-crash index.
 """
 from __future__ import annotations
 
@@ -28,19 +33,35 @@ def main():
     ap.add_argument("--rag", action="store_true")
     ap.add_argument("--ingest-steps", type=int, default=4,
                     help="ingest-while-search streaming steps (0 = skip)")
+    ap.add_argument("--data-dir", type=str, default=None,
+                    help="durable mode: op-log + snapshot under this dir")
+    ap.add_argument("--recover", action="store_true",
+                    help="recover from --data-dir instead of rebuilding")
     args = ap.parse_args()
+    if args.recover and not args.data_dir:
+        ap.error("--recover requires --data-dir")
 
     cfg = get_config("hmgi").replace(n_partitions=32, n_probe=8,
                                      kmeans_iters=8, top_k=args.k)
     corpus = make_corpus(n_nodes=args.n_nodes,
                          modality_dims={"text": 64, "image": 96})
-    index = HMGIIndex(cfg, seed=0)
     t0 = time.perf_counter()
-    index.ingest({m: (corpus.node_ids[m], corpus.vectors[m])
-                  for m in corpus.vectors}, n_nodes=corpus.n_nodes,
-                 edges=(corpus.src, corpus.dst, corpus.edge_type))
-    print(f"ingest+build: {time.perf_counter()-t0:.2f}s  "
-          f"memory: {index.memory_usage()['total']/2**20:.1f} MiB")
+    if args.recover:
+        from repro.persistence import recover
+        index = recover(cfg, args.data_dir, seed=0)
+        print(f"recover: {time.perf_counter()-t0:.2f}s  "
+              f"[{index.metrics()['recovery']}]")
+    else:
+        if args.data_dir:
+            from repro.persistence import DurableHMGIIndex
+            index = DurableHMGIIndex(cfg, args.data_dir, seed=0)
+        else:
+            index = HMGIIndex(cfg, seed=0)
+        index.ingest({m: (corpus.node_ids[m], corpus.vectors[m])
+                      for m in corpus.vectors}, n_nodes=corpus.n_nodes,
+                     edges=(corpus.src, corpus.dst, corpus.edge_type))
+        print(f"ingest+build: {time.perf_counter()-t0:.2f}s  "
+              f"memory: {index.memory_usage()['total']/2**20:.1f} MiB")
 
     rng = np.random.default_rng(1)
     sel = rng.integers(0, len(corpus.vectors["text"]), args.queries)
@@ -83,13 +104,20 @@ def main():
               f"delta={int(m.delta.count)}  "
               f"maintenance: {index.metrics().get('maintenance', 'n/a')}")
 
+    if args.data_dir:
+        t0 = time.perf_counter()
+        path = index.snapshot()
+        print(f"snapshot: {time.perf_counter()-t0:.2f}s -> {path}  "
+              f"(last_seq={index.last_seq})")
+
     if args.rag:
         from repro.models import lm
         from repro.serving.engine import EngineConfig, RAGEngine
         lcfg = smoke_config("phi4-mini-3.8b")
         params, _ = lm.init_lm(lcfg, jax.random.PRNGKey(0))
         eng = RAGEngine(lcfg, params, index,
-                        EngineConfig(n_slots=4, max_seq=64, retrieve_k=4))
+                        EngineConfig(n_slots=4, max_seq=64, retrieve_k=4,
+                                     snapshot_interval=32))
         rids = eng.retrieve(q[:4])
         for i in range(4):
             eng.submit(i, rng.integers(0, lcfg.vocab_size, 8), rids[i], 8)

@@ -1,0 +1,30 @@
+"""Durable index lifecycle: versioned snapshots + write-ahead op log +
+crash recovery (docs/DESIGN.md §7).
+
+- ``faultpoints`` — named crash points at every durability boundary
+- ``oplog`` — CRC-framed, segmented, fsync-batched append-only op log
+- ``snapshot`` — full-HMGIIndex-state snapshots via the checkpoint substrate
+- ``durable`` — ``DurableHMGIIndex`` (log-then-apply facade) + ``recover``
+
+Import hygiene: ``repro.checkpoint`` imports ``faultpoints`` from this
+package, and ``durable`` imports ``repro.checkpoint`` — so the package
+``__init__`` re-exports lazily (PEP 562) to keep the import graph acyclic.
+"""
+from repro.persistence import faultpoints  # noqa: F401  (dependency-free)
+
+_LAZY = {
+    "DurableHMGIIndex": "repro.persistence.durable",
+    "recover": "repro.persistence.durable",
+    "replay_op": "repro.persistence.durable",
+    "OpLog": "repro.persistence.oplog",
+    "config_fingerprint": "repro.persistence.snapshot",
+}
+
+__all__ = ["faultpoints", *_LAZY]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,263 @@
+"""Append-only write-ahead op log (WAL) for the durable index lifecycle.
+
+Every mutating facade call appends one record *before* applying it
+(write-ahead discipline), so after any crash the durable state is exactly:
+latest valid snapshot + the log tail — and an op whose append completed is
+recovered even if the process died before applying it in memory.
+
+Frame format (little-endian), one per record:
+
+    magic  b"HWAL"   (4)
+    seq    uint64    (8)   monotonic, 1-based, global across segments
+    len    uint32    (4)   payload byte length
+    crc32  uint32    (4)   zlib.crc32(payload)
+    payload:
+        hlen   uint32                    header byte length
+        header json utf-8                {"op", "meta", "arrays": [[key,
+                                          dtype, shape], ...]}
+        raw array bytes, C-order, concatenated in header order
+
+Torn-tail handling: a crash mid-append leaves a final frame that is short,
+has a bad magic, or fails its CRC — ``scan`` stops at the first invalid
+frame and ``open_for_append`` truncates the segment back to the last valid
+frame boundary before new appends land. A crash can only tear the *tail*
+(appends are sequential and earlier bytes were already fsync'd), so one
+truncation point suffices; anything invalid *before* the tail is real
+corruption and recovery stops there with a warning rather than guessing.
+
+Segmentation: records live in ``wal_<firstseq>.log`` files. A snapshot at
+seq S rotates to a fresh segment (``wal_<S+1>.log``) and deletes segments
+whose records all precede the *oldest retained* snapshot — the fallback
+path (corrupt newest snapshot -> previous snapshot + longer replay) always
+finds the records it needs.
+
+fsync policy: ``sync_every`` batches fsyncs (1 = every append is durable at
+return; N = up to N-1 trailing ops may be lost to a crash — they are also
+not yet applied-and-acknowledged anywhere durable, so recovery still
+matches a valid uninterrupted prefix).
+
+Arrays are serialised raw (dtype + shape in the header): exotic dtypes map
+through the same integer views the checkpoint substrate uses, and replay
+reconstructs bit-identical inputs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import struct
+import zlib
+from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
+
+import ml_dtypes
+import numpy as np
+
+from repro.checkpoint.checkpoint import fsync_dir, fsync_file
+from repro.persistence.faultpoints import crash_point
+
+MAGIC = b"HWAL"
+_FRAME = struct.Struct("<4sQII")        # magic, seq, len, crc32
+
+# raw-bytes views for dtypes numpy can't name (mirrors checkpoint._EXOTIC_VIEWS)
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+class OpRecord(NamedTuple):
+    seq: int
+    op: str
+    meta: dict
+    arrays: Dict[str, np.ndarray]
+
+
+def encode_payload(op: str, meta: dict, arrays: Dict[str, np.ndarray]) -> bytes:
+    specs, blobs = [], []
+    for key, arr in arrays.items():
+        arr = np.ascontiguousarray(arr)
+        name = str(arr.dtype)
+        view = arr.view(_EXOTIC[name]) if name in _EXOTIC else arr
+        specs.append([key, name, list(arr.shape)])
+        blobs.append(view.tobytes())
+    header = json.dumps({"op": op, "meta": meta, "arrays": specs}).encode()
+    return b"".join([struct.pack("<I", len(header)), header, *blobs])
+
+
+def decode_payload(payload: bytes) -> Tuple[str, dict, Dict[str, np.ndarray]]:
+    (hlen,) = struct.unpack_from("<I", payload, 0)
+    header = json.loads(payload[4:4 + hlen].decode())
+    arrays: Dict[str, np.ndarray] = {}
+    off = 4 + hlen
+    for key, name, shape in header["arrays"]:
+        if name in _EXOTIC:
+            base, final = _EXOTIC[name], getattr(ml_dtypes, name)
+        else:
+            base = final = np.dtype(name)
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        nbytes = n * np.dtype(base).itemsize
+        arr = np.frombuffer(payload[off:off + nbytes], dtype=base)
+        arrays[key] = arr.view(final).reshape(shape).copy()
+        off += nbytes
+    return header["op"], header["meta"], arrays
+
+
+def _segment_seq(name: str) -> Optional[int]:
+    m = re.fullmatch(r"wal_(\d+)\.log", name)
+    return int(m.group(1)) if m else None
+
+
+class OpLog:
+    """One writer, segmented WAL under ``directory``."""
+
+    def __init__(self, directory: str, sync_every: int = 1):
+        self.directory = directory
+        self.sync_every = max(int(sync_every), 1)
+        os.makedirs(directory, exist_ok=True)
+        self._f = None                   # open append handle (current segment)
+        self._unsynced = 0
+        self.last_seq = 0                # last *valid* seq on disk
+        self.torn_tail = False           # a truncated/invalid tail was seen
+
+    # ----------------------------------------------------------------- layout
+    def segments(self) -> List[Tuple[int, str]]:
+        """[(first_seq, path)] ascending."""
+        out = []
+        for name in os.listdir(self.directory):
+            s = _segment_seq(name)
+            if s is not None:
+                out.append((s, os.path.join(self.directory, name)))
+        return sorted(out)
+
+    # ------------------------------------------------------------------- read
+    def _scan_segment(self, path: str) -> Tuple[List[OpRecord], int, bool]:
+        """(records, valid_end_offset, clean) — stops at the first frame that
+        is short, mis-magic'd, or CRC-corrupt."""
+        records: List[OpRecord] = []
+        with open(path, "rb") as f:
+            data = f.read()
+        off = 0
+        while off + _FRAME.size <= len(data):
+            magic, seq, plen, crc = _FRAME.unpack_from(data, off)
+            end = off + _FRAME.size + plen
+            if magic != MAGIC or end > len(data):
+                return records, off, False
+            payload = data[off + _FRAME.size:end]
+            if zlib.crc32(payload) != crc:
+                return records, off, False
+            op, meta, arrays = decode_payload(payload)
+            records.append(OpRecord(seq, op, meta, arrays))
+            off = end
+        return records, off, off == len(data)
+
+    def scan(self, min_seq: int = 0) -> Iterator[OpRecord]:
+        """Valid records with seq > min_seq, in order, across segments.
+        Stops (sets ``torn_tail``) at the first invalid frame or sequence
+        gap; updates ``last_seq`` to the last record yielded-or-skipped."""
+        self.torn_tail = False
+        prev = None
+        for _, path in self.segments():
+            records, _, clean = self._scan_segment(path)
+            for rec in records:
+                if prev is not None and rec.seq != prev + 1:
+                    self.torn_tail = True       # gap: stop, don't guess
+                    return
+                prev = rec.seq
+                self.last_seq = rec.seq
+                if rec.seq > min_seq:
+                    yield rec
+            if not clean:
+                self.torn_tail = True
+                return
+
+    # ------------------------------------------------------------------ write
+    def open_for_append(self) -> None:
+        """Positions the writer after the last valid record: scans segments,
+        truncates a torn tail of the newest one, opens it for append. A
+        fresh directory starts at ``wal_1.log``."""
+        segs = self.segments()
+        if not segs:
+            self.last_seq = 0
+            self._open_segment(1)
+            return
+        # consume the scan to settle last_seq / torn_tail
+        for _ in self.scan(min_seq=np.iinfo(np.int64).max):
+            pass
+        # an empty newest segment (rotated right after a snapshot, no appends
+        # yet) still pins the sequence: its name says records start at
+        # first_seq, so the last durable seq is at least first_seq - 1
+        self.last_seq = max(self.last_seq, segs[-1][0] - 1)
+        last_path = segs[-1][1]
+        _, valid_end, clean = self._scan_segment(last_path)
+        if not clean:
+            with open(last_path, "r+b") as f:
+                f.truncate(valid_end)
+            fsync_file(last_path)
+        self._f = open(last_path, "ab")
+        self._unsynced = 0
+
+    def _open_segment(self, first_seq: int) -> None:
+        crash_point("wal.pre_rotate")
+        if self._f is not None:
+            self._sync()
+            self._f.close()
+        path = os.path.join(self.directory, f"wal_{first_seq:016d}.log")
+        self._f = open(path, "ab")
+        fsync_dir(self.directory)       # the new segment's name is durable
+        self._unsynced = 0
+
+    def append(self, op: str, meta: dict,
+               arrays: Dict[str, np.ndarray]) -> int:
+        """Appends one record; returns its seq. Durable at return whenever
+        the fsync batch flushed (always, at sync_every=1)."""
+        if self._f is None:
+            self.open_for_append()
+        payload = encode_payload(op, meta, arrays)
+        seq = self.last_seq + 1
+        crash_point("wal.pre_append")
+        self._f.write(_FRAME.pack(MAGIC, seq, len(payload),
+                                  zlib.crc32(payload)))
+        self._f.write(payload)
+        self.last_seq = seq
+        self._unsynced += 1
+        if self._unsynced >= self.sync_every:
+            self._sync()
+        crash_point("wal.post_append")
+        return seq
+
+    def _sync(self) -> None:
+        if self._f is not None and self._unsynced:
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self._unsynced = 0
+
+    def sync(self) -> None:
+        self._sync()
+
+    # -------------------------------------------------- snapshot coordination
+    def rotate(self, next_seq: Optional[int] = None) -> None:
+        """Starts a fresh segment (after a snapshot): future records land in
+        ``wal_<next_seq>.log`` so fully-superseded segments become unlinkable
+        units."""
+        self._open_segment(self.last_seq + 1 if next_seq is None else next_seq)
+
+    def gc(self, floor_seq: int) -> int:
+        """Unlinks segments whose records are *all* ≤ ``floor_seq`` (the
+        oldest retained snapshot's last applied seq). A segment qualifies
+        exactly when the next segment starts at or before floor_seq + 1 —
+        the newest segment never qualifies. Returns segments removed."""
+        segs = self.segments()
+        removed = 0
+        crash_point("wal.pre_gc")
+        for (first, path), (nxt_first, _) in zip(segs, segs[1:]):
+            if nxt_first <= floor_seq + 1:
+                os.unlink(path)
+                removed += 1
+        if removed:
+            fsync_dir(self.directory)
+        crash_point("wal.post_gc")
+        return removed
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._sync()
+            self._f.close()
+            self._f = None

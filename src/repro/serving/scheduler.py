@@ -109,19 +109,35 @@ class MaintenanceDriver:
     every ``interval``-th tick, so the ingest-while-search steady state pays
     a small, constant maintenance tax per tick instead of rare large stalls.
     The engine calls ``tick()`` after each decode step; a no-op maintain
-    costs one O(K) planning pass."""
+    costs one O(K) planning pass.
 
-    def __init__(self, index, budget_rows: int = 256, interval: int = 4):
+    When the index is durable (has a ``snapshot()`` method) and
+    ``snapshot_interval > 0``, every ``snapshot_interval``-th tick also
+    writes a versioned snapshot — bounding crash-recovery replay at roughly
+    one snapshot interval's worth of ops. A no-change snapshot is a no-op
+    inside ``DurableHMGIIndex.snapshot`` itself."""
+
+    def __init__(self, index, budget_rows: int = 256, interval: int = 4,
+                 snapshot_interval: int = 0):
         self.index = index
         self.budget_rows = budget_rows
         self.interval = max(int(interval), 1)
+        self.snapshot_interval = max(int(snapshot_interval), 0)
         self.ticks = 0
         self.runs = 0
+        self.snapshots = 0
         self.last_report = None
 
     def tick(self):
         self.ticks += 1
-        if self.index is None or self.ticks % self.interval:
+        if self.index is None:
+            return None
+        if (self.snapshot_interval
+                and self.ticks % self.snapshot_interval == 0
+                and hasattr(self.index, "snapshot")):
+            if self.index.snapshot() is not None:
+                self.snapshots += 1
+        if self.ticks % self.interval:
             return None
         self.last_report = self.index.maintain(budget=self.budget_rows)
         self.runs += 1
