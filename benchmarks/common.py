@@ -56,6 +56,18 @@ def timeit(fn: Callable, *args, trials: int = 5, warmup: int = 2, **kw) -> float
     return float(np.median(ts))
 
 
+def total_compiles() -> int:
+    """Distinct compiled signatures currently cached across the hot jitted
+    entry points (staticcheck's HMG103 registry). Every bench row reports
+    the running total so respecialisation shows up as a climbing
+    ``n_compiles`` column long before the CI budget gate trips."""
+    try:
+        from tools.staticcheck.registry import total_cache_size
+    except ImportError:        # bench run outside the repo root
+        return -1
+    return total_cache_size()
+
+
 def build_hmgi(corpus, *, bits=8, n_partitions=32, n_probe=8, seed=0,
                adaptive=True, **over):
     cfg = get_config("hmgi").replace(

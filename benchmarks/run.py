@@ -15,7 +15,9 @@
   persistence_bench — durability: snapshot write/restore latency, WAL append
                   overhead on ingest, recovery time vs replay length
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived,n_compiles`` CSV — ``n_compiles`` is the
+running count of distinct compiled signatures across the staticcheck
+(HMG103) registry entries, so jit respecialisation is visible per row.
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module>]
 """
 from __future__ import annotations
@@ -37,9 +39,13 @@ def main() -> None:
 
     rows = []
 
+    from benchmarks.common import total_compiles
+
     def report(name: str, us_per_call: float, derived: str = ""):
-        rows.append((name, us_per_call, derived))
-        print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+        n_compiles = total_compiles()
+        rows.append((name, us_per_call, derived, n_compiles))
+        print(f"{name},{us_per_call:.3f},{derived},{n_compiles}",
+              flush=True)
 
     from benchmarks import (ablations, filtered_bench, hybrid_bench,
                             kernels_bench, maintenance_bench, paper_tables,
@@ -53,7 +59,7 @@ def main() -> None:
             "persistence_bench": persistence_bench}
     selected = [mods[args.only]] if args.only else list(mods.values())
 
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,n_compiles")
     failed = 0
     for mod in selected:
         try:

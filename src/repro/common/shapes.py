@@ -1,0 +1,39 @@
+"""Shape-padding helpers for static args of jitted entry points.
+
+Every distinct Python-int value reaching a ``static_argnames`` parameter
+compiles a new executable. Data-dependent widths (live-row counts, filter
+cardinalities, drain sizes) must therefore be quantised before they touch a
+jit boundary: ``pow2_round`` gives O(log n) distinct values over any range,
+``pad_to_chunk`` gives one value per chunk multiple. staticcheck's HMG002
+recognises both helpers (and the inline ``(x - 1).bit_length()`` idiom) as
+sanctioned routes; raw ``int(...)``/``len(...)`` feeding a static arg is a
+violation.
+"""
+from __future__ import annotations
+
+
+def pow2_round(n: int, *, lo: int = 1, hi: int | None = None) -> int:
+    """Smallest power of two >= n, clamped to [lo, hi].
+
+    The PR 2 ``k_scan`` discipline: a scan width that doubles instead of
+    tracking the exact candidate count takes at most log2(hi) distinct
+    values, so the executor's adaptive widening reuses compiled
+    executables instead of respecialising per batch."""
+    n = max(int(n), 1)
+    v = 1 << (n - 1).bit_length()
+    v = max(v, lo)
+    if hi is not None:
+        v = min(v, hi)
+    return v
+
+
+def pad_to_chunk(n: int, chunk: int) -> int:
+    """Smallest multiple of ``chunk`` >= n (n=0 stays 0).
+
+    The PR 5 drain discipline: transfer widths padded to a fixed chunk
+    compile once per chunk count, not once per occupancy."""
+    chunk = int(chunk)
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    n = int(n)
+    return ((n + chunk - 1) // chunk) * chunk

@@ -58,6 +58,7 @@ _SHARD_MAP_KW = (
     if "check_vma" in _inspect.signature(_shard_map).parameters
     else {"check_rep": False})
 
+from repro.common.shapes import pad_to_chunk
 from repro.core import partitioner
 from repro.core.graph_store import mask_pass
 from repro.core.quantization import QuantizedVectors, quantize
@@ -80,7 +81,7 @@ def _probe_block_n(m: int, qb: int, d: int) -> int:
     waste (P·cap is rarely block-aligned), so the whole per-query slab runs
     as one step, padded only to the chunk size."""
     if _interpret_mode():
-        return ((m + _CHUNK - 1) // _CHUNK) * _CHUNK
+        return pad_to_chunk(m, _CHUNK)
     budget = 8 * 1024 * 1024
     bn = budget // (5 * max(qb, 1) * max(d, 1))
     return max(_CHUNK, min(_BLOCK_N, (bn // _CHUNK) * _CHUNK))

@@ -32,6 +32,7 @@ def build(key, vectors: jax.Array, *, degree: int = 16,
     index, _ = ivf_mod.build(key, vectors, jnp.arange(n), n_partitions=min(n_partitions, n),
                              bits=bits, capacity=max(2 * n // min(n_partitions, n) + 1, 8))
     # each node's approx m+1 nearest (self included) via the IVF index
+    # staticcheck: disable=HMG003 (build-time scan over a throwaway index just built from `vectors`; no MVCC state exists yet)
     _, ids = ivf_mod.search(index, vectors, n_probe=min(4, n_partitions), k=m + 1)
     # drop self-matches
     self_id = jnp.arange(n)[:, None]

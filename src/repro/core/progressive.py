@@ -25,14 +25,20 @@ class AnytimeResult(NamedTuple):
 
 def progressive_search(index: IVFIndex, queries: jax.Array, *, k: int,
                        probe_schedule: Sequence[int] = (1, 2, 4, 8, 16),
-                       budget_s: Optional[float] = None
+                       budget_s: Optional[float] = None,
+                       node_pass: Optional[jax.Array] = None
                        ) -> Iterator[AnytimeResult]:
-    """Yields monotonically improving results; stops at budget or schedule end."""
+    """Yields monotonically improving results; stops at budget or schedule end.
+
+    node_pass: optional (N,) visibility mask threaded into every round's
+    scan — anytime refinement must honour the same MVCC/tombstone view as a
+    one-shot search, or a round could resurface deleted rows."""
     t0 = time.perf_counter()
     best = None
     for rnd, np_ in enumerate(probe_schedule):
         np_ = min(np_, index.n_partitions)
-        sv, si = ivf_mod.search(index, queries, n_probe=np_, k=k)
+        sv, si = ivf_mod.search(index, queries, n_probe=np_, k=k,
+                                node_pass=node_pass)
         if best is None:
             best = (sv, si)
         else:

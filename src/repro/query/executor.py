@@ -31,6 +31,7 @@ from repro.core.fusion import (FusionWeights, adaptive_weights,
                                fuse_topk_sparse, scatter_sim)
 from repro.core.index import _fuse_candidates
 from repro.core.partitioner import assign_topk
+from repro.common.shapes import pow2_round
 from repro.kernels.ivf_topk.ref import pad_topk
 from repro.query.planner import (PhysicalPlan, PRescore, PSeed, PSetOp,
                                  PTraverse)
@@ -116,7 +117,7 @@ def run_seed(index, s: PSeed, node_pass) -> State:
                 n_probe * m.ivf.capacity + m.delta.ids.shape[0])
     # pow2-round: k_scan is a static jit arg, so raw selectivity-derived
     # widths would recompile the scan pipeline per distinct batch
-    k_scan = min(max(k, 1 << (s.filter_plan.k_scan - 1).bit_length()), k_max)
+    k_scan = min(max(k, pow2_round(s.filter_plan.k_scan)), k_max)
     while True:
         sv, si = search_raw(index, m, q, probes, n_probe, k_scan, impl=s.impl,
                             sharded=sharded)

@@ -1,0 +1,404 @@
+"""staticcheck: per-rule good/bad fixtures, pragma discipline, --fix
+rewrites, budget round-trip, and a CLI smoke run over src/.
+
+AST-rule fixtures are inline source snippets checked through
+``astrules.check_source`` at hot-path/persistence pseudo-paths — nothing is
+imported or executed. Trace-rule fixtures build tiny synthetic jaxprs, so
+the detectors are exercised without tracing the real registry entries
+(which the CI staticcheck job covers end to end).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))            # make `tools` importable
+
+from tools.staticcheck import Violation, sort_violations          # noqa: E402
+from tools.staticcheck.astrules import check_source               # noqa: E402
+from tools.staticcheck.budget import (check_budgets, load_budgets,  # noqa: E402
+                                      save_budgets)
+from tools.staticcheck.fixes import (insert_mvcc_kwargs,          # noqa: E402
+                                     normalize_pragmas)
+from tools.staticcheck.pragmas import filter_suppressed, scan_pragmas  # noqa: E402
+
+HOT = "src/repro/core/ivf.py"            # a hot-path pseudo-file
+PERSIST = "src/repro/persistence/x.py"   # a persistence pseudo-file
+
+
+def run_rules(path, src, rule=None):
+    src = textwrap.dedent(src)
+    vs = check_source(path, src, {rule} if rule else None)
+    pragmas = scan_pragmas(path, src)
+    return sort_violations(filter_suppressed(vs, pragmas)
+                           + pragmas.violations)
+
+
+def rules_of(vs):
+    return [v.rule for v in vs]
+
+
+# ------------------------------------------------------------------- HMG001
+def test_hmg001_bad_host_sync_in_jit():
+    vs = run_rules(HOT, """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            a = float(x.sum())
+            b = np.square(x)
+            return x.item()
+    """, rule="HMG001")
+    assert rules_of(vs) == ["HMG001"] * 3
+    assert vs[0].line == 7
+
+
+def test_hmg001_bad_lax_callback():
+    vs = run_rules(HOT, """
+        import jax
+
+        def outer(xs):
+            def body(c, x):
+                return c + x.item(), None
+            return jax.lax.scan(body, 0.0, xs)
+    """, rule="HMG001")
+    assert rules_of(vs) == ["HMG001"]
+
+
+def test_hmg001_good_host_side_code():
+    # host orchestration in a hot module is fine — only traced fns count
+    vs = run_rules(HOT, """
+        import numpy as np
+
+        def build(rows):
+            n = int(np.sum(rows))
+            return np.zeros(n)
+    """, rule="HMG001")
+    assert vs == []
+
+
+def test_hmg001_only_fires_in_hot_modules():
+    vs = run_rules("src/repro/serving/batcher.py", """
+        import jax
+
+        @jax.jit
+        def f(x):
+            return x.item()
+    """, rule="HMG001")
+    assert vs == []
+
+
+# ------------------------------------------------------------------- HMG002
+def test_hmg002_bad_raw_int_to_static_arg():
+    vs = run_rules(HOT, """
+        def caller(index, q, batch):
+            k = int(batch.shape[0])
+            return search(index, q, n_probe=4, k=k, node_pass=None)
+    """, rule="HMG002")
+    assert rules_of(vs) == ["HMG002"]
+    assert "'k'" in vs[0].message
+
+
+def test_hmg002_good_pow2_routed():
+    vs = run_rules(HOT, """
+        from repro.common.shapes import pow2_round
+
+        def caller(index, q, batch):
+            k = pow2_round(len(batch))
+            k = min(2 * k, 128)
+            return search(index, q, n_probe=4, k=k, node_pass=None)
+    """, rule="HMG002")
+    assert vs == []
+
+
+def test_hmg002_good_bit_length_idiom():
+    vs = run_rules(HOT, """
+        def caller(index, q, batch):
+            m = len(batch)
+            k = 1 << (m - 1).bit_length()
+            return search(index, q, n_probe=4, k=k, node_pass=None)
+    """, rule="HMG002")
+    assert vs == []
+
+
+def test_hmg002_positional_static_arg():
+    vs = run_rules("src/repro/query/planner.py", """
+        def go(index, m, q, probes, width):
+            return search_raw(index, m, q, probes, 4, int(width))
+    """, rule="HMG002")
+    assert rules_of(vs) == ["HMG002"]
+
+
+# ------------------------------------------------------------------- HMG003
+def test_hmg003_bad_missing_visibility_kwarg():
+    vs = run_rules("src/repro/core/progressive.py", """
+        from repro.core import ivf as ivf_mod
+
+        def go(index, q, k):
+            return ivf_mod.search(index, q, n_probe=4, k=k)
+    """, rule="HMG003")
+    assert rules_of(vs) == ["HMG003"]
+    assert vs[0].fixable
+
+
+def test_hmg003_good_explicit_opt_out_and_threading():
+    vs = run_rules("src/repro/core/progressive.py", """
+        from repro.core import ivf as ivf_mod
+
+        def go(index, q, k, mask):
+            a = ivf_mod.search(index, q, n_probe=4, k=k, node_pass=None)
+            b = search_with_delta(index, d, q, n_probe=4, k=k,
+                                  mvcc_filter=mask)
+            return a, b
+    """, rule="HMG003")
+    assert vs == []
+
+
+def test_hmg003_pragma_with_reason_suppresses():
+    vs = run_rules("src/repro/core/x.py", """
+        def go(index, q, k):
+            # staticcheck: disable=HMG003 (fresh build-time index)
+            return ivf_mod.search(index, q, n_probe=4, k=k)
+    """)
+    assert vs == []
+
+
+def test_hmg003_bare_pragma_suppresses_nothing():
+    vs = run_rules("src/repro/core/x.py", """
+        def go(index, q, k):
+            # staticcheck: disable=HMG003
+            return ivf_mod.search(index, q, n_probe=4, k=k)
+    """)
+    assert rules_of(vs) == ["HMG000", "HMG003"]
+
+
+def test_unknown_rule_id_in_pragma_is_flagged():
+    vs = run_rules("src/repro/core/x.py", """
+        x = 1  # staticcheck: disable=HMG999 (whatever)
+    """)
+    assert rules_of(vs) == ["HMG000"]
+    assert "HMG999" in vs[0].message
+
+
+# ------------------------------------------------------------------- HMG004
+def test_hmg004_bad_rename_without_fsync():
+    vs = run_rules(PERSIST, """
+        import os
+
+        def publish(tmp, final):
+            os.replace(tmp, final)
+    """, rule="HMG004")
+    assert rules_of(vs) == ["HMG004"]
+
+
+def test_hmg004_good_fsync_then_rename():
+    vs = run_rules(PERSIST, """
+        import os
+
+        def publish(tmp, final, fd):
+            os.fsync(fd)
+            os.replace(tmp, final)
+    """, rule="HMG004")
+    assert vs == []
+
+
+def test_hmg004_bad_apply_before_wal_append():
+    vs = run_rules(PERSIST, """
+        class D(Base):
+            def insert(self, op):
+                r = super().insert(op)
+                self._log.append(op)
+                return r
+    """, rule="HMG004")
+    assert rules_of(vs) == ["HMG004"]
+
+
+def test_hmg004_good_append_then_apply():
+    vs = run_rules(PERSIST, """
+        class D(Base):
+            def insert(self, op):
+                self._log.append(op)
+                return super().insert(op)
+    """, rule="HMG004")
+    assert vs == []
+
+
+def test_hmg004_scoped_to_persistence():
+    vs = run_rules("src/repro/data/loader.py", """
+        import os
+
+        def swap(a, b):
+            os.replace(a, b)
+    """, rule="HMG004")
+    assert vs == []
+
+
+# ------------------------------------------------------------- trace layer
+jax = pytest.importorskip("jax")
+
+
+def _lint(fn, args, max_upcast=None):
+    from tools.staticcheck.jaxpr_rules import lint_jaxpr
+    from tools.staticcheck.registry import TraceEntry
+    jaxpr = jax.make_jaxpr(fn)(*args).jaxpr
+    return lint_jaxpr(TraceEntry("fixture", None,
+                                 max_upcast_elems=max_upcast), jaxpr)
+
+
+def test_hmg101_bad_slab_scale_dequant():
+    import jax.numpy as jnp
+
+    def bad(slab_i8, q):
+        return q @ slab_i8.astype(jnp.float32).T
+
+    vs = _lint(bad, (jnp.zeros((4096, 32), jnp.int8),
+                     jnp.zeros((4, 32), jnp.float32)), max_upcast=1024)
+    assert rules_of(vs) == ["HMG101"]
+    assert "(4096, 32)" in vs[0].message
+
+
+def test_hmg101_good_bounded_rescore_convert():
+    import jax.numpy as jnp
+
+    def good(rows_i8, q):
+        # k*chunk-sized gather: under the budget, the intended pattern
+        return q @ rows_i8.astype(jnp.float32).T
+
+    vs = _lint(good, (jnp.zeros((16, 32), jnp.int8),
+                      jnp.zeros((4, 32), jnp.float32)), max_upcast=1024)
+    assert vs == []
+
+
+def test_hmg102_bad_device_put_in_trace():
+    import jax.numpy as jnp
+
+    def bad(x):
+        return jax.device_put(x) * 2
+
+    vs = _lint(jax.jit(bad), (jnp.zeros((8,), jnp.float32),))
+    assert rules_of(vs) == ["HMG102"]
+
+
+def test_hmg102_good_pure_compute():
+    import jax.numpy as jnp
+
+    def good(x):
+        return x * 2 + 1
+
+    vs = _lint(jax.jit(good), (jnp.zeros((8,), jnp.float32),))
+    assert vs == []
+
+
+# ------------------------------------------------------------------- HMG103
+def test_budget_roundtrip(tmp_path):
+    p = tmp_path / "budgets.json"
+    measured = {"ivf.search": 4, "delta.insert": 2}
+    save_budgets(measured, p)
+    assert load_budgets(p) == measured
+    data = json.loads(p.read_text())
+    assert data["workload"]["phases"][0] == "ingest"
+
+
+def test_budget_gate_fails_on_respecialisation():
+    # the scratch-branch scenario: an unpadded shape arg starts compiling
+    # one signature per batch, blowing past the budgeted count
+    budgets = {"ivf.search": 4}
+    vs = check_budgets({"ivf.search": 9}, budgets)
+    assert rules_of(vs) == ["HMG103"]
+    assert "9 distinct signatures" in vs[0].message
+
+
+def test_budget_gate_passes_within_budget():
+    assert check_budgets({"ivf.search": 3}, {"ivf.search": 4}) == []
+
+
+def test_budget_gate_flags_unbudgeted_entry():
+    vs = check_budgets({"new.entry": 1}, {})
+    assert rules_of(vs) == ["HMG103"]
+
+
+def test_checked_in_budgets_cover_registry():
+    from tools.staticcheck.registry import BUDGET_ENTRIES
+    budgets = load_budgets()
+    assert set(budgets) == {name for name, _, _ in BUDGET_ENTRIES}
+
+
+# --------------------------------------------------------------------- --fix
+def test_fix_normalizes_pragma_spelling():
+    src = "x = 1  #staticcheck:disable = hmg003 , HMG001  (why not)\n"
+    out, n = normalize_pragmas(src)
+    assert n == 1
+    assert out == "x = 1  # staticcheck: disable=HMG001,HMG003 (why not)\n"
+    # idempotent
+    again, n2 = normalize_pragmas(out)
+    assert (again, n2) == (out, 0)
+
+
+def test_fix_never_invents_a_reason():
+    src = "x = 1  # staticcheck: disable=HMG003\n"
+    out, n = normalize_pragmas(src)
+    assert (out, n) == (src, 0)
+
+
+def test_fix_inserts_node_pass_kwarg():
+    src = textwrap.dedent("""
+        def go(index, q, k):
+            return ivf_mod.search(index, q,
+                                  n_probe=4, k=k)
+    """)
+    vs = check_source("src/repro/core/x.py", src, {"HMG003"})
+    assert rules_of(vs) == ["HMG003"]
+    out, n = insert_mvcc_kwargs(src, vs)
+    assert n == 1
+    assert "k=k, node_pass=None)" in out
+    assert check_source("src/repro/core/x.py", out, {"HMG003"}) == []
+
+
+# ----------------------------------------------------------------- CLI smoke
+def test_cli_clean_on_tree():
+    r = subprocess.run([sys.executable, "-m", "tools.staticcheck"],
+                       cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_cli_reports_rule_and_location(tmp_path):
+    bad = tmp_path / "src" / "repro" / "persistence"
+    bad.mkdir(parents=True)
+    f = bad / "bad.py"
+    f.write_text("import os\n\ndef pub(a, b):\n    os.replace(a, b)\n")
+    r = subprocess.run([sys.executable, "-m", "tools.staticcheck", str(f)],
+                       cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 1
+    assert "HMG004" in r.stdout and "bad.py:4" in r.stdout
+
+
+def test_cli_json_and_explain():
+    r = subprocess.run([sys.executable, "-m", "tools.staticcheck",
+                        "--json", "src/repro/core"],
+                       cwd=REPO, capture_output=True, text=True)
+    assert r.returncode == 0
+    assert json.loads(r.stdout) == []
+    r2 = subprocess.run([sys.executable, "-m", "tools.staticcheck",
+                         "--explain", "HMG002"],
+                        cwd=REPO, capture_output=True, text=True)
+    assert r2.returncode == 0 and "Recompile" in r2.stdout
+
+
+# -------------------------------------------------------- shapes helpers
+def test_shapes_helpers():
+    from repro.common.shapes import pad_to_chunk, pow2_round
+    assert pow2_round(1) == 1
+    assert pow2_round(5) == 8
+    assert pow2_round(8) == 8
+    assert pow2_round(900, hi=512) == 512
+    assert pad_to_chunk(0, 16) == 0
+    assert pad_to_chunk(1, 16) == 16
+    assert pad_to_chunk(16, 16) == 16
+    assert pad_to_chunk(17, 16) == 32
+    with pytest.raises(ValueError):
+        pad_to_chunk(4, 0)

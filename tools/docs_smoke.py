@@ -75,14 +75,31 @@ def main() -> int:
     ns = build_namespace()
     failures = 0
     for doc in docs:
-        for i, snippet in enumerate(FENCE.findall(doc.read_text())):
-            label = f"{doc.relative_to(ROOT)}#fence{i}"
+        rel = doc.relative_to(ROOT)
+        text = doc.read_text()
+        for i, m in enumerate(FENCE.finditer(text)):
+            snippet = m.group(1)
+            # line of the fence body inside the md file; padding the
+            # snippet with blank lines makes every traceback lineno a real
+            # line number in the document
+            fence_line = text.count("\n", 0, m.start(1)) + 1
+            label = f"{rel}#fence{i}"
+            padded = "\n" * (fence_line - 1) + snippet
             try:
-                exec(compile(snippet, label, "exec"), ns)   # noqa: S102
-                print(f"ok   {label}")
+                exec(compile(padded, str(rel), "exec"), ns)  # noqa: S102
+                print(f"ok   {label} ({rel}:{fence_line})")
             except Exception as exc:                        # noqa: BLE001
                 failures += 1
-                print(f"FAIL {label}: {type(exc).__name__}: {exc}")
+                line = fence_line
+                tb = exc.__traceback__
+                while tb is not None:
+                    if tb.tb_frame.f_code.co_filename == str(rel):
+                        line = tb.tb_lineno
+                    tb = tb.tb_next
+                if isinstance(exc, SyntaxError) and exc.filename == str(rel):
+                    line = exc.lineno or fence_line
+                print(f"FAIL {label} at {rel}:{line}: "
+                      f"{type(exc).__name__}: {exc}")
     print(f"# docs-smoke: {failures} failures")
     return 1 if failures else 0
 

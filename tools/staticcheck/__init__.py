@@ -1,0 +1,55 @@
+"""Repo-invariant static analysis for the HMGI codebase.
+
+Two layers, one CLI (``python -m tools.staticcheck``):
+
+**Layer 1 — Python-AST lints** (stdlib ``ast``; the checked modules are
+never imported): named rules encoding invariants this repo has already paid
+to learn, each one keyed to the PR that fixed the bug it prevents
+(docs/DESIGN.md §8):
+
+  HMG001  no host-sync ops inside traced functions of hot-path modules
+  HMG002  recompile hazards: data-dependent Python ints reaching static
+          shape args of jitted entry points without pow2/chunk padding
+  HMG003  MVCC discipline: scan entry points must thread the visibility /
+          ``node_pass`` kwargs explicitly
+  HMG004  persistence ordering: fsync-before-rename, WAL append-before-apply
+  HMG000  pragma discipline: ``# staticcheck: disable=RULE (reason)`` —
+          the reason is mandatory; a bare disable is itself a violation
+
+**Layer 2 — trace-level analysis** (imports jax + the repo): the registry
+(``tools/staticcheck/registry.py``) names hot jitted entry points with
+canonical shapes; each is traced to a jaxpr and linted:
+
+  HMG101  slab-scale int8 -> f32 ``convert_element_type`` inside the int8
+          scan lane before the rescore boundary (HBM dequant regression)
+  HMG102  ``device_put`` / host-callback transfer ops inside a traced region
+  HMG103  compile-count budget: the canonical mixed workload must not
+          compile more distinct signatures per entry point than
+          ``tools/staticcheck/budgets.json`` allows
+
+Suppression: append ``# staticcheck: disable=HMG003 (why it is safe here)``
+to the offending line (or the line directly above it). The reason is
+required. ``--fix`` normalises malformed pragmas and inserts provably
+default-equivalent missing kwargs for HMG003.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str          # "HMG001", ...
+    path: str          # repo-relative file (or entry name for trace rules)
+    line: int          # 1-based; 0 when the finding has no source anchor
+    message: str
+    fixable: bool = False
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: {self.rule}: {self.message}"
+
+
+def sort_violations(vs: List[Violation]) -> List[Violation]:
+    return sorted(vs, key=lambda v: (v.rule, v.path, v.line))

@@ -1,0 +1,215 @@
+"""CLI driver: ``python -m tools.staticcheck [paths...]``.
+
+Default run is the AST layer over ``src/repro`` (milliseconds, no jax).
+``--trace`` adds the jaxpr rules (HMG101/HMG102), ``--budget`` the
+compile-count gate (HMG103), ``--all`` everything; selecting a trace rule
+via ``--rule`` implies the layer it lives in. Exit status 0 iff no
+violations survive pragma suppression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import List, Optional, Set
+
+from tools.staticcheck import Violation, sort_violations
+from tools.staticcheck.astrules import check_source
+from tools.staticcheck.pragmas import filter_suppressed, scan_pragmas
+
+REPO_ROOT = Path(__file__).resolve().parents[2]
+DEFAULT_PATHS = ("src/repro",)
+
+EXPLAIN = {
+    "HMG000": (
+        "Pragma discipline. '# staticcheck: disable=RULE (reason)' — the "
+        "parenthesised reason is mandatory; a bare disable suppresses "
+        "nothing and is itself reported, as is a typo'd rule id. Keeps "
+        "the suppression inventory auditable (grep 'staticcheck: "
+        "disable')."),
+    "HMG001": (
+        "No host-sync ops inside traced functions of the hot-path "
+        "modules (core/ivf,delta,fusion,traversal, kernels/*, "
+        "query/executor). .item(), builtin float()/int() on traced "
+        "values, np.* calls and jax.device_get all force a device->host "
+        "round trip that serialises the dispatch queue mid-query. Traced "
+        "means jit-decorated defs, their nested defs, and local functions "
+        "handed to lax.scan/while_loop/cond/fori_loop/vmap; host-side "
+        "orchestration in the same files is exempt."),
+    "HMG002": (
+        "Recompile hazards. Static (shape-like) args of jitted entry "
+        "points compile one executable per distinct value; feeding them "
+        "data-dependent Python ints (int(...), len(...)) respecialises "
+        "per batch. Route the value through pow2_round/pad_to_chunk "
+        "(repro.common.shapes) so it takes O(log) distinct values. "
+        "Encodes PR 2's pow2-rounded k_scan and PR 5's fixed-(chunk,) "
+        "padded drains."),
+    "HMG003": (
+        "MVCC discipline. Every call into the scan entry points "
+        "(ivf.search, search_sharded, search_with_delta[_sharded], "
+        "_scan_delta) must spell a visibility kwarg (node_pass= / "
+        "mvcc_filter=) explicitly — an explicit =None documents the "
+        "opt-out — or carry a reasoned pragma. PRs 2-4 each fixed one "
+        "call site that silently returned tombstoned/superseded rows."),
+    "HMG004": (
+        "Persistence ordering. In persistence/ and checkpoint/: "
+        "os.replace/os.rename must be preceded by an fsync in the same "
+        "function (publish-after-durable), and WAL appends must precede "
+        "the state apply (log-then-apply is the recovery contract). "
+        "Encodes PR 6's crash-recovery matrix."),
+    "HMG101": (
+        "No slab-scale int8->f32 dequant outside the Pallas kernel. The "
+        "registry traces each hot entry point at canonical shapes; a "
+        "convert_element_type(int8->f32) bigger than the bounded rescore "
+        "gather (~2*Q*k*chunk*d elements) means the quantised slab is "
+        "being dequantised into HBM before the rescore boundary — the "
+        "memory-bandwidth regression the int8 lane exists to avoid. "
+        "In-kernel register casts (inside pallas_call) are the design "
+        "and are not flagged."),
+    "HMG102": (
+        "No device_put / host-callback transfer primitives inside traced "
+        "regions. Transfers belong at jit boundaries (e.g. the "
+        "documented host-level shard gather in search_with_delta_sharded "
+        "is fine — it is outside the jit)."),
+    "HMG103": (
+        "Compile-count budget. The canonical mixed workload (ingest -> "
+        "search -> update -> maintain -> search) runs against a fresh "
+        "index; distinct compiled signatures per registered entry point "
+        "are read off the jit caches and compared to "
+        "tools/staticcheck/budgets.json. More signatures than budgeted "
+        "fails — the regression gate PRs 2 and 5 needed. Re-baseline "
+        "with --write-budgets after intentional changes."),
+}
+
+_AST_RULES = {"HMG000", "HMG001", "HMG002", "HMG003", "HMG004"}
+_TRACE_RULES = {"HMG101", "HMG102"}
+_BUDGET_RULES = {"HMG103"}
+
+
+def iter_py_files(paths) -> List[Path]:
+    out: List[Path] = []
+    for p in paths:
+        p = Path(p)
+        if not p.is_absolute():
+            p = REPO_ROOT / p
+        if p.is_dir():
+            out.extend(sorted(p.rglob("*.py")))
+        elif p.suffix == ".py":
+            out.append(p)
+    return out
+
+
+def check_files(files: List[Path], rules: Optional[Set[str]],
+                fix: bool) -> List[Violation]:
+    from tools.staticcheck.fixes import apply_fixes
+
+    out: List[Violation] = []
+    for f in files:
+        rel = f.relative_to(REPO_ROOT).as_posix() if \
+            f.is_relative_to(REPO_ROOT) else f.as_posix()
+        source = f.read_text()
+        vs = check_source(rel, source, rules)
+        if fix:
+            fixed, counts = apply_fixes(rel, source, vs)
+            if counts:
+                f.write_text(fixed)
+                print(f"fixed {rel}: " + ", ".join(
+                    f"{k} x{n}" for k, n in counts.items()))
+                source = fixed
+                vs = check_source(rel, source, rules)
+        pragmas = scan_pragmas(rel, source)
+        vs = filter_suppressed(vs, pragmas)
+        if rules is None or "HMG000" in rules:
+            vs = vs + pragmas.violations
+        out.extend(vs)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.staticcheck",
+        description="HMGI repo-invariant static analysis "
+                    "(AST lints + jaxpr trace rules + compile budget).")
+    ap.add_argument("paths", nargs="*", default=list(DEFAULT_PATHS),
+                    help="files/dirs to lint (default: src/repro)")
+    ap.add_argument("--rule", action="append", default=None,
+                    metavar="RULE_ID",
+                    help="run only these rule ids (repeatable)")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit violations as a JSON array")
+    ap.add_argument("--explain", metavar="RULE_ID",
+                    help="print what a rule enforces and exit")
+    ap.add_argument("--fix", action="store_true",
+                    help="apply mechanical fixes (pragma normalisation, "
+                         "provably-default node_pass=None insertion)")
+    ap.add_argument("--trace", action="store_true",
+                    help="also run jaxpr trace rules (HMG101/HMG102)")
+    ap.add_argument("--budget", action="store_true",
+                    help="also run the compile-count budget gate (HMG103)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every layer (AST + trace + budget)")
+    ap.add_argument("--write-budgets", action="store_true",
+                    help="measure the canonical workload and rewrite "
+                         "budgets.json instead of gating")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        rid = args.explain.upper()
+        text = EXPLAIN.get(rid)
+        if text is None:
+            print(f"unknown rule id {rid}; known: "
+                  f"{', '.join(sorted(EXPLAIN))}", file=sys.stderr)
+            return 2
+        print(f"{rid}: {text}")
+        return 0
+
+    rules: Optional[Set[str]] = None
+    if args.rule:
+        rules = {r.strip().upper() for spec in args.rule
+                 for r in spec.split(",")}
+        unknown = rules - set(EXPLAIN)
+        if unknown:
+            print(f"unknown rule id(s): {', '.join(sorted(unknown))}",
+                  file=sys.stderr)
+            return 2
+
+    run_trace = args.trace or args.all or bool(
+        rules and rules & _TRACE_RULES)
+    run_budget = args.budget or args.all or args.write_budgets or bool(
+        rules and rules & _BUDGET_RULES)
+    run_ast = not args.write_budgets and (
+        rules is None or bool(rules & _AST_RULES))
+
+    violations: List[Violation] = []
+    if run_ast:
+        files = iter_py_files(args.paths)
+        violations.extend(check_files(files, rules, args.fix))
+    if run_trace:
+        from tools.staticcheck.jaxpr_rules import run_trace_rules
+        tv = run_trace_rules()
+        if rules:
+            tv = [v for v in tv if v.rule in rules]
+        violations.extend(tv)
+    if run_budget:
+        from tools.staticcheck.budget import run_budget_rule
+        violations.extend(run_budget_rule(write=args.write_budgets))
+        if args.write_budgets:
+            print("budgets.json rewritten from measured canonical "
+                  "workload")
+
+    violations = sort_violations(violations)
+    if args.as_json:
+        print(json.dumps([v.__dict__ for v in violations], indent=2))
+    else:
+        for v in violations:
+            print(v.format())
+        if violations:
+            print(f"\n{len(violations)} violation(s). "
+                  "Run --explain RULE_ID for the invariant; suppress "
+                  "with '# staticcheck: disable=RULE (reason)'.")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

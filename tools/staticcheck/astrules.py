@@ -1,0 +1,412 @@
+"""Layer 1: Python-AST lints (HMG001-HMG004).
+
+Checked modules are parsed, never imported — the rules here run in
+milliseconds and need no jax. Scope discipline is what keeps the rules
+honest: hot-path modules legitimately mix host-side orchestration (numpy,
+``int()`` on shapes) with traced code, so HMG001 only fires *inside*
+functions that are actually traced — jit-decorated defs, their nested
+defs, and local functions handed to ``lax.scan``/``while_loop``/``cond``/
+``fori_loop``/``vmap``.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import PurePosixPath
+from typing import Dict, List, Optional, Set, Tuple
+
+from tools.staticcheck import Violation
+from tools.staticcheck.registry import (
+    FSYNC_CALLS,
+    HAZARD_CALLS,
+    HOT_PATH_DIRS,
+    HOT_PATH_MODULES,
+    MVCC_ENTRY_POINTS,
+    PERSISTENCE_DIRS,
+    RENAME_CALLS,
+    SANCTIONED_SHAPE_HELPERS,
+    STATIC_INT_PARAMS,
+)
+
+_LAX_CALLBACK_OPS = {"scan", "while_loop", "cond", "fori_loop", "vmap",
+                     "switch", "checkpoint", "remat"}
+_HOST_SYNC_ATTRS = {"item", "block_until_ready", "tolist"}
+_NUMPY_ALIASES = {"np", "numpy", "onp"}
+
+
+def _posix(path: str) -> str:
+    return PurePosixPath(path).as_posix()
+
+
+def is_hot_module(path: str) -> bool:
+    p = _posix(path)
+    return (any(p.endswith(m) for m in HOT_PATH_MODULES)
+            or any(d.rstrip("/") + "/" in p for d in HOT_PATH_DIRS))
+
+
+def is_persistence_module(path: str) -> bool:
+    p = _posix(path)
+    return any(d.rstrip("/") + "/" in p for d in PERSISTENCE_DIRS)
+
+
+def _callee_name(call: ast.Call) -> Tuple[Optional[str], Optional[str]]:
+    """(receiver, name) — receiver is the dotted prefix's last segment,
+    None for bare names."""
+    f = call.func
+    if isinstance(f, ast.Name):
+        return None, f.id
+    if isinstance(f, ast.Attribute):
+        recv = f.value
+        if isinstance(recv, ast.Name):
+            return recv.id, f.attr
+        if isinstance(recv, ast.Attribute):
+            return recv.attr, f.attr
+        return "", f.attr
+    return None, None
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    """jax.jit / jit / functools.partial(jax.jit, ...) / pl.pallas_call."""
+    if isinstance(dec, ast.Call):
+        recv, name = _callee_name(dec)
+        if name == "partial":
+            return any(_is_jit_decorator(a) for a in dec.args)
+        return name in ("jit", "pallas_call")
+    if isinstance(dec, ast.Attribute):
+        return dec.attr in ("jit", "pallas_call")
+    if isinstance(dec, ast.Name):
+        return dec.id == "jit"
+    return False
+
+
+def _collect_traced_functions(tree: ast.Module) -> Set[ast.AST]:
+    """Function defs whose bodies execute under trace: jit-decorated defs
+    (plus everything nested inside them) and local defs passed by name to
+    lax control-flow / vmap combinators."""
+    by_name: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+
+    traced: Set[ast.AST] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(d) for d in node.decorator_list):
+                traced.add(node)
+        elif isinstance(node, ast.Call):
+            _, name = _callee_name(node)
+            if name in _LAX_CALLBACK_OPS:
+                for arg in node.args:
+                    if isinstance(arg, ast.Name):
+                        traced.update(by_name.get(arg.id, ()))
+                    elif isinstance(arg, ast.Lambda):
+                        traced.add(arg)
+
+    # nested defs inherit tracedness from their enclosing traced def
+    closed: Set[ast.AST] = set(traced)
+    for fn in traced:
+        for sub in ast.walk(fn):
+            if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                ast.Lambda)):
+                closed.add(sub)
+    return closed
+
+
+# --------------------------------------------------------------------- HMG001
+def check_hmg001(path: str, tree: ast.Module) -> List[Violation]:
+    if not is_hot_module(path):
+        return []
+    out: List[Violation] = []
+    traced = _collect_traced_functions(tree)
+
+    def scan_fn(fn: ast.AST) -> None:
+        own_nested = {sub for sub in ast.walk(fn)
+                      if sub is not fn and isinstance(
+                          sub, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        for node in ast.walk(fn):
+            # nested defs are scanned on their own traced pass
+            if any(node is s or _contains(s, node) for s in own_nested):
+                continue
+            if not isinstance(node, ast.Call):
+                continue
+            recv, name = _callee_name(node)
+            if name in _HOST_SYNC_ATTRS and isinstance(node.func,
+                                                       ast.Attribute):
+                out.append(Violation(
+                    "HMG001", path, node.lineno,
+                    f".{name}() forces a host sync inside a traced "
+                    "function — keep device values on device"))
+            elif recv is None and name in ("float", "int") and node.args:
+                out.append(Violation(
+                    "HMG001", path, node.lineno,
+                    f"builtin {name}() on a traced value blocks and "
+                    "pulls to host — use jnp casts instead"))
+            elif recv in _NUMPY_ALIASES:
+                out.append(Violation(
+                    "HMG001", path, node.lineno,
+                    f"host numpy call {recv}.{name}() inside a traced "
+                    "function — use jax.numpy"))
+            elif recv == "jax" and name == "device_get":
+                out.append(Violation(
+                    "HMG001", path, node.lineno,
+                    "jax.device_get inside a traced function"))
+
+    seen: Set[int] = set()
+    for fn in traced:
+        if id(fn) in seen:
+            continue
+        seen.add(id(fn))
+        scan_fn(fn)
+    return out
+
+
+def _contains(outer: ast.AST, node: ast.AST) -> bool:
+    return any(node is sub for sub in ast.walk(outer))
+
+
+# --------------------------------------------------------------------- HMG002
+def _expr_has_sanctioner(expr: ast.AST) -> bool:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            _, name = _callee_name(node)
+            if name in SANCTIONED_SHAPE_HELPERS:
+                return True
+    return False
+
+
+def _expr_has_hazard(expr: ast.AST) -> bool:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Call):
+            recv, name = _callee_name(node)
+            if recv is None and name in HAZARD_CALLS:
+                return True
+    return False
+
+
+def _assignments_in_scope(tree: ast.Module) -> Dict[Tuple[int, str],
+                                                    List[ast.expr]]:
+    """(scope id, name) -> assigned value expressions, per function scope
+    (module scope keyed on id(tree))."""
+    out: Dict[Tuple[int, str], List[ast.expr]] = {}
+
+    def visit(scope_id: int, body) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                visit(id(stmt), stmt.body)
+                continue
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    continue
+                val = None
+                targets: List[ast.expr] = []
+                if isinstance(node, ast.Assign):
+                    val, targets = node.value, node.targets
+                elif isinstance(node, ast.AnnAssign) and node.value:
+                    val, targets = node.value, [node.target]
+                elif isinstance(node, ast.AugAssign):
+                    val, targets = node.value, [node.target]
+                if val is None:
+                    continue
+                for t in targets:
+                    if isinstance(t, ast.Name):
+                        out.setdefault((scope_id, t.id), []).append(val)
+
+    visit(id(tree), tree.body)
+    return out
+
+
+def check_hmg002(path: str, tree: ast.Module) -> List[Violation]:
+    out: List[Violation] = []
+    assigns = _assignments_in_scope(tree)
+
+    # map every call back to its enclosing function scope
+    scope_of: Dict[int, int] = {}
+
+    def mark(scope_id: int, body) -> None:
+        for stmt in body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                mark(id(stmt), stmt.body)
+                continue
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    mark(id(node), node.body)
+                elif isinstance(node, ast.Call):
+                    scope_of.setdefault(id(node), scope_id)
+
+    mark(id(tree), tree.body)
+
+    def value_is_sanctioned(expr: ast.AST, scope_id: int) -> bool:
+        """Sanctioned directly, or via any one-level Name resolution —
+        if any assignment feeding the name routes through a padding
+        helper, the call site inherits the sanction (covers doubling
+        loops like ``k = min(2*k, k_max)`` whose seed is pow2-rounded)."""
+        if _expr_has_sanctioner(expr):
+            return True
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name):
+                for scope in (scope_id, id(tree)):
+                    for val in assigns.get((scope, node.id), ()):
+                        if _expr_has_sanctioner(val):
+                            return True
+        return False
+
+    def value_is_hazard(expr: ast.AST, scope_id: int) -> bool:
+        if _expr_has_hazard(expr):
+            return True
+        for node in ast.walk(expr):
+            if isinstance(node, ast.Name):
+                for scope in (scope_id, id(tree)):
+                    vals = assigns.get((scope, node.id), ())
+                    if any(_expr_has_hazard(v) and
+                           not _expr_has_sanctioner(v) for v in vals):
+                        return True
+        return False
+
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        _, name = _callee_name(node)
+        params = STATIC_INT_PARAMS.get(name or "")
+        if not params:
+            continue
+        scope_id = scope_of.get(id(node), id(tree))
+        exprs: List[Tuple[str, ast.expr]] = []
+        for pname, pos in params.items():
+            for kw in node.keywords:
+                if kw.arg == pname:
+                    exprs.append((pname, kw.value))
+            if pos is not None and pos < len(node.args):
+                exprs.append((pname, node.args[pos]))
+        for pname, expr in exprs:
+            if value_is_hazard(expr, scope_id) and \
+                    not value_is_sanctioned(expr, scope_id):
+                out.append(Violation(
+                    "HMG002", path, node.lineno,
+                    f"data-dependent Python int reaches static arg "
+                    f"'{pname}' of jitted entry '{name}' — every distinct "
+                    "value compiles a new executable; route through "
+                    "pow2_round/pad_to_chunk (repro.common.shapes)"))
+    return out
+
+
+# --------------------------------------------------------------------- HMG003
+def check_hmg003(path: str, tree: ast.Module) -> List[Violation]:
+    p = _posix(path)
+    # the defining modules themselves are exempt (they implement the entry
+    # points; internal self-calls are audited by review, not the linter)
+    if p.endswith("src/repro/core/delta.py"):
+        return []
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        recv, name = _callee_name(node)
+        spec = MVCC_ENTRY_POINTS.get(name or "")
+        if not spec:
+            continue
+        receivers, kwargs_ok = spec
+        if receivers is not None and recv not in receivers:
+            continue
+        if p.endswith("src/repro/core/ivf.py") and name in (
+                "search", "search_sharded"):
+            continue
+        spelled = {kw.arg for kw in node.keywords}
+        if not spelled.intersection(kwargs_ok):
+            out.append(Violation(
+                "HMG003", path, node.lineno,
+                f"call to scan entry '{name}' does not thread a "
+                f"visibility kwarg ({' or '.join(kwargs_ok)}); pass it "
+                "explicitly (an explicit =None documents the opt-out) or "
+                "pragma with a reason", fixable=True))
+    return out
+
+
+# --------------------------------------------------------------------- HMG004
+def _call_names_in(fn: ast.AST):
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            recv, name = _callee_name(node)
+            yield node, recv, name
+
+
+def check_hmg004(path: str, tree: ast.Module) -> List[Violation]:
+    if not is_persistence_module(path):
+        return []
+    out: List[Violation] = []
+    for fn in ast.walk(tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        calls = list(_call_names_in(fn))
+
+        # rename/replace must be dominated by an fsync earlier in the fn
+        for node, recv, name in calls:
+            if recv == "os" and name in RENAME_CALLS:
+                fsync_before = any(
+                    n in FSYNC_CALLS and c.lineno <= node.lineno
+                    for c, _, n in calls)
+                if not fsync_before:
+                    out.append(Violation(
+                        "HMG004", path, node.lineno,
+                        f"os.{name} without a preceding fsync in "
+                        f"'{fn.name}' — a crash can publish an "
+                        "incompletely-written file"))
+
+        # WAL append-before-apply: a fn that both appends to a log and
+        # applies (yield-style context manager, or super() delegation)
+        # must append first
+        log_appends = [c for c, recv, n in calls
+                       if n == "append" and recv in ("_log", "log",
+                                                     "oplog", "_oplog")]
+        if log_appends:
+            append_line = min(c.lineno for c in log_appends)
+            yields = [n.lineno for n in ast.walk(fn)
+                      if isinstance(n, (ast.Yield, ast.YieldFrom))]
+            applies = [c.lineno for c, recv, n in calls
+                       if recv == "super" or (n or "").startswith("_apply")
+                       or recv == "_apply"]
+            # super() shows up as call-of-call: super().insert(...)
+            for c, recv, n in calls:
+                if isinstance(c.func, ast.Attribute) and \
+                        isinstance(c.func.value, ast.Call):
+                    r2, n2 = _callee_name(c.func.value)
+                    if n2 == "super":
+                        applies.append(c.lineno)
+            for line in yields + applies:
+                if line < append_line:
+                    out.append(Violation(
+                        "HMG004", path, line,
+                        f"state applied before WAL append in "
+                        f"'{fn.name}' — log-then-apply is the recovery "
+                        "contract"))
+                    break
+    return out
+
+
+ALL_AST_RULES = {
+    "HMG001": check_hmg001,
+    "HMG002": check_hmg002,
+    "HMG003": check_hmg003,
+    "HMG004": check_hmg004,
+}
+
+
+def check_source(path: str, source: str,
+                 rules: Optional[Set[str]] = None) -> List[Violation]:
+    """All AST-layer violations for one file (pragmas NOT yet applied —
+    the driver handles suppression so it can also audit the pragmas)."""
+    try:
+        tree = ast.parse(source, filename=path)
+    except SyntaxError as e:
+        return [Violation("HMG000", path, e.lineno or 0,
+                          f"file does not parse: {e.msg}")]
+    out: List[Violation] = []
+    seen: Set[Violation] = set()
+    for rule, fn in ALL_AST_RULES.items():
+        if rules and rule not in rules:
+            continue
+        for v in fn(path, tree):
+            if v not in seen:       # a lambda traced via two routes would
+                seen.add(v)         # otherwise report twice
+                out.append(v)
+    return out

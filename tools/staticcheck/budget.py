@@ -1,0 +1,148 @@
+"""Layer 2b: HMG103 — the compile-count budget gate.
+
+Runs the canonical mixed workload (ingest -> search -> update -> maintain ->
+search, the tests/query_ref.py scale) against a fresh HMGIIndex, then reads
+the number of distinct compiled signatures per registered jitted entry point
+straight off the jit caches (``fn._cache_size()``). The measurement is
+compared to ``tools/staticcheck/budgets.json``; any entry that compiled
+*more* signatures than budgeted fails. Fewer is fine (and worth re-baseling
+with ``--write-budgets``) — the gate bounds respecialisation regressions,
+it does not pin exact counts across jax versions.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from tools.staticcheck import Violation
+
+BUDGETS_PATH = Path(__file__).resolve().parent / "budgets.json"
+
+# canonical workload scale — mirrors tests/query_ref.py suites: two search
+# phases with distinct (k, n_probe) plus an update/maintain phase between
+# them, so steady-state serving plus one respecialisation per knob is the
+# expected signature count
+_N, _D, _Q = 512, 32, 8
+
+
+def load_budgets(path: Optional[Path] = None) -> Dict[str, int]:
+    p = Path(path) if path else BUDGETS_PATH
+    with open(p) as f:
+        data = json.load(f)
+    return {k: int(v) for k, v in data["entries"].items()}
+
+
+def save_budgets(measured: Dict[str, int],
+                 path: Optional[Path] = None) -> Path:
+    p = Path(path) if path else BUDGETS_PATH
+    payload = {
+        "_comment": ("HMG103 compile-count budgets: max distinct compiled "
+                     "signatures per jitted entry point under the "
+                     "canonical mixed workload (python -m tools.staticcheck "
+                     "--write-budgets to re-baseline)."),
+        "workload": {"n": _N, "d": _D, "q": _Q,
+                     "phases": ["ingest", "search", "update", "maintain",
+                                "search"]},
+        "entries": {k: measured[k] for k in sorted(measured)},
+    }
+    with open(p, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    return p
+
+
+def run_canonical_workload() -> Dict[str, int]:
+    """Execute the mixed workload in-process and return per-entry distinct
+    compiled-signature counts."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.configs.hmgi import HMGIConfig
+    from repro.core.index import HMGIIndex
+
+    from tools.staticcheck.registry import budget_functions
+
+    fns = budget_functions()
+    jax.clear_caches()
+    for fn in fns.values():
+        try:
+            fn._clear_cache()
+        except AttributeError:
+            pass
+
+    rng = np.random.default_rng(7)
+    cfg = HMGIConfig(n_partitions=8, n_probe=4, top_k=8,
+                     delta_capacity=256, maint_auto=False)
+    idx = HMGIIndex(cfg, seed=0)
+    vecs = rng.normal(size=(_N, _D)).astype(np.float32)
+    e = 4 * _N
+    edges = (rng.integers(0, _N, e).astype(np.int32),
+             rng.integers(0, _N, e).astype(np.int32))
+
+    # ingest
+    idx.ingest({"text": (np.arange(_N), vecs)}, n_nodes=_N, edges=edges)
+    q = rng.normal(size=(_Q, _D)).astype(np.float32)
+
+    # search (serving steady state: same shapes twice must not recompile)
+    idx.search(q, "text", k=8)
+    idx.search(q, "text", k=8)
+    idx.hybrid_search(q, "text", k=8, n_hops=2)
+
+    # update (insert new + supersede existing + delete)
+    idx.insert("text", np.arange(_N, _N + 64),
+               rng.normal(size=(64, _D)).astype(np.float32))
+    idx.insert("text", np.arange(0, 32),
+               rng.normal(size=(32, _D)).astype(np.float32))
+    idx.delete("text", np.arange(40, 48))
+
+    # maintain
+    idx.maintain("text")
+
+    # search again (post-update shapes; pow2 padding keeps these on the
+    # already-compiled signatures wherever possible)
+    idx.search(q, "text", k=8)
+    idx.search(q, "text", k=8, n_probe=8)
+
+    sizes: Dict[str, int] = {}
+    for name, fn in fns.items():
+        try:
+            sizes[name] = int(fn._cache_size())
+        except AttributeError:
+            sizes[name] = 0
+    return sizes
+
+
+def check_budgets(measured: Dict[str, int],
+                  budgets: Dict[str, int]) -> List[Violation]:
+    out: List[Violation] = []
+    for name, n in sorted(measured.items()):
+        cap = budgets.get(name)
+        if cap is None:
+            out.append(Violation(
+                "HMG103", "tools/staticcheck/budgets.json", 0,
+                f"entry '{name}' has no budget — run --write-budgets"))
+        elif n > cap:
+            out.append(Violation(
+                "HMG103", "tools/staticcheck/budgets.json", 0,
+                f"entry '{name}' compiled {n} distinct signatures under "
+                f"the canonical workload (budget {cap}) — a static shape "
+                "arg is respecialising; pad through "
+                "pow2_round/pad_to_chunk"))
+    return out
+
+
+def run_budget_rule(write: bool = False,
+                    path: Optional[Path] = None) -> List[Violation]:
+    measured = run_canonical_workload()
+    if write:
+        save_budgets(measured, path)
+        return []
+    try:
+        budgets = load_budgets(path)
+    except FileNotFoundError:
+        return [Violation(
+            "HMG103", str(path or BUDGETS_PATH), 0,
+            "budgets.json missing — run "
+            "'python -m tools.staticcheck --write-budgets'")]
+    return check_budgets(measured, budgets)

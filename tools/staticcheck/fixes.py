@@ -1,0 +1,106 @@
+"""``--fix``: mechanical rewrites for the rules where the fix is provable.
+
+Two fixers, both conservative:
+
+- pragma normalisation — rewrites spelling variants of a *well-formed*
+  disable (odd spacing, lowercase rule ids) to the canonical
+  ``# staticcheck: disable=HMG003 (reason)`` form. A pragma with no reason
+  is NOT given one: inventing a justification would defeat the audit, so
+  bare disables stay violations.
+- HMG003 kwarg insertion — appends ``node_pass=None`` to a flagged scan
+  call. The callee's default for that kwarg is ``None`` everywhere in this
+  repo (registry: MVCC_DEFAULT_NONE_KWARG), so the rewrite is
+  behaviour-preserving; it converts an implicit opt-out into an explicit,
+  greppable one.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from typing import Dict, List, Tuple
+
+from tools.staticcheck import Violation
+from tools.staticcheck.pragmas import KNOWN_RULES, PRAGMA
+from tools.staticcheck.registry import (MVCC_DEFAULT_NONE_KWARG,
+                                        MVCC_ENTRY_POINTS)
+
+
+def normalize_pragmas(source: str) -> Tuple[str, int]:
+    """Canonicalise well-formed pragmas in ``source``; returns (new source,
+    number of lines rewritten)."""
+    lines = source.splitlines(keepends=True)
+    n_fixed = 0
+    for i, text in enumerate(lines):
+        if "staticcheck" not in text:
+            continue
+        m = PRAGMA.search(text)
+        if not m:
+            continue
+        reason = (m.group("reason") or "").strip()
+        if not reason:
+            continue                     # never invent a reason
+        rules = sorted({r.strip().upper() for r in
+                        m.group("rules").split(",") if r.strip()})
+        if not set(rules) <= KNOWN_RULES:
+            continue                     # unknown ids need a human
+        eol = "\n" if text.endswith("\n") else ""
+        canonical = (f"# staticcheck: disable={','.join(rules)} "
+                     f"({reason})")
+        new = text[:m.start()].rstrip("\n") + canonical + eol
+        if new != text:
+            lines[i] = new
+            n_fixed += 1
+    return "".join(lines), n_fixed
+
+
+def insert_mvcc_kwargs(source: str,
+                       violations: List[Violation]) -> Tuple[str, int]:
+    """Append ``node_pass=None`` to each HMG003-flagged call, located via
+    ast (so multi-line calls rewrite at their true closing paren)."""
+    lines_flagged = {v.line for v in violations
+                     if v.rule == "HMG003" and v.fixable}
+    if not lines_flagged:
+        return source, 0
+    try:
+        tree = ast.parse(source)
+    except SyntaxError:
+        return source, 0
+
+    # (end_lineno, end_col) insertion points, applied bottom-up so earlier
+    # offsets stay valid
+    points: List[Tuple[int, int, bool]] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call) or node.lineno not in \
+                lines_flagged:
+            continue
+        name = None
+        if isinstance(node.func, ast.Name):
+            name = node.func.id
+        elif isinstance(node.func, ast.Attribute):
+            name = node.func.attr
+        if name not in MVCC_ENTRY_POINTS:
+            continue
+        has_args = bool(node.args or node.keywords)
+        points.append((node.end_lineno, node.end_col_offset, has_args))
+
+    lines = source.splitlines(keepends=True)
+    for end_line, end_col, has_args in sorted(points, reverse=True):
+        text = lines[end_line - 1]
+        insert_at = end_col - 1          # just before the closing paren
+        kw = f"{MVCC_DEFAULT_NONE_KWARG}=None"
+        frag = f", {kw}" if has_args else kw
+        lines[end_line - 1] = text[:insert_at] + frag + text[insert_at:]
+    return "".join(lines), len(points)
+
+
+def apply_fixes(path: str, source: str,
+                violations: List[Violation]) -> Tuple[str, Dict[str, int]]:
+    counts: Dict[str, int] = {}
+    source, n = normalize_pragmas(source)
+    if n:
+        counts["pragma-normalized"] = n
+    source, n = insert_mvcc_kwargs(
+        source, [v for v in violations if v.path == path])
+    if n:
+        counts["node_pass-inserted"] = n
+    return source, counts

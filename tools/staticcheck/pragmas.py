@@ -1,0 +1,91 @@
+"""Suppression pragmas: ``# staticcheck: disable=HMG003 (reason)``.
+
+A pragma suppresses the named rule(s) on its own line and — when it stands
+alone on a line — on the next code line (so multi-line calls can carry the
+pragma above the call). The parenthesised reason is mandatory: a disable
+without one does not suppress anything and is itself reported (HMG000), so
+the suppression inventory stays auditable. Unknown rule ids are HMG000 too
+(a typo'd pragma must not silently disable nothing).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Set, Tuple
+
+from tools.staticcheck import Violation
+
+# canonical:  # staticcheck: disable=HMG001,HMG003 (reason text)
+PRAGMA = re.compile(
+    r"#\s*staticcheck\s*:\s*disable\s*=\s*"
+    r"(?P<rules>[A-Za-z0-9_,\s]+?)"
+    r"\s*(?:\((?P<reason>[^)]*)\))?\s*$")
+
+KNOWN_RULES = {"HMG001", "HMG002", "HMG003", "HMG004",
+               "HMG101", "HMG102", "HMG103"}
+
+
+class PragmaIndex:
+    """Per-file map: line number -> set of rule ids disabled there."""
+
+    def __init__(self, disabled: Dict[int, Set[str]],
+                 violations: List[Violation]):
+        self._disabled = disabled
+        self.violations = violations
+
+    def is_disabled(self, rule: str, line: int) -> bool:
+        return rule in self._disabled.get(line, ())
+
+
+def _parse_line(text: str) -> Tuple[Set[str], str, bool]:
+    """(rules, reason, found). ``found`` is True for any disable pragma,
+    well-formed or not."""
+    m = PRAGMA.search(text)
+    if not m:
+        return set(), "", False
+    rules = {r.strip().upper() for r in m.group("rules").split(",")
+             if r.strip()}
+    return rules, (m.group("reason") or "").strip(), True
+
+
+def scan_pragmas(path: str, source: str) -> PragmaIndex:
+    disabled: Dict[int, Set[str]] = {}
+    violations: List[Violation] = []
+    lines = source.splitlines()
+    for i, text in enumerate(lines, start=1):
+        if "staticcheck" not in text:
+            continue
+        rules, reason, found = _parse_line(text)
+        if not found:
+            continue
+        bad = rules - KNOWN_RULES
+        if bad:
+            violations.append(Violation(
+                "HMG000", path, i,
+                f"pragma names unknown rule id(s) {sorted(bad)} — it would "
+                "silently disable nothing", fixable=False))
+            rules &= KNOWN_RULES
+        if not reason:
+            violations.append(Violation(
+                "HMG000", path, i,
+                "disable pragma without a reason — spell it "
+                "'# staticcheck: disable=RULE (why it is safe here)'",
+                fixable=True))
+            continue                      # a bare disable suppresses nothing
+        eff = disabled.setdefault(i, set())
+        eff |= rules
+        # a pragma-only line also covers the next code line
+        if text.strip().startswith("#"):
+            for j in range(i + 1, len(lines) + 1):
+                if j > len(lines):
+                    break
+                nxt = lines[j - 1].strip()
+                if nxt and not nxt.startswith("#"):
+                    disabled.setdefault(j, set()).update(rules)
+                    break
+    return PragmaIndex(disabled, violations)
+
+
+def filter_suppressed(violations: List[Violation],
+                      index: PragmaIndex) -> List[Violation]:
+    return [v for v in violations
+            if not index.is_disabled(v.rule, v.line)]
