@@ -15,9 +15,12 @@
   persistence_bench — durability: snapshot write/restore latency, WAL append
                   overhead on ingest, recovery time vs replay length
 
-Prints ``name,us_per_call,derived,n_compiles`` CSV — ``n_compiles`` is the
-running count of distinct compiled signatures across the staticcheck
-(HMG103) registry entries, so jit respecialisation is visible per row.
+Prints ``name,us_per_call,derived,n_compiles,p50_ms,p99_ms`` CSV —
+``n_compiles`` is the running count of distinct compiled signatures across
+the staticcheck (HMG103) registry entries, so jit respecialisation is
+visible per row; ``p50_ms``/``p99_ms`` are the obs registry's
+``query.execute`` histogram quantiles accumulated since the previous row
+(blank for rows that never enter the query executor).
 Usage: PYTHONPATH=src python -m benchmarks.run [--only <module>]
 """
 from __future__ import annotations
@@ -40,11 +43,19 @@ def main() -> None:
     rows = []
 
     from benchmarks.common import total_compiles
+    from repro import obs
 
     def report(name: str, us_per_call: float, derived: str = ""):
         n_compiles = total_compiles()
+        # per-query latency quantiles since the previous row, from the obs
+        # registry's "query.execute" histogram (facade-path rows only;
+        # rows that never enter the query executor print blanks)
+        h = obs.registry().histogram("query.execute")
+        p50 = f"{h.percentile(50):.3f}" if h.count else ""
+        p99 = f"{h.percentile(99):.3f}" if h.count else ""
+        obs.reset()
         rows.append((name, us_per_call, derived, n_compiles))
-        print(f"{name},{us_per_call:.3f},{derived},{n_compiles}",
+        print(f"{name},{us_per_call:.3f},{derived},{n_compiles},{p50},{p99}",
               flush=True)
 
     from benchmarks import (ablations, filtered_bench, hybrid_bench,
@@ -59,7 +70,7 @@ def main() -> None:
             "persistence_bench": persistence_bench}
     selected = [mods[args.only]] if args.only else list(mods.values())
 
-    print("name,us_per_call,derived,n_compiles")
+    print("name,us_per_call,derived,n_compiles,p50_ms,p99_ms")
     failed = 0
     for mod in selected:
         try:

@@ -1,0 +1,168 @@
+"""Open-loop serving load benchmark: QPS and p50/p99 vs concurrency.
+
+The ROADMAP's serving deliverable: drive the query facade with N
+concurrent client streams issuing single-query searches at scheduled
+arrival times (open loop — arrivals do not wait for completions, so queue
+wait is part of latency, the way a latency SLO sees it), and report
+throughput and tail latency **from the obs registry**: each request's
+latency is observed into the ``serving.request_ms`` histogram and the
+reported p50/p99 are that histogram's exact-quantile readout.
+
+Arrival pacing: the single-stream mean service time is calibrated first;
+each stream then offers ``utilization / (t_service * max_streams)`` QPS,
+so offered load grows linearly with the stream count and reaches
+``utilization`` of single-device capacity at the largest level — low
+levels measure un-queued latency, the top level measures queueing near
+saturation. JAX releases the GIL during device execution, so
+thread-per-stream genuinely overlaps dispatch with device work.
+
+Also prints the instrumentation overhead check: single-stream query p50
+with the obs layer enabled (tracing off — the always-on configuration)
+vs fully disabled (``obs.set_enabled(False)``), interleaved A/B rounds to
+cancel drift. The enabled p50 must stay within ~5% of the disabled one
+for "cheap enough to leave always-on" to hold.
+
+    PYTHONPATH=src python benchmarks/serving_load_bench.py \
+        --streams 1,8,64 --duration 5
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+import jax
+
+from repro import obs
+
+try:
+    from benchmarks.common import (build_hmgi, load_corpus, make_queries,
+                                   primary_mod)
+except ImportError:                     # script-style invocation
+    from common import build_hmgi, load_corpus, make_queries, primary_mod
+
+REQUEST_HIST = "serving.request_ms"
+
+
+def _one_query(index, q1, modality, k):
+    sv, _ = index.search(q1, modality, k=k)
+    jax.block_until_ready(sv)
+
+
+def calibrate(index, queries, modality, k, warmup=8, trials=32) -> float:
+    """Mean single-stream service seconds per request (after compile)."""
+    for i in range(warmup):
+        _one_query(index, queries[i % len(queries)][None], modality, k)
+    t0 = time.perf_counter()
+    for i in range(trials):
+        _one_query(index, queries[i % len(queries)][None], modality, k)
+    return (time.perf_counter() - t0) / trials
+
+
+def overhead_check(index, queries, modality, k, rounds=6, per_round=24):
+    """Interleaved A/B: p50 with obs enabled vs disabled, measured with
+    identical host timers. Returns (enabled_p50_ms, disabled_p50_ms)."""
+    lat = {True: [], False: []}
+    try:
+        for r in range(rounds):
+            for enabled in (True, False) if r % 2 == 0 else (False, True):
+                obs.set_enabled(enabled)
+                for i in range(per_round):
+                    q1 = queries[(r * per_round + i) % len(queries)][None]
+                    t0 = time.perf_counter()
+                    _one_query(index, q1, modality, k)
+                    lat[enabled].append(time.perf_counter() - t0)
+    finally:
+        obs.set_enabled(True)
+    return (float(np.percentile(lat[True], 50)) * 1e3,
+            float(np.percentile(lat[False], 50)) * 1e3)
+
+
+def run_level(index, queries, modality, k, n_streams, duration_s,
+              interval_s) -> dict:
+    """One concurrency level: n_streams open-loop clients for duration_s.
+    Latency is measured from each request's *scheduled* arrival time, so a
+    request that waited on a busy device is charged its queue time."""
+    obs.reset()
+    barrier = threading.Barrier(n_streams + 1)
+    errors = []
+
+    def stream(sid: int):
+        try:
+            barrier.wait()
+            start = time.perf_counter()
+            n = 0
+            while True:
+                sched = start + n * interval_s
+                if sched - start >= duration_s:
+                    return
+                now = time.perf_counter()
+                if sched > now:
+                    time.sleep(sched - now)
+                q1 = queries[(sid + n) % len(queries)][None]
+                _one_query(index, q1, modality, k)
+                obs.observe_ms(REQUEST_HIST, time.perf_counter() - sched)
+                n += 1
+        except Exception as e:          # surface, don't hang the join
+            errors.append(e)
+
+    threads = [threading.Thread(target=stream, args=(s,), daemon=True)
+               for s in range(n_streams)]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.perf_counter()
+    for t in threads:
+        t.join()
+    elapsed = time.perf_counter() - t0
+    if errors:
+        raise errors[0]
+    h = obs.registry().histogram(REQUEST_HIST)
+    return {"streams": n_streams, "requests": h.count,
+            "qps": h.count / elapsed,
+            "offered_qps": n_streams / interval_s,
+            "p50_ms": h.percentile(50), "p99_ms": h.percentile(99)}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--streams", type=str, default="1,8,64",
+                    help="comma-separated concurrency levels")
+    ap.add_argument("--duration", type=float, default=5.0,
+                    help="seconds per concurrency level")
+    ap.add_argument("--dataset", type=str, default="dec-10k")
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--utilization", type=float, default=0.7,
+                    help="offered load at the largest level, as a fraction "
+                         "of calibrated single-stream capacity")
+    args = ap.parse_args()
+    levels = [int(s) for s in args.streams.split(",")]
+
+    corpus = load_corpus(args.dataset)
+    modality = primary_mod(args.dataset)
+    index = build_hmgi(corpus)
+    queries = make_queries(corpus, modality, n=256)
+
+    t_service = calibrate(index, queries, modality, args.k)
+    print(f"# {args.dataset}: service time {t_service*1e3:.3f} ms/req, "
+          f"capacity ~{1.0/t_service:.0f} QPS")
+
+    en_p50, dis_p50 = overhead_check(index, queries, modality, args.k)
+    delta = (en_p50 - dis_p50) / dis_p50 * 100.0
+    verdict = "within 5%" if delta <= 5.0 else "EXCEEDS 5%"
+    print(f"# obs overhead: p50 {en_p50:.3f} ms enabled vs {dis_p50:.3f} ms "
+          f"uninstrumented ({delta:+.1f}%, {verdict})")
+
+    # per-stream interval so the top level offers utilization × capacity
+    interval_s = t_service * max(levels) / args.utilization
+    print("streams,requests,offered_qps,qps,p50_ms,p99_ms")
+    for s in levels:
+        r = run_level(index, queries, modality, args.k, s, args.duration,
+                      interval_s)
+        print(f"{r['streams']},{r['requests']},{r['offered_qps']:.1f},"
+              f"{r['qps']:.1f},{r['p50_ms']:.3f},{r['p99_ms']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -244,4 +244,9 @@ class HMGIConfig(ArchConfig):
                                            # (1 = durable at return)
     snapshot_keep: int = 2                 # retained snapshots; ≥2 keeps a
                                            # fallback if the newest corrupts
+    # observability (repro.obs)
+    obs_sync_spans: bool = False           # block_until_ready at span exit so
+                                           # async device work is charged to
+                                           # the span that launched it (slower;
+                                           # profiling only)
     dtype: str = "float32"

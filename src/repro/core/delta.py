@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import ivf as ivf_mod
 from repro.core.graph_store import mask_pass
 from repro.core.ivf import IVFIndex
@@ -305,19 +306,23 @@ def search_with_delta_sharded(sharded: IVFIndex, delta: DeltaStore,
     outside the shard_map and merging host-side is both cheaper than S
     redundant scans and keeps the two paths' results identical."""
     visible = _stable_visibility(delta, node_pass, mvcc_filter)
-    sv, si = ivf_mod.search_sharded(sharded, queries, mesh, n_probe=n_probe,
-                                    k=k, probes=probes, node_pass=visible,
-                                    impl=impl)
-    # the distributed section ends at the cross-shard merge: the (Q, k)
-    # candidate state is tiny, and every downstream stage (delta merge,
-    # traversal, fusion) is a single-device computation — pulling the
-    # replicated result onto the default device here keeps those stages
-    # compiling exactly as in the single-device path
-    sv, si = jax.device_put((sv, si), jax.devices()[0])
-    dv, di = _scan_delta(delta, queries, k=k, margin=rescore_margin,
-                         node_pass=node_pass)
-    mv, mi = ivf_mod.dedup_merge_topk(sv, si, dv, di, k)
-    return mv, jnp.where(jnp.isfinite(mv), mi, -1)
+    with obs.span("sharded.scan") as sp:
+        sv, si = sp.fence(ivf_mod.search_sharded(
+            sharded, queries, mesh, n_probe=n_probe, k=k, probes=probes,
+            node_pass=visible, impl=impl))
+    # everything after the per-shard scans is the sharded path's extra cost
+    # over single-device execution — surfaced as the "sharded.merge" span
+    with obs.span("sharded.merge") as sp:
+        # the distributed section ends at the cross-shard merge: the (Q, k)
+        # candidate state is tiny, and every downstream stage (delta merge,
+        # traversal, fusion) is a single-device computation — pulling the
+        # replicated result onto the default device here keeps those stages
+        # compiling exactly as in the single-device path
+        sv, si = jax.device_put((sv, si), jax.devices()[0])
+        dv, di = _scan_delta(delta, queries, k=k, margin=rescore_margin,
+                             node_pass=node_pass)
+        mv, mi = ivf_mod.dedup_merge_topk(sv, si, dv, di, k)
+        return sp.fence((mv, jnp.where(jnp.isfinite(mv), mi, -1)))
 
 
 def should_compact(delta: DeltaStore, threshold: float = 0.5) -> bool:

@@ -9,6 +9,7 @@ directly.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Dict, Optional, Tuple
@@ -17,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import HMGIConfig
 from repro.core import delta as delta_mod
 from repro.core import ivf as ivf_mod
@@ -250,14 +252,26 @@ class HMGIIndex:
             m.ivf_sharded = sh
         return m.ivf_sharded
 
-    def query(self, plan):
+    def query(self, plan, *, trace: bool = False):
         """Runs a declarative plan (see ``repro.query.Q``): compiles it
         cost-wise against this index (predicate pushdown vs post-filter,
         probe widths, sparse vs dense fusion) and executes it as staged
-        jitted primitives. Returns (scores (Q, k), ids (Q, k))."""
+        jitted primitives. Returns (scores (Q, k), ids (Q, k)); with
+        ``trace=True``, (scores, ids, trace) where ``trace.render()`` is
+        the per-stage span tree."""
         from repro.query.executor import execute
         from repro.query.planner import compile_plan
-        return execute(self, compile_plan(self, plan))
+        obs.set_sync_spans(self.cfg.obs_sync_spans)
+        with self._maybe_trace(trace) as t:
+            out = execute(self, compile_plan(self, plan))
+        return out + (t,) if trace else out
+
+    @staticmethod
+    def _maybe_trace(trace: bool):
+        """``obs.trace()`` collector when tracing, else a null context —
+        untraced queries skip span-tree assembly entirely (spans still
+        feed the registry histograms)."""
+        return obs.trace() if trace else contextlib.nullcontext()
 
     def explain(self, plan) -> str:
         """The compiled physical plan for ``plan``, as a one-line string
@@ -267,7 +281,7 @@ class HMGIIndex:
 
     def search(self, queries, modality: str, k: Optional[int] = None,
                n_probe: Optional[int] = None, where=None, impl: str = "auto",
-               *, _node_pass=None):
+               *, trace: bool = False, _node_pass=None):
         """Pure vector search (ANNS on stable index + delta), tombstone-aware.
 
         A thin wrapper over the query engine: builds the one-stage plan
@@ -280,15 +294,21 @@ class HMGIIndex:
         when few rows qualify, *oversample-then-post-filter* when most do —
         the post-filter pass doubles its scan width until every query has k
         qualifying candidates (or the probed slabs are exhausted), so at full
-        probe both strategies return the brute-force-with-predicate top-k."""
+        probe both strategies return the brute-force-with-predicate top-k.
+
+        trace: when True, returns (scores, ids, trace) — ``trace.render()``
+        prints the per-stage span tree (plan, seed-scan, traversal, ...)."""
         from repro.query.ast import Q
         from repro.query.executor import execute
         from repro.query.planner import compile_plan
+        obs.set_sync_spans(self.cfg.obs_sync_spans)
         plan = Q.vector(modality, queries, n_probe=n_probe,
                         impl=impl).where(where)
-        phys = compile_plan(self, plan, k=k or self.cfg.top_k,
-                            node_pass=_node_pass)
-        return execute(self, phys)
+        with self._maybe_trace(trace) as t:
+            phys = compile_plan(self, plan, k=k or self.cfg.top_k,
+                                node_pass=_node_pass)
+            out = execute(self, phys)
+        return out + (t,) if trace else out
 
     def hybrid_search(self, queries, modality: str, k: Optional[int] = None,
                       n_hops: Optional[int] = None,
@@ -297,7 +317,8 @@ class HMGIIndex:
                       where=None,
                       min_recall: Optional[float] = None,
                       use_rerank: bool = False,
-                      q_terms=None, q_term_weights=None):
+                      q_terms=None, q_term_weights=None, *,
+                      trace: bool = False):
         """The paper's hybrid query (Eq. 3): ANNS seeds -> h-hop traversal ->
         adaptive fusion -> (optional sparse-dense rerank). Returns (scores, ids).
 
@@ -316,6 +337,7 @@ class HMGIIndex:
         from repro.query.executor import execute
         from repro.query.planner import compile_plan
         assert self.graph is not None, "hybrid_search needs a graph"
+        obs.set_sync_spans(self.cfg.obs_sync_spans)
         cfg = self.cfg
         k = k or cfg.top_k
         if min_recall is not None:
@@ -329,21 +351,25 @@ class HMGIIndex:
         n_hops = cfg.max_hops if n_hops is None else n_hops
         q = self._norm_queries(queries)
 
-        plan = (Q.vector(modality, q, n_probe=n_probe)
-                .where(where)
-                .traverse(n_hops, edge_types=edge_type_mask))
-        phys = compile_plan(self, plan, k=k, fusion_repr="sparse")
-        fvals, fids = execute(self, phys, truncate=False)
+        with self._maybe_trace(trace) as t:
+            plan = (Q.vector(modality, q, n_probe=n_probe)
+                    .where(where)
+                    .traverse(n_hops, edge_types=edge_type_mask))
+            phys = compile_plan(self, plan, k=k, fusion_repr="sparse")
+            fvals, fids = execute(self, phys, truncate=False)
 
-        if n_hops == 0:
-            return fvals[:, :k], fids[:, :k]
-        # optional sparse-dense rerank over the full fused candidate set
-        if use_rerank and self.sparse_docs is not None and q_terms is not None:
-            sp = rerank_mod.sparse_overlap_scores(self.sparse_docs, q_terms,
-                                                  q_term_weights, fids)
-            fvals, fids = rerank_mod.rrf_rerank(fvals, sp, fids, k=k)
-            return fvals, fids
-        return fvals[:, :k], fids[:, :k]
+            if (n_hops > 0 and use_rerank and self.sparse_docs is not None
+                    and q_terms is not None):
+                # optional sparse-dense rerank over the full fused set
+                with obs.span("query.rescore") as span:
+                    ss = rerank_mod.sparse_overlap_scores(
+                        self.sparse_docs, q_terms, q_term_weights, fids)
+                    fvals, fids = span.fence(
+                        rerank_mod.rrf_rerank(fvals, ss, fids, k=k))
+                out = (fvals, fids)
+            else:
+                out = (fvals[:, :k], fids[:, :k])
+        return out + (t,) if trace else out
 
     # ----------------------------------------------------------------- update
     def _record_dead(self, m: ModalityIndex, ids_np: np.ndarray):
@@ -368,6 +394,10 @@ class HMGIIndex:
         through ``maintain`` — bounded incremental drains instead of a
         stop-the-world ``compact`` — growing the delta only if maintenance
         could not free enough slots. Writes are never dropped."""
+        with obs.span("index.insert"):
+            self._insert(modality, ids, vectors)
+
+    def _insert(self, modality: str, ids, vectors):
         m = self.modalities[modality]
         v = self._norm_queries(vectors)
         # free delta room BEFORE any visibility change: a forced drain here
@@ -419,13 +449,14 @@ class HMGIIndex:
         vanish from every scan path immediately and are physically purged by
         maintenance/compaction). Auto-triggers a maintenance pass so
         hollowed-out partitions eventually merge away."""
-        m = self.modalities[modality]
-        ids_np = np.asarray(jnp.asarray(ids, jnp.int32))
-        self._record_dead(m, ids_np)
-        m.has_dead = True
-        m.delta = delta_mod.delete(m.delta, jnp.asarray(ids, jnp.int32))
-        if self.cfg.maint_auto:
-            self.maintain(modality)
+        with obs.span("index.delete"):
+            m = self.modalities[modality]
+            ids_np = np.asarray(jnp.asarray(ids, jnp.int32))
+            self._record_dead(m, ids_np)
+            m.has_dead = True
+            m.delta = delta_mod.delete(m.delta, jnp.asarray(ids, jnp.int32))
+            if self.cfg.maint_auto:
+                self.maintain(modality)
 
     def compact(self, modality: str):
         """Full compaction: merge the whole delta into the stable store in
@@ -487,7 +518,18 @@ class HMGIIndex:
 
         Returns the ``MaintenanceReport`` for ``modality`` (or a dict of
         reports over all modalities when ``modality`` is None). The applied
-        decision trail is also surfaced in ``metrics()['maintenance']``."""
+        decision trail is also surfaced in ``metrics()['maintenance']``.
+
+        Obs: the pass's wall time lands in the ``index.maintain`` histogram
+        (write-path stall, since maintenance runs inline with mutations);
+        each applied action bumps ``maintenance.actions.<kind>`` and its
+        moved/drained/reclaimed rows accumulate in
+        ``maintenance.rows_moved``."""
+        with obs.span("index.maintain"):
+            return self._maintain(modality, budget, need_rows=need_rows)
+
+    def _maintain(self, modality: Optional[str] = None,
+                  budget: Optional[int] = None, *, need_rows: int = 0):
         from repro.maintenance import executor as maint_exec
         cfg = self.cfg
         budget = cfg.maint_budget_rows if budget is None else int(budget)
@@ -520,6 +562,10 @@ class HMGIIndex:
                     continue
                 res = maint_exec.apply(m, cfg, self._split(), m.stats, act)
                 report.actions.append((act, res))
+                obs.counter(f"maintenance.actions.{act.kind}").inc()
+                obs.counter("maintenance.rows_moved").inc(
+                    res.get("drained", 0) + res.get("moved", 0)
+                    + res.get("reclaimed", 0))
                 cleared += res.get("cleared_superseded", 0)
                 if act.kind == "compact_chunk" and not (
                         res.get("drained", 0) or res.get("reclaimed", 0)):
@@ -682,9 +728,14 @@ class HMGIIndex:
     # ------------------------------------------------------------------ stats
     def metrics(self) -> Dict[str, object]:
         """Execution-side observability: filter selectivity/mode recorded by
-        the last filtered seed scan, and the latest maintenance decision
-        trail under ``"maintenance"`` (one line per modality acted on)."""
-        return dict(self._metrics)
+        the last filtered seed scan, the latest maintenance decision trail
+        under ``"maintenance"`` (one line per modality acted on), and the
+        process-global obs registry snapshot under ``"obs"`` (counters,
+        gauges, histogram summaries with exact p50/p90/p99 — see
+        ``repro.obs``)."""
+        out = dict(self._metrics)
+        out["obs"] = obs.snapshot()
+        return out
 
     def memory_usage(self) -> Dict[str, int]:
         """Bytes per component: one entry per modality's stable slab, one

@@ -9,8 +9,8 @@ import time
 from typing import Iterator, NamedTuple, Optional, Sequence
 
 import jax
-import jax.numpy as jnp
 
+from repro import obs
 from repro.core import ivf as ivf_mod
 from repro.core.ivf import IVFIndex
 
@@ -32,11 +32,21 @@ def progressive_search(index: IVFIndex, queries: jax.Array, *, k: int,
 
     node_pass: optional (N,) visibility mask threaded into every round's
     scan — anytime refinement must honour the same MVCC/tombstone view as a
-    one-shot search, or a round could resurface deleted rows."""
-    t0 = time.perf_counter()
+    one-shot search, or a round could resurface deleted rows.
+
+    The budget is charged with *work* time: each round's scan+merge is
+    measured individually (the ``progressive.round`` histogram) and the
+    check compares the accumulated round time against ``budget_s``. Wall
+    time since the first round would also bill whatever happens between
+    rounds — a GC pause, or the consumer's own work while the generator is
+    suspended at ``yield`` — and silently eat the final refinement round;
+    time this generator does not spend refining must not cost refinement.
+    ``elapsed_s`` reports the accumulated work time."""
+    work_s = 0.0
     best = None
     for rnd, np_ in enumerate(probe_schedule):
         np_ = min(np_, index.n_partitions)
+        t0 = time.perf_counter()
         sv, si = ivf_mod.search(index, queries, n_probe=np_, k=k,
                                 node_pass=node_pass)
         if best is None:
@@ -44,10 +54,15 @@ def progressive_search(index: IVFIndex, queries: jax.Array, *, k: int,
         else:
             best = ivf_mod.dedup_merge_topk(best[0], best[1], sv, si, k)
         sv, si = best
+        # the explicit sync stays *inside* the measured round: a round's
+        # cost is its device work, not just its dispatch
         jax.block_until_ready(sv)
-        el = time.perf_counter() - t0
-        yield AnytimeResult(sv, si, np_, rnd, el)
-        if budget_s is not None and el >= budget_s:
+        dt = time.perf_counter() - t0
+        work_s += dt
+        obs.observe_ms("progressive.round", dt)
+        obs.counter("progressive.rounds").inc()
+        yield AnytimeResult(sv, si, np_, rnd, work_s)
+        if budget_s is not None and work_s >= budget_s:
             return
         if np_ >= index.n_partitions:
             return

@@ -10,15 +10,20 @@ Durability: ``--data-dir DIR`` makes the index durable (write-ahead op log +
 periodic snapshots under DIR); ``--recover`` restarts from DIR's latest
 valid snapshot plus log-tail replay instead of rebuilding — search results
 are bit-identical to the pre-crash index.
+
+Observability: all phase timings come from the ``repro.obs`` registry
+(spans feed named histograms; see docs/ARCHITECTURE.md). ``--metrics-out
+FILE`` dumps the full registry snapshot as JSON at exit.
 """
 from __future__ import annotations
 
 import argparse
-import time
+import json
 
 import numpy as np
 import jax
 
+from repro import obs
 from repro.configs import get_config, smoke_config
 from repro.core import HMGIIndex
 from repro.data.synthetic import ground_truth_topk, make_corpus, recall_at_k
@@ -37,6 +42,8 @@ def main():
                     help="durable mode: op-log + snapshot under this dir")
     ap.add_argument("--recover", action="store_true",
                     help="recover from --data-dir instead of rebuilding")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the obs registry snapshot (JSON) here at exit")
     args = ap.parse_args()
     if args.recover and not args.data_dir:
         ap.error("--recover requires --data-dir")
@@ -45,11 +52,12 @@ def main():
                                      kmeans_iters=8, top_k=args.k)
     corpus = make_corpus(n_nodes=args.n_nodes,
                          modality_dims={"text": 64, "image": 96})
-    t0 = time.perf_counter()
+    hist = lambda name: obs.histogram(name).summary()
     if args.recover:
         from repro.persistence import recover
-        index = recover(cfg, args.data_dir, seed=0)
-        print(f"recover: {time.perf_counter()-t0:.2f}s  "
+        with obs.span("serve.recover"):
+            index = recover(cfg, args.data_dir, seed=0)
+        print(f"recover: {hist('serve.recover')['max']/1e3:.2f}s  "
               f"[{index.metrics()['recovery']}]")
     else:
         if args.data_dir:
@@ -57,10 +65,11 @@ def main():
             index = DurableHMGIIndex(cfg, args.data_dir, seed=0)
         else:
             index = HMGIIndex(cfg, seed=0)
-        index.ingest({m: (corpus.node_ids[m], corpus.vectors[m])
-                      for m in corpus.vectors}, n_nodes=corpus.n_nodes,
-                     edges=(corpus.src, corpus.dst, corpus.edge_type))
-        print(f"ingest+build: {time.perf_counter()-t0:.2f}s  "
+        with obs.span("serve.ingest_build"):
+            index.ingest({m: (corpus.node_ids[m], corpus.vectors[m])
+                          for m in corpus.vectors}, n_nodes=corpus.n_nodes,
+                         edges=(corpus.src, corpus.dst, corpus.edge_type))
+        print(f"ingest+build: {hist('serve.ingest_build')['max']/1e3:.2f}s  "
               f"memory: {index.memory_usage()['total']/2**20:.1f} MiB")
 
     rng = np.random.default_rng(1)
@@ -68,46 +77,48 @@ def main():
     q = corpus.vectors["text"][sel] + 0.05 * rng.normal(
         size=(args.queries, 64)).astype(np.float32)
 
-    t0 = time.perf_counter()
-    sv, si = index.search(q, "text", k=args.k)
-    jax.block_until_ready(sv)
-    dt = time.perf_counter() - t0
+    with obs.span("serve.vector_batch") as sp:
+        sv, si = index.search(q, "text", k=args.k)
+        jax.block_until_ready(sv)
+        sp.fence(sv)
     truth = ground_truth_topk(corpus.vectors["text"], corpus.node_ids["text"],
                               q, args.k)
-    print(f"vector search: {dt*1e3/args.queries:.3f} ms/q  "
+    print(f"vector search: "
+          f"{hist('serve.vector_batch')['max']/args.queries:.3f} ms/q  "
           f"recall@{args.k}={recall_at_k(np.asarray(si), truth):.3f}")
 
-    t0 = time.perf_counter()
-    hv, hi = index.hybrid_search(q, "text", k=args.k, n_hops=args.hops)
-    jax.block_until_ready(hv)
-    dt = time.perf_counter() - t0
-    print(f"hybrid search ({args.hops} hops): {dt*1e3/args.queries:.3f} ms/q")
+    with obs.span("serve.hybrid_batch") as sp:
+        hv, hi = index.hybrid_search(q, "text", k=args.k, n_hops=args.hops)
+        jax.block_until_ready(hv)
+        sp.fence(hv)
+    print(f"hybrid search ({args.hops} hops): "
+          f"{hist('serve.hybrid_batch')['max']/args.queries:.3f} ms/q")
 
     # ingest-while-search: streaming writes interleaved with queries; the
     # adaptive maintenance hooks (insert/delete auto-trigger) drain the
-    # delta in bounded steps instead of stop-the-world compactions
+    # delta in bounded steps instead of stop-the-world compactions. Worst
+    # write stall = the max of the per-step "serve.ingest_step" histogram.
     if args.ingest_steps > 0:
         batch = max(args.n_nodes // 20, 8)
-        worst = 0.0
         for step in range(args.ingest_steps):
             wid = rng.integers(0, args.n_nodes, batch).astype(np.int32)
             wv = rng.normal(size=(batch, 64)).astype(np.float32)
-            t0 = time.perf_counter()
-            index.insert("text", wid, wv)
-            index.delete("text", wid[:batch // 8])
-            worst = max(worst, time.perf_counter() - t0)
+            with obs.span("serve.ingest_step"):
+                index.insert("text", wid, wv)
+                index.delete("text", wid[:batch // 8])
             sv2, _ = index.search(q[:8], "text", k=args.k)
             jax.block_until_ready(sv2)
         m = index.modalities["text"]
         print(f"ingest-while-search: {args.ingest_steps} steps x {batch} "
-              f"writes, worst write stall {worst*1e3:.1f} ms, "
+              f"writes, worst write stall "
+              f"{hist('serve.ingest_step')['max']:.1f} ms, "
               f"delta={int(m.delta.count)}  "
               f"maintenance: {index.metrics().get('maintenance', 'n/a')}")
 
     if args.data_dir:
-        t0 = time.perf_counter()
-        path = index.snapshot()
-        print(f"snapshot: {time.perf_counter()-t0:.2f}s -> {path}  "
+        with obs.span("serve.snapshot"):
+            path = index.snapshot()
+        print(f"snapshot: {hist('serve.snapshot')['max']/1e3:.2f}s -> {path}  "
               f"(last_seq={index.last_seq})")
 
     if args.rag:
@@ -124,6 +135,11 @@ def main():
         gen = eng.run_to_completion()
         print(f"RAG generated: { {k: len(v) for k, v in gen.items()} } "
               f"stats={eng.stats}")
+
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(obs.snapshot(), f, indent=2)
+        print(f"metrics -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

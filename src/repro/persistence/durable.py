@@ -44,6 +44,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.checkpoint import CheckpointError
 from repro.core.index import HMGIIndex
 from repro.persistence import snapshot as snapshot_mod
@@ -288,10 +289,12 @@ def recover(cfg, data_dir: str, mesh=None, seed: int = 0) -> DurableHMGIIndex:
         base_seq, loaded = last_seq, step
         break
     replayed = 0
-    for rec in idx._log.scan(min_seq=base_seq):
-        crash_point("recover.mid_replay")
-        replay_op(idx, rec)
-        replayed += 1
+    with obs.span("recovery.replay"):
+        for rec in idx._log.scan(min_seq=base_seq):
+            crash_point("recover.mid_replay")
+            replay_op(idx, rec)
+            replayed += 1
+    obs.gauge("recovery.replayed_ops").set(replayed)
     if idx._log.torn_tail:
         warnings.append(
             f"op log tail truncated after seq {idx._log.last_seq} "

@@ -52,6 +52,7 @@ from typing import Dict, Iterator, List, NamedTuple, Optional, Tuple
 import ml_dtypes
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.checkpoint import fsync_dir, fsync_file
 from repro.persistence.faultpoints import crash_point
 
@@ -208,25 +209,30 @@ class OpLog:
                arrays: Dict[str, np.ndarray]) -> int:
         """Appends one record; returns its seq. Durable at return whenever
         the fsync batch flushed (always, at sync_every=1)."""
-        if self._f is None:
-            self.open_for_append()
-        payload = encode_payload(op, meta, arrays)
-        seq = self.last_seq + 1
-        crash_point("wal.pre_append")
-        self._f.write(_FRAME.pack(MAGIC, seq, len(payload),
-                                  zlib.crc32(payload)))
-        self._f.write(payload)
-        self.last_seq = seq
-        self._unsynced += 1
-        if self._unsynced >= self.sync_every:
-            self._sync()
-        crash_point("wal.post_append")
-        return seq
+        with obs.span("wal.append"):
+            if self._f is None:
+                self.open_for_append()
+            payload = encode_payload(op, meta, arrays)
+            seq = self.last_seq + 1
+            crash_point("wal.pre_append")
+            self._f.write(_FRAME.pack(MAGIC, seq, len(payload),
+                                      zlib.crc32(payload)))
+            self._f.write(payload)
+            self.last_seq = seq
+            self._unsynced += 1
+            if self._unsynced >= self.sync_every:
+                self._sync()
+            crash_point("wal.post_append")
+            return seq
 
     def _sync(self) -> None:
         if self._f is not None and self._unsynced:
-            self._f.flush()
-            os.fsync(self._f.fileno())
+            # group-commit accounting: how many appends each fsync covers
+            obs.histogram("wal.sync_batch",
+                          obs.COUNT_BUCKETS).observe(self._unsynced)
+            with obs.span("wal.fsync"):
+                self._f.flush()
+                os.fsync(self._f.fileno())
             self._unsynced = 0
 
     def sync(self) -> None:

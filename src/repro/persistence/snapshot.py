@@ -29,6 +29,7 @@ import os
 import shutil
 from typing import Optional, Tuple
 
+from repro import obs
 from repro.checkpoint.checkpoint import (CheckpointError, checkpoint_steps,
                                          restore_checkpoint, save_checkpoint)
 
@@ -54,10 +55,12 @@ def wal_dir(data_dir: str) -> str:
 
 def write_snapshot(data_dir: str, index, last_seq: int) -> str:
     """One snapshot at step ``last_seq``. Atomic (tmp + fsync + rename)."""
-    tree, meta = index.state_tree()
-    extra = {"last_seq": int(last_seq), "meta": meta,
-             "config_fingerprint": config_fingerprint(index.cfg)}
-    return save_checkpoint(snapshot_dir(data_dir), int(last_seq), tree, extra)
+    with obs.span("snapshot.write"):
+        tree, meta = index.state_tree()
+        extra = {"last_seq": int(last_seq), "meta": meta,
+                 "config_fingerprint": config_fingerprint(index.cfg)}
+        return save_checkpoint(snapshot_dir(data_dir), int(last_seq), tree,
+                               extra)
 
 
 def read_snapshot(data_dir: str, cfg, step: int) -> Tuple[dict, dict, int]:
@@ -65,7 +68,8 @@ def read_snapshot(data_dir: str, cfg, step: int) -> Tuple[dict, dict, int]:
     leaf checksum and the config fingerprint. Raises ``CheckpointError``
     naming the offending leaf on any mismatch."""
     sdir = snapshot_dir(data_dir)
-    tree, _, extra = restore_checkpoint(sdir, like=None, step=step)
+    with obs.span("snapshot.read"):
+        tree, _, extra = restore_checkpoint(sdir, like=None, step=step)
     want = config_fingerprint(cfg)
     got = extra.get("config_fingerprint")
     if got != want:

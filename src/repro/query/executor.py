@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import delta as delta_mod
 from repro.core import graph_store as graph_mod
 from repro.core import ivf as ivf_mod
@@ -144,19 +145,23 @@ def run_traverse(index, t: PTraverse, sv: jax.Array, si: jax.Array,
     g = index.graph
     if index.boosted_weights is not None:
         g = g._replace(edge_weight=index.boosted_weights)
-    graph_scores = trav_mod.multi_hop_batch(
-        g, si, sv, n_hops=t.n_hops, edge_type_mask=t.edge_type_mask,
-        node_mask=node_pass, damping=t.damping)                     # (Q, N)
-    w = (adaptive_weights(sv, base_wv=cfg.w_vector, base_wg=cfg.w_graph)
-         if cfg.adaptive_weights else
-         FusionWeights(jnp.full((sv.shape[0],), cfg.w_vector),
-                       jnp.full((sv.shape[0],), cfg.w_graph)))
-    if t.repr == "sparse":
-        return _fuse_candidates(sv, si, graph_scores, w.w_vector, w.w_graph,
-                                k_fuse=t.k_fuse, frontier=t.frontier,
-                                node_pass=node_pass)
-    return _fuse_dense(sv, si, graph_scores, w.w_vector, w.w_graph,
-                       k_fuse=t.k_fuse, node_pass=node_pass)
+    with obs.span("query.traversal") as sp:
+        graph_scores = sp.fence(trav_mod.multi_hop_batch(
+            g, si, sv, n_hops=t.n_hops, edge_type_mask=t.edge_type_mask,
+            node_mask=node_pass, damping=t.damping))                # (Q, N)
+    with obs.span("query.fusion") as sp:
+        w = (adaptive_weights(sv, base_wv=cfg.w_vector, base_wg=cfg.w_graph)
+             if cfg.adaptive_weights else
+             FusionWeights(jnp.full((sv.shape[0],), cfg.w_vector),
+                           jnp.full((sv.shape[0],), cfg.w_graph)))
+        if t.repr == "sparse":
+            out = _fuse_candidates(sv, si, graph_scores, w.w_vector,
+                                   w.w_graph, k_fuse=t.k_fuse,
+                                   frontier=t.frontier, node_pass=node_pass)
+        else:
+            out = _fuse_dense(sv, si, graph_scores, w.w_vector, w.w_graph,
+                              k_fuse=t.k_fuse, node_pass=node_pass)
+        return sp.fence(out)
 
 
 @functools.partial(jax.jit, static_argnames=("k_fuse",))
@@ -256,17 +261,23 @@ def run_topk(sv: jax.Array, si: jax.Array, k: int) -> State:
 def execute(index, phys: PhysicalPlan, *, truncate: bool = True) -> State:
     """Runs a compiled plan. truncate=False returns the last stage's full
     candidate set (the facade's rerank lane re-scores it before cutting)."""
-    if isinstance(phys.source, PSetOp):
-        sv, si = run_setop(index, phys.source)
-        if phys.node_pass is not None:
-            sv, si = _post_filter(sv, si, phys.node_pass)
-    else:
-        sv, si = run_seed(index, phys.source, phys.node_pass)
-    for st in phys.stages:
-        if isinstance(st, PTraverse):
-            sv, si = run_traverse(index, st, sv, si, phys.node_pass)
+    with obs.span("query.execute") as root:
+        if isinstance(phys.source, PSetOp):
+            with obs.span("query.setop") as sp:
+                sv, si = sp.fence(run_setop(index, phys.source))
+                if phys.node_pass is not None:
+                    sv, si = sp.fence(
+                        _post_filter(sv, si, phys.node_pass))
         else:
-            sv, si = run_rescore(index, st, sv, si)
-    if truncate:
-        return run_topk(sv, si, phys.k)
-    return sv, si
+            with obs.span("query.seed_scan") as sp:
+                sv, si = sp.fence(
+                    run_seed(index, phys.source, phys.node_pass))
+        for st in phys.stages:
+            if isinstance(st, PTraverse):
+                sv, si = run_traverse(index, st, sv, si, phys.node_pass)
+            else:
+                with obs.span("query.cross_modal") as sp:
+                    sv, si = sp.fence(run_rescore(index, st, sv, si))
+        if truncate:
+            sv, si = run_topk(sv, si, phys.k)
+        return root.fence((sv, si))

@@ -49,6 +49,7 @@ from typing import Any, Optional, Tuple, Union
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core.cost_model import (DeviceLayoutPlan, FilteredScanPlan,
                                    estimate_selectivity, plan_filtered_scan,
                                    plan_fusion, plan_seed_width, select_plan)
@@ -132,6 +133,17 @@ def compile_plan(index, plan, *, k: Optional[int] = None,
     width when the plan has no ``topk`` (the plan's own wins). node_pass:
     precompiled predicate mask (skips recompiling the chain's Where).
     fusion_repr: force "sparse"/"dense" fusion (None = cost-based)."""
+    # one "query.plan" span per top-level compile; set-op branches recurse
+    # through _compile_plan so the histogram counts whole compiles, not
+    # every branch
+    with obs.span("query.plan"):
+        return _compile_plan(index, plan, k=k, node_pass=node_pass,
+                             fusion_repr=fusion_repr)
+
+
+def _compile_plan(index, plan, *, k: Optional[int] = None,
+                  node_pass: Optional[jax.Array] = None,
+                  fusion_repr: Optional[str] = None) -> PhysicalPlan:
     if isinstance(plan, Q):
         plan = plan.plan
     cfg = index.cfg
@@ -148,10 +160,10 @@ def compile_plan(index, plan, *, k: Optional[int] = None,
         branch_k = plan_seed_width(k, True)
         source: Union[PSeed, PSetOp] = PSetOp(
             plan.source.kind,
-            compile_plan(index, plan.source.left, k=branch_k,
-                         fusion_repr=fusion_repr),
-            compile_plan(index, plan.source.right, k=branch_k,
-                         fusion_repr=fusion_repr))
+            _compile_plan(index, plan.source.left, k=branch_k,
+                          fusion_repr=fusion_repr),
+            _compile_plan(index, plan.source.right, k=branch_k,
+                          fusion_repr=fusion_repr))
         c = (source.left.k + source.right.k if source.kind == "union"
              else source.left.k)
     else:

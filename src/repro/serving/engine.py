@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import HMGIIndex
 from repro.models import lm
 from repro.serving.scheduler import (ContinuousBatcher, MaintenanceDriver,
@@ -113,9 +114,11 @@ class RAGEngine:
     def _prefill_slot(self, slot: int, prompt: np.ndarray):
         toks = jnp.asarray(prompt)[None, :]
         opts = self._opts
-        logits, cache = lm.prefill(
-            self.lm_cfg, self.params, toks, self.mesh, opts,
-            margin=self._cache[0].shape[2] - len(prompt))
+        with obs.span("serving.prefill") as sp:
+            logits, cache = lm.prefill(
+                self.lm_cfg, self.params, toks, self.mesh, opts,
+                margin=self._cache[0].shape[2] - len(prompt))
+            sp.fence(logits)
         # splice this request's cache into the shared slot cache — all
         # leaves, including the (L, 1, clen) slot-position row: decode masks
         # each slot's attention by its own positions
@@ -136,27 +139,35 @@ class RAGEngine:
         slots write KV at the wrong cache index and attend beyond their own
         history. Inactive slots decode garbage into their own rows only;
         admission re-prefills the row before reuse."""
-        admitted = self.batcher.admit()
-        for slot in admitted:
-            req = self.batcher.requests[self.batcher.slots[slot].rid]
-            self._prefill_slot(slot, req.prompt)
-        if self.maintenance is not None:
-            # between decode steps: one bounded maintenance step keeps
-            # ingest-while-search from ever paying a full compaction stall
-            if self.maintenance.tick() is not None:
-                self.stats["maintenance_runs"] += 1
-        if not any(s.active for s in self.batcher.slots):
-            return []
-        pos = np.array([s.pos for s in self.batcher.slots], np.int32)
-        logits, self._cache = self._decode(
-            self.params, self._cache, jnp.asarray(self._tokens),
-            jnp.asarray(pos))
-        nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
-        self.batcher.record_tokens(nxt)
-        self._tokens = nxt
-        self.stats["ticks"] += 1
-        self.stats["tokens"] += int(np.sum(self.batcher.active_mask()))
-        return list(nxt)
+        with obs.span("serving.tick"):
+            admitted = self.batcher.admit()
+            for slot in admitted:
+                req = self.batcher.requests[self.batcher.slots[slot].rid]
+                self._prefill_slot(slot, req.prompt)
+            if self.maintenance is not None:
+                # between decode steps: one bounded maintenance step keeps
+                # ingest-while-search from ever paying a full compaction
+                # stall
+                if self.maintenance.tick() is not None:
+                    self.stats["maintenance_runs"] += 1
+            occupancy = int(np.sum(self.batcher.active_mask()))
+            if occupancy == 0:
+                return []
+            obs.histogram("serving.batch_occupancy",
+                          obs.COUNT_BUCKETS).observe(occupancy)
+            pos = np.array([s.pos for s in self.batcher.slots], np.int32)
+            with obs.span("serving.decode_step") as sp:
+                logits, self._cache = self._decode(
+                    self.params, self._cache, jnp.asarray(self._tokens),
+                    jnp.asarray(pos))
+                # argmax forces the step's result to host, so the decode
+                # span is honestly fenced without obs_sync_spans
+                nxt = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+            self.batcher.record_tokens(nxt)
+            self._tokens = nxt
+            self.stats["ticks"] += 1
+            self.stats["tokens"] += int(np.sum(self.batcher.active_mask()))
+            return list(nxt)
 
     def run_to_completion(self, max_ticks: int = 1000) -> Dict[int, List[int]]:
         t = 0

@@ -5,10 +5,13 @@ sized for a fixed-shape jitted decode step).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Deque, Dict, List, Optional
 
 import numpy as np
+
+from repro import obs
 
 
 @dataclasses.dataclass
@@ -18,6 +21,7 @@ class Request:
     max_new_tokens: int = 16
     generated: Optional[List[int]] = None
     done: bool = False
+    submitted_s: float = 0.0           # perf_counter at submit (queue wait)
 
 
 @dataclasses.dataclass
@@ -38,8 +42,11 @@ class ContinuousBatcher:
 
     def submit(self, req: Request):
         req.generated = []
+        req.submitted_s = time.perf_counter()
         self.requests[req.rid] = req
         self.queue.append(req)
+        obs.counter("serving.submitted").inc()
+        obs.gauge("serving.queue_depth").set(len(self.queue))
 
     def admit(self) -> List[int]:
         """Fills free slots from the queue; returns newly admitted slot ids.
@@ -62,6 +69,11 @@ class ContinuousBatcher:
             s.pos = len(req.prompt)
             s.remaining = req.max_new_tokens
             newly.append(i)
+            obs.counter("serving.admitted").inc()
+            obs.observe_ms("serving.queue_wait",
+                           time.perf_counter() - req.submitted_s)
+        if newly:
+            obs.gauge("serving.queue_depth").set(len(self.queue))
         return newly
 
     def record_prefill_token(self, slot: int, token: int):
@@ -77,6 +89,8 @@ class ContinuousBatcher:
         if s.remaining <= 0:
             req.done = True
             s.active = False
+            obs.counter("serving.evicted").inc()
+            obs.counter("serving.completed").inc()
 
     def record_tokens(self, tokens: np.ndarray):
         """tokens (n_slots,) — one decoded token per slot this step."""
@@ -90,6 +104,8 @@ class ContinuousBatcher:
             if s.remaining <= 0:
                 req.done = True
                 s.active = False
+                obs.counter("serving.evicted").inc()
+                obs.counter("serving.completed").inc()
 
     @property
     def any_active(self) -> bool:
@@ -139,6 +155,11 @@ class MaintenanceDriver:
                 self.snapshots += 1
         if self.ticks % self.interval:
             return None
-        self.last_report = self.index.maintain(budget=self.budget_rows)
+        # "maintenance.stall" is the decode-tick stall this driver causes:
+        # the inline maintain() wall time as seen from the serving loop
+        # (index.maintain's own histogram counts every pass, including the
+        # mutation-path auto-triggers)
+        with obs.span("maintenance.stall"):
+            self.last_report = self.index.maintain(budget=self.budget_rows)
         self.runs += 1
         return self.last_report

@@ -15,6 +15,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import numpy as np
 
+from repro import obs
 from repro.checkpoint import CheckpointManager
 from repro.runtime.fault import HeartbeatMonitor, RetryPolicy
 
@@ -67,11 +68,14 @@ class Trainer:
             def one_step():
                 if fail_injector is not None:
                     fail_injector(self.step)
+                # the loss sync keeps the measured step honest regardless
+                # of obs_sync_spans — training always wants real step time
                 t0 = time.perf_counter()
                 params, opt_state, metrics = self.step_fn(
                     self.params, self.opt_state, batch)
                 jax.block_until_ready(metrics["loss"])
                 dt = time.perf_counter() - t0
+                obs.observe_ms("train.step", dt)
                 return params, opt_state, metrics, dt
 
             params, opt_state, metrics, dt = self.retry.run(

@@ -35,7 +35,7 @@ HOT_PATH_MODULES = (
     "src/repro/core/traversal.py",
     "src/repro/query/executor.py",
 )
-HOT_PATH_DIRS = ("src/repro/kernels/",)
+HOT_PATH_DIRS = ("src/repro/kernels/", "src/repro/obs/")
 
 # --------------------------------------------------------------------- HMG002
 # callee name -> {param name: positional index or None (kw-only)}.
