@@ -46,8 +46,9 @@ REQUEST_HIST = "serving.request_ms"
 
 
 def _one_query(index, q1, modality, k):
-    sv, _ = index.search(q1, modality, k=k)
+    sv, si = index.search(q1, modality, k=k)
     jax.block_until_ready(sv)
+    return sv, si
 
 
 def calibrate(index, queries, modality, k, warmup=8, trials=32) -> float:
@@ -80,10 +81,14 @@ def overhead_check(index, queries, modality, k, rounds=6, per_round=24):
 
 
 def run_level(index, queries, modality, k, n_streams, duration_s,
-              interval_s) -> dict:
+              interval_s, check_ref=None) -> dict:
     """One concurrency level: n_streams open-loop clients for duration_s.
     Latency is measured from each request's *scheduled* arrival time, so a
-    request that waited on a busy device is charged its queue time."""
+    request that waited on a busy device is charged its queue time.
+
+    check_ref: optional per-query (scores, ids) precomputed single-thread
+    reference — every stream then validates each response bit-exactly, so
+    the bench measures correctness under load, not just latency."""
     obs.reset()
     barrier = threading.Barrier(n_streams + 1)
     errors = []
@@ -100,12 +105,19 @@ def run_level(index, queries, modality, k, n_streams, duration_s,
                 now = time.perf_counter()
                 if sched > now:
                     time.sleep(sched - now)
-                q1 = queries[(sid + n) % len(queries)][None]
-                _one_query(index, q1, modality, k)
+                qi = (sid + n) % len(queries)
+                sv, si = _one_query(index, queries[qi][None], modality, k)
                 obs.observe_ms(REQUEST_HIST, time.perf_counter() - sched)
+                if check_ref is not None:
+                    rv, ri = check_ref[qi]
+                    if not (np.array_equal(np.asarray(sv), rv)
+                            and np.array_equal(np.asarray(si), ri)):
+                        raise RuntimeError(
+                            f"response for query {qi} diverged from the "
+                            "single-thread reference under concurrency")
                 n += 1
         except Exception as e:          # surface, don't hang the join
-            errors.append(e)
+            errors.append((sid, e))
 
     threads = [threading.Thread(target=stream, args=(s,), daemon=True)
                for s in range(n_streams)]
@@ -117,7 +129,12 @@ def run_level(index, queries, modality, k, n_streams, duration_s,
         t.join()
     elapsed = time.perf_counter() - t0
     if errors:
-        raise errors[0]
+        # surface EVERY failed stream, not just the first — a race that
+        # hits 3 of 64 streams reads very differently from one bad query
+        detail = "; ".join(f"stream {sid}: {e!r}" for sid, e in errors)
+        raise RuntimeError(
+            f"{len(errors)} of {n_streams} stream(s) failed: {detail}"
+        ) from errors[0][1]
     h = obs.registry().histogram(REQUEST_HIST)
     return {"streams": n_streams, "requests": h.count,
             "qps": h.count / elapsed,
@@ -136,6 +153,9 @@ def main():
     ap.add_argument("--utilization", type=float, default=0.7,
                     help="offered load at the largest level, as a fraction "
                          "of calibrated single-stream capacity")
+    ap.add_argument("--check", action="store_true",
+                    help="validate every response bit-exactly against a "
+                         "precomputed single-thread reference")
     args = ap.parse_args()
     levels = [int(s) for s in args.streams.split(",")]
 
@@ -154,14 +174,24 @@ def main():
     print(f"# obs overhead: p50 {en_p50:.3f} ms enabled vs {dis_p50:.3f} ms "
           f"uninstrumented ({delta:+.1f}%, {verdict})")
 
+    check_ref = None
+    if args.check:
+        check_ref = [tuple(np.asarray(x) for x in
+                           _one_query(index, q[None], modality, args.k))
+                     for q in queries]
+        print(f"# check: {len(check_ref)} single-thread reference "
+              "responses precomputed; every stream validates bit-exactly")
+
     # per-stream interval so the top level offers utilization × capacity
     interval_s = t_service * max(levels) / args.utilization
     print("streams,requests,offered_qps,qps,p50_ms,p99_ms")
     for s in levels:
         r = run_level(index, queries, modality, args.k, s, args.duration,
-                      interval_s)
+                      interval_s, check_ref=check_ref)
         print(f"{r['streams']},{r['requests']},{r['offered_qps']:.1f},"
               f"{r['qps']:.1f},{r['p50_ms']:.3f},{r['p99_ms']:.3f}")
+    if args.check:
+        print("# check: PASS (all responses matched the reference)")
 
 
 if __name__ == "__main__":

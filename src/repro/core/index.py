@@ -12,6 +12,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import threading
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -127,12 +128,27 @@ class ModalityIndex:
 
 
 class HMGIIndex:
-    """The Hybrid Multimodal Graph Index."""
+    """The Hybrid Multimodal Graph Index.
+
+    Thread-safety contract (docs/DESIGN.md §9): searches are safe from any
+    number of threads, concurrently with at most one mutating caller.
+    ``_write_lock`` (reentrant) serialises every mutation — insert, delete,
+    compact, maintain, repartition, ingest, restore — plus the state_tree
+    snapshot, so writers and snapshotters see a consistent index.
+    ``_cache_lock`` guards the two lazily-built read-path caches
+    (``ModalityIndex.ivf_sharded`` and ``.id_rows``) with double-checked
+    locking: searchers never touch ``_write_lock``, and the hot path is
+    lock-free once a cache is published. Lock order is
+    ``_write_lock -> _cache_lock -> leaf locks`` (obs, WorkloadStats) —
+    enforced statically as HMG201-204 and dynamically by tools/racecheck.
+    """
 
     def __init__(self, cfg: HMGIConfig, mesh=None, seed: int = 0):
         self.cfg = cfg
         self.mesh = mesh
         self.key = jax.random.PRNGKey(seed)
+        self._write_lock = threading.RLock()   # serialises mutations
+        self._cache_lock = threading.Lock()    # guards lazy read caches
         self.modalities: Dict[str, ModalityIndex] = {}
         self.graph: Optional[GraphStore] = None
         self.attributes: Optional[NodeAttributes] = None
@@ -163,6 +179,12 @@ class HMGIIndex:
         partition's capacity) is routed to the delta store — grown if
         needed, never dropped — and per-partition maintenance statistics
         are baselined from the build's own assignment."""
+        with self._write_lock:
+            self._ingest_locked(embeddings, n_nodes, edges, build_nsw,
+                                node_attrs)
+
+    def _ingest_locked(self, embeddings, n_nodes, edges, build_nsw,
+                       node_attrs):
         self.n_nodes = n_nodes
         for mod, (ids, vecs) in embeddings.items():
             vecs = jnp.asarray(vecs, jnp.float32)
@@ -242,15 +264,45 @@ class HMGIIndex:
 
     def _ensure_sharded(self, modality: str, n_shards: int) -> ivf_mod.IVFIndex:
         """The row-sharded stable replica (built lazily, leaves placed over
-        the mesh's db axes; invalidated whenever the stable store changes)."""
+        the mesh's db axes; invalidated whenever the stable store changes).
+
+        Double-checked: concurrent searchers must neither observe a
+        half-built replica nor build it twice — the build happens once
+        under ``_cache_lock`` and is published as a single reference
+        assignment; the replica itself is immutable once published."""
         m = self.modalities[modality]
-        if m.ivf_sharded is None or m.ivf_sharded.ids.shape[0] != n_shards:
-            sh = ivf_mod.shard_index(m.ivf, n_shards)
-            if self.mesh is not None:
-                sh = jax.tree_util.tree_map(ivf_mod.shard_placement(self.mesh),
-                                            sh)
-            m.ivf_sharded = sh
-        return m.ivf_sharded
+        # staticcheck: disable=HMG201 (double-checked fast path: a published replica is immutable and assigned atomically; a stale None just falls through to the locked build)
+        sh = m.ivf_sharded
+        if sh is not None and sh.ids.shape[0] == n_shards:
+            return sh
+        with self._cache_lock:
+            sh = m.ivf_sharded
+            if sh is None or sh.ids.shape[0] != n_shards:
+                sh = ivf_mod.shard_index(m.ivf, n_shards)
+                if self.mesh is not None:
+                    sh = jax.tree_util.tree_map(
+                        ivf_mod.shard_placement(self.mesh), sh)
+                m.ivf_sharded = sh
+            return sh
+
+    def _modality_id_rows(self, modality: str) -> jax.Array:
+        """The (n_nodes,) global-id -> row scatter map for cross-modal
+        re-scoring, built lazily once per (modality, corpus-size) and
+        shared by every search thread. Same double-checked publication
+        protocol as ``_ensure_sharded``; invalidated (under
+        ``_cache_lock``) when an insert adds new ids."""
+        m = self.modalities[modality]
+        # staticcheck: disable=HMG201 (double-checked fast path: a published rows array is immutable and assigned atomically; a stale None just falls through to the locked build)
+        rows = m.id_rows
+        if rows is not None and rows.shape[0] == self.n_nodes:
+            return rows
+        with self._cache_lock:
+            rows = m.id_rows
+            if rows is None or rows.shape[0] != self.n_nodes:
+                from repro.query.executor import _modality_rows
+                rows = _modality_rows(m.ids, self.n_nodes)
+                m.id_rows = rows
+            return rows
 
     def query(self, plan, *, trace: bool = False):
         """Runs a declarative plan (see ``repro.query.Q``): compiles it
@@ -394,10 +446,10 @@ class HMGIIndex:
         through ``maintain`` — bounded incremental drains instead of a
         stop-the-world ``compact`` — growing the delta only if maintenance
         could not free enough slots. Writes are never dropped."""
-        with obs.span("index.insert"):
-            self._insert(modality, ids, vectors)
+        with obs.span("index.insert"), self._write_lock:
+            self._insert_locked(modality, ids, vectors)
 
-    def _insert(self, modality: str, ids, vectors):
+    def _insert_locked(self, modality: str, ids, vectors):
         m = self.modalities[modality]
         v = self._norm_queries(vectors)
         # free delta room BEFORE any visibility change: a forced drain here
@@ -431,7 +483,8 @@ class HMGIIndex:
             sel = jnp.asarray(~upd_mask)
             m.vectors = jnp.concatenate([m.vectors, v[sel]], axis=0)
             m.ids = jnp.concatenate([m.ids, ids32[sel]])
-            m.id_rows = None        # new ids -> the row cache is stale
+            with self._cache_lock:
+                m.id_rows = None    # new ids -> the row cache is stale
         # never drop writes: insert_grow widens the store if the (already
         # drained, above) delta still lacks room for the batch
         m.delta = delta_mod.insert_grow(m.delta, v, ids32)
@@ -449,7 +502,7 @@ class HMGIIndex:
         vanish from every scan path immediately and are physically purged by
         maintenance/compaction). Auto-triggers a maintenance pass so
         hollowed-out partitions eventually merge away."""
-        with obs.span("index.delete"):
+        with obs.span("index.delete"), self._write_lock:
             m = self.modalities[modality]
             ids_np = np.asarray(jnp.asarray(ids, jnp.int32))
             self._record_dead(m, ids_np)
@@ -464,10 +517,15 @@ class HMGIIndex:
         The adaptive path (``maintain`` / ``cfg.maint_auto``) drains the
         delta in bounded chunks instead — this remains the one-shot fallback
         and the reference the incremental drain must match."""
+        with self._write_lock:
+            self._compact_locked(modality)
+
+    def _compact_locked(self, modality: str):
         m = self.modalities[modality]
         m.ivf, m.delta = delta_mod.compact(self._split(), m.ivf, m.delta,
                                            m.vectors, m.ids)
-        m.ivf_sharded = None    # stable store rebuilt -> sharded replica stale
+        with self._cache_lock:
+            m.ivf_sharded = None  # stable rebuilt -> sharded replica stale
         if m.stats is not None:
             # the rebuild dropped every dead stable row and re-packed slots
             m.stats.dead[:] = 0
@@ -491,18 +549,23 @@ class HMGIIndex:
         — no full rebuild, and survivors that don't fit anywhere are routed
         to the delta, never dropped. Returns True if a split was applied."""
         from repro.maintenance import executor as maint_exec
-        m = self.modalities[modality]
-        if m.workload is None or not m.workload.should_repartition():
-            return False
-        # a parked partition's pre-merge hits must not win the argmax (its
-        # heat is never reset on merge) and suppress the real hot split
-        hits = (np.where(m.stats.parked, -1, m.workload.hits)
-                if m.stats is not None else m.workload.hits)
-        hot = int(np.argmax(hits))
-        res = maint_exec.split_hot(m, self.cfg, self._split(), m.stats, hot)
-        m.ivf_sharded = None    # stable slots moved -> sharded replica stale
-        m.workload.reset()
-        return bool(res.get("moved", 0))
+        with self._write_lock:
+            m = self.modalities[modality]
+            if m.workload is None or not m.workload.should_repartition():
+                return False
+            # a parked partition's pre-merge hits must not win the argmax
+            # (its heat is never reset on merge) and suppress the real hot
+            # split
+            hits = m.workload.hits_snapshot()
+            if m.stats is not None:
+                hits = np.where(m.stats.parked, -1, hits)
+            hot = int(np.argmax(hits))
+            res = maint_exec.split_hot(m, self.cfg, self._split(), m.stats,
+                                       hot)
+            with self._cache_lock:
+                m.ivf_sharded = None  # slots moved -> sharded replica stale
+            m.workload.reset()
+            return bool(res.get("moved", 0))
 
     def maintain(self, modality: Optional[str] = None,
                  budget: Optional[int] = None, *, need_rows: int = 0):
@@ -525,11 +588,13 @@ class HMGIIndex:
         each applied action bumps ``maintenance.actions.<kind>`` and its
         moved/drained/reclaimed rows accumulate in
         ``maintenance.rows_moved``."""
-        with obs.span("index.maintain"):
-            return self._maintain(modality, budget, need_rows=need_rows)
+        with obs.span("index.maintain"), self._write_lock:
+            return self._maintain_locked(modality, budget,
+                                         need_rows=need_rows)
 
-    def _maintain(self, modality: Optional[str] = None,
-                  budget: Optional[int] = None, *, need_rows: int = 0):
+    def _maintain_locked(self, modality: Optional[str] = None,
+                         budget: Optional[int] = None, *,
+                         need_rows: int = 0):
         from repro.maintenance import executor as maint_exec
         cfg = self.cfg
         budget = cfg.maint_budget_rows if budget is None else int(budget)
@@ -544,7 +609,7 @@ class HMGIIndex:
                 m.stats = PartitionStats.from_build(
                     m.vectors, m.ids, m.ivf,
                     max_ids=int(m.delta.tombstones.shape[0]))
-            heat = None if m.workload is None else m.workload.hits
+            heat = None if m.workload is None else m.workload.hits_snapshot()
             actions = plan_maintenance(
                 m.stats.summarize(m, heat),
                 budget_rows=budget,
@@ -573,7 +638,8 @@ class HMGIIndex:
                     # further chunks this pass would spin without progress
                     skip_chunks = True
                 if res.get("ivf_changed", False):
-                    m.ivf_sharded = None    # slots/centroids moved
+                    with self._cache_lock:
+                        m.ivf_sharded = None  # slots/centroids moved
                     if act.kind == "split_hot" and m.workload is not None:
                         m.workload.reset()
             if cleared and m.nsw is not None:
@@ -610,6 +676,10 @@ class HMGIIndex:
         Host-side numpy leaves (stats, heat) keep their exact dtypes —
         they must round-trip bit-identically, not through jnp's 32-bit
         coercion."""
+        with self._write_lock:
+            return self._state_tree_locked()
+
+    def _state_tree_locked(self):
         tree: Dict[str, object] = {"key": self.key}
         meta: Dict[str, object] = {
             "n_nodes": int(self.n_nodes),
@@ -632,7 +702,7 @@ class HMGIIndex:
                 for f in ("vectors", "neighbors", "entry"):
                     tree[f"{p}/nsw/{f}"] = getattr(m.nsw, f)
             if m.workload is not None:
-                tree[f"{p}/workload_hits"] = np.asarray(m.workload.hits)
+                tree[f"{p}/workload_hits"] = m.workload.hits_snapshot()
             if m.stats is not None:
                 st = m.stats
                 for f in ("baseline", "drift_sum", "drift_cnt", "dead",
@@ -669,6 +739,10 @@ class HMGIIndex:
         output. Device arrays re-enter via jnp; host-side stat arrays stay
         numpy with their stored dtypes. The result is bit-identical to the
         snapshotted index for every search path."""
+        with self._write_lock:
+            self._restore_state_locked(tree, meta)
+
+    def _restore_state_locked(self, tree, meta) -> None:
         self.n_nodes = int(meta["n_nodes"])
         self.key = jnp.asarray(np.asarray(tree["key"]))
         self.modalities = {}
@@ -695,7 +769,7 @@ class HMGIIndex:
             k = ivf.n_partitions
             if mm["workload"]:
                 m.workload = WorkloadStats(k)
-                m.workload.hits = np.asarray(tree[f"{p}/workload_hits"]).copy()
+                m.workload.load_hits(np.asarray(tree[f"{p}/workload_hits"]))
             if mm["stats"]:
                 st = PartitionStats(k, int(mm["stats_max_ids"]))
                 for f in ("baseline", "drift_sum", "drift_cnt", "dead",

@@ -17,6 +17,7 @@ changing any jitted shape.
 from __future__ import annotations
 
 import functools
+import threading
 from typing import NamedTuple, Optional
 
 import jax
@@ -115,25 +116,50 @@ def fit(key: jax.Array, x: jax.Array, n_clusters: int, n_iters: int = 16) -> KMe
 # ---------------------------------------------------------------------------
 
 class WorkloadStats:
-    """Host-side probe-frequency tracker driving online repartitioning."""
+    """Host-side probe-frequency tracker driving online repartitioning.
+
+    Search threads bump ``record`` concurrently with writer-side
+    ``reset``/``should_repartition``, so every touch of ``hits`` goes
+    through ``_lock`` (``np.add.at`` is not atomic under concurrent
+    mutation of the same buffer). Guarded-by contract enforced as
+    staticcheck HMG201; readers take ``hits_snapshot()``."""
 
     def __init__(self, n_partitions: int, imbalance_threshold: float = 4.0):
         self.hits = np.zeros(n_partitions, np.int64)
         self.threshold = imbalance_threshold
+        self._lock = threading.Lock()
 
     def record(self, probed_partitions: np.ndarray):
-        np.add.at(self.hits, np.asarray(probed_partitions).reshape(-1), 1)
+        idx = np.asarray(probed_partitions).reshape(-1)
+        with self._lock:
+            np.add.at(self.hits, idx, 1)
+
+    def hits_snapshot(self) -> np.ndarray:
+        """Coherent copy for readers (state_tree, repartition decisions)."""
+        with self._lock:
+            return self.hits.copy()
+
+    def load_hits(self, hits: np.ndarray) -> None:
+        """Restore path: replace the counters wholesale."""
+        with self._lock:
+            self.hits = np.asarray(hits, np.int64).copy()
 
     @property
     def imbalance(self) -> float:
-        mean = self.hits.mean() + 1e-9
-        return float(self.hits.max() / mean)
+        with self._lock:
+            hits = self.hits.copy()
+        mean = hits.mean() + 1e-9
+        return float(hits.max() / mean)
 
     def should_repartition(self) -> bool:
-        return self.hits.sum() > 0 and self.imbalance > self.threshold
+        with self._lock:
+            hits = self.hits.copy()
+        mean = hits.mean() + 1e-9
+        return hits.sum() > 0 and float(hits.max() / mean) > self.threshold
 
     def reset(self):
-        self.hits[:] = 0
+        with self._lock:
+            self.hits[:] = 0
 
 
 def split_two(key, members: jax.Array, n_iters: int = 8):

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Dict, Iterator, Optional
 
 import numpy as np
@@ -42,22 +43,64 @@ class SyntheticRecsysStream:
         return {"ids": ids.astype(np.int32), "labels": y}
 
 
+def _drain(q: Optional["queue.Queue"]) -> None:
+    if q is None:
+        return
+    try:
+        while True:
+            q.get_nowait()
+    except queue.Empty:
+        pass
+
+
 class Prefetcher:
-    """Background-thread prefetch of ``stream.batch_at(step)``."""
+    """Background-thread prefetch of ``stream.batch_at(step)``, yielding
+    ``(step, batch)`` tuples in step order.
+
+    Concurrency contract (guarded-by ``_lock``: ``q``/``step``/``_stop``/
+    ``_thread`` — HMG201/HMG204): the worker receives its queue, stop
+    event and start step as *arguments* and never reads them off ``self``,
+    so restarts can swap them without publication races. ``close()`` stops
+    the worker *before* the final drain: set the stop event, then
+    drain-while-joining under a bounded deadline (the worker may be blocked
+    mid-``put`` — draining unblocks it; a put landing after the last drain
+    cannot happen because the join completes first). ``start()`` after
+    ``close()`` resumes from the next unconsumed step — the restart path
+    the determinism contract (batch ``i`` is a pure function of (seed, i))
+    exists for.
+    """
+
+    JOIN_TIMEOUT_S = 5.0
 
     def __init__(self, stream, start_step: int = 0, depth: int = 2):
         self.stream = stream
-        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.depth = depth
+        self._lock = threading.Lock()
+        self.q: Optional["queue.Queue"] = None
         self.step = start_step
-        self._stop = threading.Event()
-        self._thread = threading.Thread(target=self._work, daemon=True)
-        self._thread.start()
+        self._stop: Optional[threading.Event] = None
+        self._thread: Optional[threading.Thread] = None
+        self.start()
 
-    def _work(self):
-        s = self.step
-        while not self._stop.is_set():
+    def start(self) -> None:
+        """(Re)start the worker from the next unconsumed step. Idempotent
+        while a worker is alive."""
+        with self._lock:
+            if self._thread is not None and self._thread.is_alive():
+                return
+            q: "queue.Queue" = queue.Queue(maxsize=self.depth)
+            stop = threading.Event()
+            t = threading.Thread(target=self._work, args=(stop, q, self.step),
+                                 daemon=True)
+            self.q = q
+            self._stop = stop
+            self._thread = t
+            t.start()
+
+    def _work(self, stop: threading.Event, q: "queue.Queue", s: int) -> None:
+        while not stop.is_set():
             try:
-                self.q.put((s, self.stream.batch_at(s)), timeout=0.2)
+                q.put((s, self.stream.batch_at(s)), timeout=0.2)
                 s += 1
             except queue.Full:
                 continue
@@ -66,13 +109,34 @@ class Prefetcher:
         return self
 
     def __next__(self):
-        return self.q.get()
+        with self._lock:
+            q = self.q
+        if q is None:
+            raise StopIteration          # closed and not restarted
+        item = q.get()                   # blocks OUTSIDE the lock (HMG202)
+        with self._lock:
+            self.step = item[0] + 1      # restart point: next unconsumed
+        return item
 
-    def close(self):
-        self._stop.set()
-        try:
-            while True:
-                self.q.get_nowait()
-        except queue.Empty:
-            pass
-        self._thread.join(timeout=2)
+    def close(self) -> None:
+        """Stop the worker, join it (bounded), and leave the queue empty.
+        Safe to call repeatedly; ``start()`` afterwards resumes."""
+        with self._lock:
+            thread, stop, q = self._thread, self._stop, self.q
+            self._thread = None
+        if stop is not None:
+            stop.set()
+        if thread is not None:
+            deadline = time.monotonic() + self.JOIN_TIMEOUT_S
+            while thread.is_alive() and time.monotonic() < deadline:
+                _drain(q)                # unblock a worker stuck in put()
+                thread.join(timeout=0.1)
+            if thread.is_alive():
+                raise RuntimeError(
+                    "Prefetcher worker failed to stop within "
+                    f"{self.JOIN_TIMEOUT_S}s")
+        # worker has exited: nothing can enqueue after this drain
+        _drain(q)
+        with self._lock:
+            if self.q is q:
+                self.q = None

@@ -141,13 +141,23 @@ class Histogram:
         return out
 
     def summary(self) -> Dict[str, float]:
+        # one lock acquisition for a coherent snapshot; percentiles are
+        # computed outside it (a nested samples() would deadlock on the
+        # non-reentrant Lock, and np.percentile needn't stall writers)
+        with self._lock:
+            count = self.count
+            total = self.total
+            vmax = self.vmax
+            window = np.asarray(self._window, dtype=np.float64)
+        pct = (lambda p: float(np.percentile(window, p))) \
+            if window.size else (lambda p: float("nan"))
         return {
-            "count": self.count,
-            "sum": self.total,
-            "max": self.vmax if self.count else float("nan"),
-            "p50": self.percentile(50),
-            "p90": self.percentile(90),
-            "p99": self.percentile(99),
+            "count": count,
+            "sum": total,
+            "max": vmax if count else float("nan"),
+            "p50": pct(50),
+            "p90": pct(90),
+            "p99": pct(99),
         }
 
 

@@ -181,10 +181,11 @@ def _fuse_dense(sv, si, graph_scores, wv, wg, *, k_fuse: int, node_pass=None):
 def run_rescore(index, r: PRescore, sv: jax.Array, si: jax.Array) -> State:
     m = index.modalities[r.modality]
     # the id->row map only changes when the modality gains new ids — cache
-    # it (an O(n_nodes) scatter per query would dwarf the re-score einsum)
-    if m.id_rows is None or m.id_rows.shape[0] != index.n_nodes:
-        m.id_rows = _modality_rows(m.ids, index.n_nodes)
-    return _rescore(r.query, m.vectors, m.id_rows, m.delta.tombstones,
+    # it (an O(n_nodes) scatter per query would dwarf the re-score einsum).
+    # The build is double-checked under the index's cache lock: concurrent
+    # search threads share one published map instead of racing the build.
+    rows = index._modality_id_rows(r.modality)
+    return _rescore(r.query, m.vectors, rows, m.delta.tombstones,
                     sv, si, jnp.float32(r.weight))
 
 

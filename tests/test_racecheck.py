@@ -1,0 +1,390 @@
+"""Concurrency invariants: HMG201-204 static fixtures, the dynamic
+lockset/interleaving harness, and a tier-1 concurrent-search smoke.
+
+Static fixtures go through the rule functions directly with a custom
+GuardSpec registry (the ``guards=``/``methods=`` hooks exist for exactly
+this), so the tests don't couple to the production registry's contents.
+The dynamic tests drive ``tools/racecheck.py``'s fixture caches and the
+canonical workload at a single seed; the CI racecheck job runs the full
+sweep.
+"""
+import ast
+import sys
+import textwrap
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))            # make `tools` importable
+
+from tools.staticcheck.concurrency import (      # noqa: E402
+    check_hmg201, check_hmg202, check_hmg203, check_hmg204,
+    collect_lock_edges)
+from tools.staticcheck.pragmas import (          # noqa: E402
+    KNOWN_RULES, filter_suppressed, scan_pragmas)
+from tools.staticcheck.registry import GuardSpec  # noqa: E402
+from tools import racecheck as rc                 # noqa: E402
+
+CONC = "src/x/conc.py"
+SPECS = (GuardSpec("Box", "x.conc", "_lock", ("items", "count"), ("x/conc.py",),
+                   receivers=("b",)),)
+METHODS = {"Box._refill_locked": "Box._lock"}
+
+
+def parse(src):
+    return ast.parse(textwrap.dedent(src))
+
+
+def rules_of(vs):
+    return [v.rule for v in vs]
+
+
+# ------------------------------------------------------------------- HMG201
+def test_hmg201_bad_unlocked_access():
+    vs = check_hmg201(CONC, parse("""
+        class Box:
+            def __init__(self):
+                self.items = []          # construction: exempt
+            def add(self, x):
+                self.items.append(x)     # read of guarded attr, no lock
+            def size(self):
+                return self.count        # same
+    """), guards=SPECS, methods=METHODS)
+    assert rules_of(vs) == ["HMG201", "HMG201"]
+    assert vs[0].line == 6 and vs[1].line == 8
+
+
+def test_hmg201_good_with_lock_and_locked_method():
+    vs = check_hmg201(CONC, parse("""
+        class Box:
+            def add(self, x):
+                with self._lock:
+                    self.items.append(x)
+            def _refill_locked(self):
+                self.count = 0           # registered *_locked: lock held
+            def refill(self):
+                with self._lock:
+                    self._refill_locked()
+    """), guards=SPECS, methods=METHODS)
+    assert vs == []
+
+
+def test_hmg201_nested_def_does_not_inherit_lock():
+    # the closure body runs later, possibly on another thread
+    vs = check_hmg201(CONC, parse("""
+        class Box:
+            def add(self):
+                with self._lock:
+                    def work():
+                        return self.items
+                    return work
+    """), guards=SPECS, methods=METHODS)
+    assert rules_of(vs) == ["HMG201"]
+
+
+def test_hmg201_named_receiver_audited_anywhere_in_file():
+    vs = check_hmg201(CONC, parse("""
+        def helper(b):
+            return b.items               # 'b' is a registered receiver
+        def ok(b):
+            with b._lock:
+                return b.items
+    """), guards=SPECS, methods=METHODS)
+    assert rules_of(vs) == ["HMG201"]
+    assert vs[0].line == 3
+
+
+def test_hmg201_unregistered_locked_method_flagged():
+    vs = check_hmg201(CONC, parse("""
+        class Box:
+            def _drain_locked(self):
+                pass
+    """), guards=SPECS, methods=METHODS)
+    assert rules_of(vs) == ["HMG201"]
+    assert "GUARDED_METHODS" in vs[0].message
+
+
+def test_hmg201_locked_call_site_requires_lock():
+    vs = check_hmg201(CONC, parse("""
+        class Box:
+            def refill(self):
+                self._refill_locked()    # caller does not hold the lock
+    """), guards=SPECS, methods=METHODS)
+    assert any("without holding" in v.message for v in vs)
+
+
+def test_hmg201_pragma_with_reason_suppresses():
+    src = textwrap.dedent("""
+        class Box:
+            def peek(self):
+                # staticcheck: disable=HMG201 (double-checked fast path: published value is immutable)
+                return self.items
+    """)
+    vs = check_hmg201(CONC, parse(src), guards=SPECS, methods=METHODS)
+    pragmas = scan_pragmas(CONC, src)
+    assert rules_of(vs) == ["HMG201"]
+    assert filter_suppressed(vs, pragmas) == []
+    assert pragmas.violations == []      # reasoned pragma is well-formed
+
+
+def test_hmg20x_rules_are_known_to_pragma_scanner():
+    assert {"HMG201", "HMG202", "HMG203", "HMG204"} <= set(KNOWN_RULES)
+
+
+# ------------------------------------------------------------------- HMG202
+def test_hmg202_bad_blocking_call_under_lock():
+    vs = check_hmg202(CONC, parse("""
+        import time
+        class Box:
+            def flush(self):
+                with self._lock:
+                    time.sleep(0.1)
+            def drain(self):
+                with self._cache_lock:
+                    self.fut.result()
+    """), methods=METHODS)
+    assert rules_of(vs) == ["HMG202", "HMG202"]
+
+
+def test_hmg202_good_wait_outside_and_deferred_def():
+    vs = check_hmg202(CONC, parse("""
+        import time
+        class Box:
+            def flush(self):
+                with self._lock:
+                    item = self.q
+                time.sleep(0.1)          # blocking, but lock released
+            def spawn(self):
+                with self._lock:
+                    def later():
+                        time.sleep(1)    # deferred: runs without the lock
+                    return later
+    """), methods=METHODS)
+    assert vs == []
+
+
+def test_hmg202_locked_method_body_audited():
+    vs = check_hmg202(CONC, parse("""
+        class Box:
+            def _refill_locked(self):
+                self.fut.wait()
+    """), methods=METHODS)
+    assert rules_of(vs) == ["HMG202"]
+    assert "Box._lock" in vs[0].message
+
+
+# ------------------------------------------------------------------- HMG203
+def test_hmg203_cycle_across_files_detected():
+    a = parse("""
+        class P:
+            def f(self):
+                with self._alock:
+                    with self._block:
+                        pass
+    """)
+    b = parse("""
+        class P:
+            def g(self):
+                with self._block:
+                    with self._alock:
+                        pass
+    """)
+    vs = check_hmg203([("x/a.py", a), ("x/b.py", b)],
+                      guards=SPECS, acquiring={}, methods={})
+    assert rules_of(vs) == ["HMG203"]
+    assert "cycle" in vs[0].message
+
+
+def test_hmg203_consistent_order_is_clean():
+    a = parse("""
+        class P:
+            def f(self):
+                with self._alock:
+                    with self._block:
+                        pass
+            def g(self):
+                with self._alock:
+                    with self._block:
+                        pass
+    """)
+    assert check_hmg203([("x/a.py", a)], guards=SPECS, acquiring={},
+                        methods={}) == []
+
+
+def test_hmg203_acquiring_call_creates_edge():
+    a = parse("""
+        class P:
+            def f(self):
+                with self._alock:
+                    stats.record(x)
+    """)
+    edges = collect_lock_edges("x/a.py", a, guards=SPECS,
+                               acquiring={"record": "Stats._lock"},
+                               methods={})
+    assert edges == [("P._alock", "Stats._lock", 5)]
+
+
+def test_hmg203_reentrant_same_lock_is_not_an_edge():
+    a = parse("""
+        class P:
+            def f(self):
+                with self._alock:
+                    with self._alock:    # RLock reentry: no self-edge
+                        pass
+    """)
+    assert collect_lock_edges("x/a.py", a, guards=SPECS, acquiring={},
+                              methods={}) == []
+
+
+# ------------------------------------------------------------------- HMG204
+def test_hmg204_undeclared_mutation_after_thread_start():
+    vs = check_hmg204(CONC, parse("""
+        import threading
+        class Box:
+            def __init__(self):
+                self.safe = 1            # before start: fine
+                self.t = threading.Thread(target=self.run)
+                self.t.start()
+                self.late = 2            # after start, undeclared
+            def poke(self):
+                self.other = 3           # worker may be running
+    """), guards=SPECS)
+    assert rules_of(vs) == ["HMG204", "HMG204"]
+    assert "late" in vs[0].message and "other" in vs[1].message
+
+
+def test_hmg204_declared_attrs_and_threadless_class_ok():
+    vs = check_hmg204(CONC, parse("""
+        import threading
+        class Box:
+            def __init__(self):
+                self.t = threading.Thread(target=self.run)
+                self.t.start()
+                self.count = 0           # declared in the registry
+            def poke(self):
+                self.items = []          # declared
+        class Plain:
+            def poke(self):
+                self.anything = 1        # no threads: not audited
+    """), guards=SPECS)
+    assert vs == []
+
+
+# ---------------------------------------------------------- dynamic: locksets
+def test_racy_lazy_cache_is_caught():
+    caught = 0
+    for seed in range(6):
+        r = rc.run_fixture(rc.RacyLazyCache, seed=seed)
+        if r["builds"] > 1 or r["warnings"]:
+            caught += 1
+    assert caught > 0, "no schedule exposed the unguarded lazy build"
+
+
+def test_guarded_lazy_cache_is_clean():
+    for seed in range(6):
+        r = rc.run_fixture(rc.GuardedLazyCache, seed=seed)
+        assert r["builds"] == 1
+        assert r["warnings"] == []
+
+
+def test_lockset_warning_names_attribute_and_thread():
+    r = rc.run_fixture(rc.RacyLazyCache, seed=0)
+    assert any("RacyLazyCache" in w and "lockset empty" in w
+               for w in r["warnings"])
+
+
+# ----------------------------------------------- dynamic: schedules & replay
+def test_schedule_string_round_trip():
+    s = rc.format_schedule(7, [0, 2, 1, 1, 0])
+    assert s == "7:0.2.1.1.0"
+    assert rc.parse_schedule(s) == (7, [0, 2, 1, 1, 0])
+    assert rc.parse_schedule("3:") == (3, [])
+
+
+def test_same_seed_same_schedule_same_result():
+    a = rc.run_fixture(rc.RacyLazyCache, seed=4)
+    b = rc.run_fixture(rc.RacyLazyCache, seed=4)
+    assert a["schedule"] == b["schedule"]
+    assert a["builds"] == b["builds"]
+    assert a["warnings"] == b["warnings"]
+
+
+def test_replaying_a_recorded_schedule_reproduces_it():
+    rec = rc.run_fixture(rc.RacyLazyCache, seed=5)
+    seed, choices = rc.parse_schedule(rec["schedule"])
+    rep = rc.run_fixture(rc.RacyLazyCache, seed=seed, replay=choices)
+    assert rep["schedule"] == rec["schedule"]
+    assert rep["builds"] == rec["builds"]
+
+
+def test_tracked_lock_maintains_held_set():
+    lk = rc.TrackedLock(threading.RLock(), "t")
+    assert rc.held_locks() == frozenset()
+    with lk:
+        with lk:                         # reentrant: counted
+            assert rc.held_locks() == {lk}
+        assert rc.held_locks() == {lk}
+    assert rc.held_locks() == frozenset()
+
+
+# ------------------------------------------------- dynamic: canonical workload
+def test_canonical_workload_single_seed():
+    r = rc.canonical_workload(seed=0, n_searchers=2, rounds=1)
+    assert r["warnings"] == []
+    assert r["mismatches"] == []
+    assert r["ok"]
+    assert r["schedule"].startswith("0:")
+
+
+# -------------------------------------------- tier-1 concurrent-search smoke
+def test_concurrent_search_matches_oracle():
+    """8 real (uninstrumented) threads hammer modality-"a" searches and the
+    lazily-built caches against a concurrent writer on "b"; every result
+    must be bit-identical to the single-threaded oracle."""
+    index, queries, writes = rc._build_index()
+    oracle = [rc._searcher_ops(index, queries[i % queries.shape[0]])
+              for i in range(8)]
+    # invalidate the lazy caches so the concurrent phase races cold builds
+    m = index.modalities["a"]
+    with index._cache_lock:
+        m.ivf_sharded = None
+        m.id_rows = None
+    errors = []
+    barrier = threading.Barrier(9)
+
+    def worker(i):
+        try:
+            barrier.wait()
+            for _ in range(3):
+                sv, si, rows = rc._searcher_ops(
+                    index, queries[i % queries.shape[0]])
+                esv, esi, erows = oracle[i]
+                assert np.array_equal(sv, esv)
+                assert np.array_equal(si, esi)
+                assert np.array_equal(rows, erows)
+        except BaseException as e:       # pragma: no cover - failure path
+            errors.append((i, e))
+
+    def writer():
+        try:
+            barrier.wait()
+            snaps = []
+            for step in range(writes[0].shape[0]):
+                rc._writer_ops(index, step, writes, snaps)
+            for s in snaps[1:]:
+                for k, v in snaps[0].items():
+                    assert np.array_equal(s[k], v)
+        except BaseException as e:       # pragma: no cover - failure path
+            errors.append(("writer", e))
+
+    threads = [threading.Thread(target=worker, args=(i,)) for i in range(8)]
+    threads.append(threading.Thread(target=writer))
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "concurrent smoke stalled"
+    assert errors == [], errors[0]

@@ -1,0 +1,719 @@
+"""Dynamic concurrency checker: Eraser-style locksets + deterministic
+interleaving replay (the runtime half of the HMG2xx concurrency contract;
+``tools/staticcheck/concurrency.py`` is the static half).
+
+Two cooperating mechanisms, both driven by the same declarative registry
+(``tools/staticcheck/registry.py`` GUARDED_BY):
+
+**Lockset checking (Eraser).** ``instrument()`` patches the registered
+classes so every access to a guarded attribute records ``(thread,
+locks-held)``; locks named in the registry are wrapped in ``TrackedLock``
+at construction. Per attribute, the checker runs the classic state
+machine — virgin -> exclusive(first thread) -> shared — and maintains the
+candidate lockset C(v) as the intersection of locks held at each *write*
+once a second thread has touched the attribute. An empty C(v) at a shared
+write is a warning: no single lock protects that attribute. Refining on
+writes only (not reads) is deliberate — the repo's sanctioned
+double-checked pattern publishes an immutable value under the lock and
+reads it lock-free afterwards; racy *writes* are what corrupt.
+
+**Deterministic interleaving (the Interleaver).** A cooperative
+token-passing scheduler: participating threads run one at a time and hand
+over only at *yield points* — lock acquire/release boundaries and guarded
+attribute accesses (the same named-point spirit as PR 6's fault points).
+A seeded RNG picks which parked thread runs next; the pick sequence IS
+the schedule, printable as ``"<seed>:<i>.<i>..."`` and replayable
+bit-for-bit with ``--schedule``. ``TrackedLock`` never blocks while
+holding the token (it spins with ``acquire(blocking=False)`` and yields
+between attempts), so a suspended lock holder cannot deadlock the
+harness.
+
+The canonical workload races N searcher threads (modality "a": searches,
+plus direct ``_ensure_sharded`` / ``_modality_id_rows`` calls so the
+lazy-cache builds race cold) against a writer thread confined to modality
+"b" (insert/delete/maintain + ``state_tree`` snapshots). Confinement is
+what makes bit-identity assertable: the searchers' results and the
+snapshot's modality-"a" keys are invariant under every legal
+interleaving, so any divergence from the single-threaded oracle is a real
+race, reported with its repro string.
+
+    PYTHONPATH=src python -m tools.racecheck --sweep           # >= 20 seeds
+    PYTHONPATH=src python -m tools.racecheck --seed 7
+    PYTHONPATH=src python -m tools.racecheck --schedule "7:0.2.1..."
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import random
+import sys
+import threading
+from contextlib import contextmanager
+from pathlib import Path
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+if str(REPO_ROOT) not in sys.path:
+    sys.path.insert(0, str(REPO_ROOT))
+_SRC = REPO_ROOT / "src"
+if str(_SRC) not in sys.path:
+    sys.path.insert(0, str(_SRC))
+
+from tools.staticcheck.registry import GUARDED_BY  # noqa: E402
+
+_LOCK_TYPES = (type(threading.Lock()), type(threading.RLock()))
+
+
+# ---------------------------------------------------------------------------
+# held-lock tracking (per thread, counted for RLock reentrancy)
+# ---------------------------------------------------------------------------
+
+class _Held(threading.local):
+    def __init__(self):
+        self.locks: Dict["TrackedLock", int] = {}
+
+
+_held = _Held()
+
+
+def held_locks() -> FrozenSet["TrackedLock"]:
+    return frozenset(l for l, c in _held.locks.items() if c > 0)
+
+
+class TrackedLock:
+    """Lock/RLock wrapper: maintains the per-thread held set and
+    cooperates with an active Interleaver (spin-acquire + yield instead of
+    blocking, yield points at acquire/release)."""
+
+    _counter = 0
+
+    def __init__(self, inner, name: str = ""):
+        self._inner = inner
+        TrackedLock._counter += 1
+        self.name = name or f"lock#{TrackedLock._counter}"
+
+    def _sched(self) -> Optional["Interleaver"]:
+        return getattr(threading.current_thread(), "_rc_sched", None)
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        sched = self._sched()
+        if sched is None:
+            ok = (self._inner.acquire(blocking) if timeout < 0
+                  else self._inner.acquire(blocking, timeout))
+        else:
+            # never block while holding the scheduler token: the holder
+            # may be parked and could only run if we yield
+            while not self._inner.acquire(blocking=False):
+                sched.yield_point(f"wait:{self.name}")
+            sched.yield_point(f"acq:{self.name}")
+            ok = True
+        if ok:
+            _held.locks[self] = _held.locks.get(self, 0) + 1
+        return ok
+
+    def release(self) -> None:
+        c = _held.locks.get(self, 0)
+        if c <= 1:
+            _held.locks.pop(self, None)
+        else:
+            _held.locks[self] = c - 1
+        self._inner.release()
+        sched = self._sched()
+        if sched is not None:
+            sched.yield_point(f"rel:{self.name}")
+
+    def __enter__(self) -> "TrackedLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        return f"TrackedLock({self.name})"
+
+
+# ---------------------------------------------------------------------------
+# Eraser-style lockset checker
+# ---------------------------------------------------------------------------
+
+class LocksetChecker:
+    """State machine per (object, attribute): virgin -> exclusive(owner)
+    -> shared once a second thread touches it. C(v) = intersection of
+    locks held at each shared *write*; empty C(v) at a write -> warning
+    (no single lock protects the attribute)."""
+
+    EXCLUSIVE, SHARED = 0, 1
+
+    def __init__(self):
+        self._mu = threading.Lock()          # plain: never yields inside
+        self._state: Dict[Tuple[int, str], list] = {}
+        self.warnings: List[str] = []
+        self._warned: set = set()
+
+    def access(self, obj, desc: str, attr: str, is_write: bool,
+               thread_name: str, locks: FrozenSet[TrackedLock]) -> None:
+        key = (id(obj), attr)
+        with self._mu:
+            st = self._state.get(key)
+            if st is None:
+                self._state[key] = [self.EXCLUSIVE, thread_name, None]
+                return
+            if st[0] == self.EXCLUSIVE:
+                if st[1] == thread_name:
+                    return                   # still single-threaded
+                st[0] = self.SHARED
+                st[2] = None                 # C(v) initialised at first
+                                             # shared write below
+            if not is_write:
+                return                       # reads don't refine C(v)
+            st[2] = locks if st[2] is None else (st[2] & locks)
+            if not st[2] and key not in self._warned:
+                self._warned.add(key)
+                self.warnings.append(
+                    f"lockset empty for {desc} (write by {thread_name!r} "
+                    "with no lock in common with prior writers) — no "
+                    "single lock protects this attribute")
+
+
+# ---------------------------------------------------------------------------
+# deterministic cooperative scheduler
+# ---------------------------------------------------------------------------
+
+class ScheduleStall(RuntimeError):
+    """A thread failed to reach its next yield point (real deadlock or a
+    blocking call outside TrackedLock). Carries the repro string."""
+
+
+def format_schedule(seed: int, choices: Sequence[int]) -> str:
+    return f"{seed}:" + ".".join(str(c) for c in choices)
+
+
+def parse_schedule(s: str) -> Tuple[int, List[int]]:
+    head, _, tail = s.partition(":")
+    choices = [int(c) for c in tail.split(".") if c != ""]
+    return int(head), choices
+
+
+class Interleaver:
+    """Token-passing scheduler. Threads spawned via ``spawn`` park until
+    given the token; they hand it back at every yield point. The seeded
+    pick sequence over the (registration-ordered) set of unfinished
+    threads is recorded and replayable."""
+
+    def __init__(self, seed: int = 0,
+                 replay: Optional[Sequence[int]] = None,
+                 timeout_s: float = 60.0):
+        self.seed = int(seed)
+        self._rng = random.Random(self.seed)
+        self.choices: List[int] = []
+        self._replay = list(replay) if replay is not None else None
+        self._cv = threading.Condition()
+        self._threads: List[threading.Thread] = []
+        self._done: set = set()
+        self._current: Optional[threading.Thread] = None
+        self.timeout_s = timeout_s
+        self.errors: List[Tuple[str, BaseException]] = []
+
+    # ------------------------------------------------------------- lifecycle
+    def spawn(self, fn, *args, name: str = "") -> threading.Thread:
+        t = threading.Thread(target=self._trampoline, args=(fn, args),
+                             name=name or f"rc-{len(self._threads)}",
+                             daemon=True)
+        t._rc_sched = self
+        self._threads.append(t)
+        t.start()                            # parks immediately
+        return t
+
+    def _trampoline(self, fn, args) -> None:
+        me = threading.current_thread()
+        with self._cv:
+            while self._current is not me:
+                if not self._cv.wait(timeout=self.timeout_s):
+                    return                   # run() already gave up
+        try:
+            fn(*args)
+        except BaseException as e:           # surfaced by run()
+            self.errors.append((me.name, e))
+        finally:
+            with self._cv:
+                self._done.add(me)
+                self._hand_over()
+
+    def run(self) -> str:
+        """Release the first thread and wait for all to finish. Returns
+        the schedule string; raises ScheduleStall (with repro string) on
+        deadlock, or the first worker exception."""
+        with self._cv:
+            self._hand_over()
+        for t in self._threads:
+            t.join(timeout=self.timeout_s)
+            if t.is_alive():
+                raise ScheduleStall(
+                    f"thread {t.name!r} stalled (deadlock or blocking "
+                    "call outside TrackedLock); repro: --schedule "
+                    f"'{self.schedule_string()}'")
+        if self.errors:
+            name, err = self.errors[0]
+            raise RuntimeError(
+                f"thread {name!r} failed under schedule "
+                f"'{self.schedule_string()}'") from err
+        return self.schedule_string()
+
+    def schedule_string(self) -> str:
+        return format_schedule(self.seed, self.choices)
+
+    # ------------------------------------------------------------ scheduling
+    def _hand_over(self) -> None:
+        # caller holds _cv. All non-done threads are parked right now
+        # (single-token invariant), so the candidate set is exact.
+        cands = [t for t in self._threads if t not in self._done]
+        if not cands:
+            self._current = None
+            self._cv.notify_all()
+            return
+        if self._replay:
+            i = min(self._replay.pop(0), len(cands) - 1)
+        elif self._replay is not None:       # replay exhausted: determin-
+            i = 0                            # istic tail
+        else:
+            i = self._rng.randrange(len(cands))
+        self.choices.append(i)
+        self._current = cands[i]
+        self._cv.notify_all()
+
+    def yield_point(self, tag: str = "") -> None:
+        me = threading.current_thread()
+        if getattr(me, "_rc_sched", None) is not self:
+            return
+        with self._cv:
+            self._hand_over()
+            while self._current is not me:
+                if not self._cv.wait(timeout=self.timeout_s):
+                    raise ScheduleStall(
+                        f"scheduler stalled at {tag!r}; repro: --schedule "
+                        f"'{self.schedule_string()}'")
+
+
+# ---------------------------------------------------------------------------
+# instrumentation: patch registered classes
+# ---------------------------------------------------------------------------
+
+class _RCState:
+    def __init__(self, checker: Optional[LocksetChecker]):
+        self.checker = checker
+
+
+_RC: Optional[_RCState] = None
+
+
+def _on_access(obj, desc: str, attr: str, is_write: bool) -> None:
+    st = _RC
+    if st is None:
+        return
+    t = threading.current_thread()
+    sched = getattr(t, "_rc_sched", None)
+    if sched is None:
+        return                               # only scheduled threads count
+    sched.yield_point(f"{'w' if is_write else 'r'}:{desc}.{attr}")
+    if st.checker is not None:
+        st.checker.access(obj, desc, attr, is_write, t.name, held_locks())
+
+
+def _wrap_class(cls, tracked: Tuple[str, ...], lock_attrs: Tuple[str, ...],
+                patches: list) -> None:
+    cname = cls.__name__
+    if lock_attrs:
+        orig_init = cls.__init__
+
+        def __init__(self, *a, _orig=orig_init, _locks=lock_attrs,
+                     _cname=cname, **kw):
+            _orig(self, *a, **kw)
+            for la in _locks:
+                cur = getattr(self, la, None)
+                if isinstance(cur, _LOCK_TYPES):
+                    object.__setattr__(self, la,
+                                       TrackedLock(cur, f"{_cname}.{la}"))
+
+        patches.append((cls, "__init__", orig_init))
+        cls.__init__ = __init__
+    if tracked:
+        tset = frozenset(tracked)
+        orig_get = cls.__getattribute__
+        orig_set = cls.__setattr__
+
+        def __getattribute__(self, name, _orig=orig_get, _t=tset,
+                             _cname=cname):
+            val = _orig(self, name)
+            if name in _t:
+                _on_access(self, _cname, name, False)
+            return val
+
+        def __setattr__(self, name, value, _orig=orig_set, _t=tset,
+                        _cname=cname):
+            if name in _t:
+                _on_access(self, _cname, name, True)
+            _orig(self, name, value)
+
+        patches.append((cls, "__getattribute__", orig_get))
+        patches.append((cls, "__setattr__", orig_set))
+        cls.__getattribute__ = __getattribute__
+        cls.__setattr__ = __setattr__
+
+
+# classes to lock-wrap beyond what GUARDED_BY names directly: HMGIIndex
+# owns the two facade locks; obs Counter serialises inc() on its own lock.
+_EXTRA_LOCK_WRAPS = (
+    ("repro.core.index", "HMGIIndex", ("_write_lock", "_cache_lock")),
+    ("repro.obs.metrics", "Counter", ("_lock",)),
+)
+
+
+@contextmanager
+def instrument(checker: Optional[LocksetChecker] = None,
+               extra: Sequence[Tuple[type, Tuple[str, ...],
+                                     Tuple[str, ...]]] = ()):
+    """Patch every GUARDED_BY class (and ``extra`` (cls, tracked_attrs,
+    lock_attrs) triples — test fixtures) for the duration of the context:
+    registry locks become TrackedLock at construction, guarded attribute
+    accesses feed the lockset checker and the interleaving scheduler. The
+    global obs registry is swapped for a fresh (wrapped-lock) instance so
+    scheduled threads never block on a pre-instrumentation plain lock."""
+    global _RC
+    if _RC is not None:
+        raise RuntimeError("instrument() does not nest")
+    patches: list = []
+    plan: Dict[type, Tuple[set, set]] = {}
+
+    def add(cls, tracked=(), lock_attrs=()):
+        tr, lk = plan.setdefault(cls, (set(), set()))
+        tr.update(tracked)
+        lk.update(lock_attrs)
+
+    for spec in GUARDED_BY:
+        mod = importlib.import_module(spec.module)
+        cls = getattr(mod, spec.cls)
+        add(cls, spec.attrs, (spec.lock,))
+    for modname, clsname, lock_attrs in _EXTRA_LOCK_WRAPS:
+        cls = getattr(importlib.import_module(modname), clsname)
+        add(cls, (), lock_attrs)
+    for cls, tracked, lock_attrs in extra:
+        add(cls, tuple(tracked), tuple(lock_attrs))
+
+    import repro.obs.metrics as metrics_mod
+    for cls, (tracked, lock_attrs) in plan.items():
+        _wrap_class(cls, tuple(sorted(tracked)), tuple(sorted(lock_attrs)),
+                    patches)
+    old_registry = metrics_mod._REGISTRY
+    metrics_mod._REGISTRY = metrics_mod.MetricsRegistry()
+    _RC = _RCState(checker)
+    try:
+        yield
+    finally:
+        _RC = None
+        metrics_mod._REGISTRY = old_registry
+        for cls, name, orig in reversed(patches):
+            setattr(cls, name, orig)
+
+
+# ---------------------------------------------------------------------------
+# regression fixtures: the pre-fix lazy-cache race, and its fix
+# ---------------------------------------------------------------------------
+
+class RacyLazyCache:
+    """The pre-PR9 ``_ensure_sharded`` / scatter-cache pattern: unguarded
+    check-then-build. Two threads can both see None and both build —
+    ``builds`` counts it, and the lockset checker flags the bare write."""
+
+    def __init__(self):
+        self._lock = threading.Lock()        # exists, but never taken
+        self.cache = None
+        self.builds = 0
+
+    def get(self):
+        if self.cache is None:
+            self.builds += 1
+            self.cache = ("built", self.builds)
+        return self.cache
+
+
+class GuardedLazyCache:
+    """The fixed pattern: double-checked build under ``_lock``, immutable
+    value published by a single reference assignment, lock-free reads
+    after publication."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.cache = None
+        self.builds = 0
+
+    def get(self):
+        c = self.cache
+        if c is not None:
+            return c
+        with self._lock:
+            if self.cache is None:
+                self.builds += 1
+                self.cache = ("built", self.builds)
+            return self.cache
+
+
+_FIXTURE_SPECS = (
+    (RacyLazyCache, ("cache", "builds"), ("_lock",)),
+    (GuardedLazyCache, ("cache", "builds"), ("_lock",)),
+)
+
+
+def run_fixture(cls, seed: int = 0, n_threads: int = 3,
+                replay: Optional[Sequence[int]] = None) -> dict:
+    """Race ``n_threads`` over one lazy cache under a seeded schedule.
+    Returns {builds, warnings, schedule}."""
+    checker = LocksetChecker()
+    with instrument(checker, extra=_FIXTURE_SPECS):
+        obj = cls()
+        sched = Interleaver(seed, replay=replay)
+        for i in range(n_threads):
+            sched.spawn(obj.get, name=f"fix-{i}")
+        schedule = sched.run()
+    return {"builds": obj.builds, "warnings": list(checker.warnings),
+            "schedule": schedule}
+
+
+def fixture_selftest(seeds: Sequence[int]) -> Tuple[int, int]:
+    """The 'pre-fix race demonstrably caught' gate: across ``seeds``, the
+    racy cache must double-build (and draw a lockset warning) under at
+    least one schedule, and the guarded cache must never do either.
+    Returns (racy_catches, guarded_failures)."""
+    catches = 0
+    guarded_failures = 0
+    for s in seeds:
+        r = run_fixture(RacyLazyCache, seed=s)
+        if r["builds"] > 1 or r["warnings"]:
+            catches += 1
+        g = run_fixture(GuardedLazyCache, seed=s)
+        if g["builds"] != 1 or g["warnings"]:
+            guarded_failures += 1
+    return catches, guarded_failures
+
+
+# ---------------------------------------------------------------------------
+# canonical concurrent workload
+# ---------------------------------------------------------------------------
+
+# state_tree keys restricted to modality "a" for the bit-identity check:
+# the writer never touches "a"'s stores, but "a"'s workload heat varies
+# with searcher interleaving, so heat is excluded by construction.
+_A_KEY_PREFIXES = ("m/a/ivf/", "m/a/delta/", "m/a/vectors", "m/a/ids")
+
+
+def _a_keys(tree: dict) -> dict:
+    import numpy as np
+    return {k: np.asarray(v) for k, v in tree.items()
+            if any(k.startswith(p) for p in _A_KEY_PREFIXES)}
+
+
+def _build_index(seed_data: int = 0):
+    import numpy as np
+    from repro.configs.base import HMGIConfig
+    from repro.core.index import HMGIIndex
+
+    rng = np.random.default_rng(seed_data)
+    n, d = 240, 16
+    ids_a = np.arange(0, n // 2, dtype=np.int32)
+    ids_b = np.arange(n // 2, n, dtype=np.int32)
+    vec = rng.normal(size=(n, d)).astype(np.float32)
+    cfg = HMGIConfig(n_partitions=6, kmeans_iters=4, n_probe=4, top_k=5,
+                     delta_capacity=256, maint_auto=True,
+                     maint_budget_rows=96, maint_chunk=32,
+                     use_nsw_refine=False, obs_sync_spans=False)
+    index = HMGIIndex(cfg, seed=seed_data)
+    index.ingest({"a": (ids_a, vec[: n // 2]),
+                  "b": (ids_b, vec[n // 2:])}, n_nodes=n)
+    queries = rng.normal(size=(3, 2, d)).astype(np.float32)
+    upd = rng.normal(size=(3, 8, d)).astype(np.float32)
+    upd_ids = np.stack([rng.choice(ids_b, size=8, replace=False)
+                        for _ in range(3)])
+    del_ids = np.stack([rng.choice(ids_b, size=3, replace=False)
+                        for _ in range(3)])
+    return index, queries, (upd_ids, upd, del_ids)
+
+
+def _searcher_ops(index, q, k: int = 5):
+    """One searcher round: a modality-"a" search plus direct hits on both
+    lazily-built caches (the double-checked publication paths under test —
+    the facade alone cannot reach the sharded layout without a mesh)."""
+    import numpy as np
+    sv, si = index.search(q, "a", k=k)
+    rows = index._modality_id_rows("a")
+    index._ensure_sharded("a", 1)
+    return np.asarray(sv), np.asarray(si), np.asarray(rows)
+
+
+def _writer_ops(index, step: int, writes, snaps: list) -> None:
+    upd_ids, upd, del_ids = writes
+    index.insert("b", upd_ids[step], upd[step])
+    index.delete("b", del_ids[step])
+    index.maintain("b")
+    tree, _meta = index.state_tree()
+    snaps.append(_a_keys(tree))
+
+
+def canonical_workload(seed: int = 0,
+                       schedule: Optional[str] = None,
+                       n_searchers: int = 3, rounds: int = 2,
+                       timeout_s: float = 120.0) -> dict:
+    """One seeded (or replayed) run of the canonical concurrent workload.
+
+    Phase 1 (single-threaded oracle, instrumentation passive): build a
+    twin index, run the full writer sequence and every searcher round,
+    recording expected searcher results and the modality-"a" snapshot
+    keys. This also warms every jit cache the concurrent phase needs.
+
+    Phase 2 (scheduled): a fresh identical index; n_searchers searcher
+    threads x rounds race one writer thread under the deterministic
+    interleaver. Asserts searcher results and writer snapshots are
+    bit-identical to the oracle and reports lockset warnings.
+    """
+    import numpy as np
+
+    if schedule is not None:
+        seed, replay = parse_schedule(schedule)
+    else:
+        replay = None
+
+    checker = LocksetChecker()
+    with instrument(checker):
+        # ---- phase 1: oracle (main thread: no scheduling, no recording)
+        index, queries, writes = _build_index()
+        steps = writes[0].shape[0]
+        expected = [_searcher_ops(index, queries[i % queries.shape[0]])
+                    for i in range(n_searchers)]
+        oracle_snap = None
+        oracle_snaps: List[dict] = []
+        for step in range(steps):
+            _writer_ops(index, step, writes, oracle_snaps)
+        oracle_snap = oracle_snaps[0]
+        for s in oracle_snaps[1:]:
+            for k0, v in oracle_snap.items():
+                assert np.array_equal(s[k0], v), \
+                    f"oracle modality-a state drifted at {k0} (workload " \
+                    "bug: the writer must be confined to modality b)"
+
+        # ---- phase 2: the same workload, interleaved
+        index, queries, writes = _build_index()
+        sched = Interleaver(seed, replay=replay, timeout_s=timeout_s)
+        results: Dict[int, list] = {i: [] for i in range(n_searchers)}
+        snaps: List[dict] = []
+
+        def searcher(i: int) -> None:
+            for _ in range(rounds):
+                results[i].append(
+                    _searcher_ops(index, queries[i % queries.shape[0]]))
+
+        def writer() -> None:
+            for step in range(steps):
+                _writer_ops(index, step, writes, snaps)
+
+        for i in range(n_searchers):
+            sched.spawn(searcher, i, name=f"searcher-{i}")
+        sched.spawn(writer, name="writer")
+        sched_str = sched.run()
+
+    mismatches: List[str] = []
+    for i in range(n_searchers):
+        esv, esi, erows = expected[i]
+        for r, (sv, si, rows) in enumerate(results[i]):
+            if not np.array_equal(sv, esv):
+                mismatches.append(f"searcher-{i} round {r}: scores diverge")
+            if not np.array_equal(si, esi):
+                mismatches.append(f"searcher-{i} round {r}: ids diverge")
+            if not np.array_equal(rows, erows):
+                mismatches.append(f"searcher-{i} round {r}: id_rows diverge")
+    for step, snap in enumerate(snaps):
+        for k0, v in oracle_snap.items():
+            if not np.array_equal(snap[k0], v):
+                mismatches.append(
+                    f"writer snapshot step {step}: modality-a key {k0} "
+                    "diverges")
+    return {"seed": seed, "schedule": sched_str,
+            "warnings": list(checker.warnings), "mismatches": mismatches,
+            "ok": not checker.warnings and not mismatches}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.racecheck",
+        description="Dynamic race checker: Eraser locksets + deterministic "
+                    "interleaving replay over the canonical concurrent "
+                    "workload.")
+    ap.add_argument("--sweep", action="store_true",
+                    help="run the fixture selftest plus the canonical "
+                         "workload across --seeds seeded schedules")
+    ap.add_argument("--seeds", type=int, default=20,
+                    help="number of seeds for --sweep (default 20)")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="run the canonical workload under one seed")
+    ap.add_argument("--schedule", type=str, default=None,
+                    help="replay a recorded schedule string "
+                         "('<seed>:<i>.<i>...')")
+    ap.add_argument("--searchers", type=int, default=3)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--timeout", type=float, default=120.0,
+                    help="per-thread stall timeout (seconds)")
+    args = ap.parse_args(argv)
+
+    failed = False
+    if args.sweep:
+        seeds = list(range(args.seeds))
+        catches, bad = fixture_selftest(seeds[: min(8, len(seeds))])
+        print(f"fixture selftest: racy lazy-cache caught under "
+              f"{catches} of {min(8, len(seeds))} seeds; guarded version "
+              f"clean ({bad} failures)")
+        if catches == 0 or bad:
+            print("FIXTURE SELFTEST FAILED", file=sys.stderr)
+            failed = True
+        for s in seeds:
+            r = canonical_workload(s, n_searchers=args.searchers,
+                                   rounds=args.rounds,
+                                   timeout_s=args.timeout)
+            status = "ok" if r["ok"] else "FAIL"
+            print(f"seed {s:3d}: {status}  "
+                  f"({len(r['schedule'].split('.'))} scheduling points)")
+            if not r["ok"]:
+                failed = True
+                for w in r["warnings"]:
+                    print(f"  warning: {w}", file=sys.stderr)
+                for m0 in r["mismatches"]:
+                    print(f"  mismatch: {m0}", file=sys.stderr)
+                print(f"  repro: python -m tools.racecheck --schedule "
+                      f"'{r['schedule']}'", file=sys.stderr)
+        print("sweep: " + ("FAILED" if failed else
+                           f"clean across {len(seeds)} seeds "
+                           "(zero lockset warnings, bit-identical results)"))
+    elif args.schedule is not None or args.seed is not None:
+        r = canonical_workload(args.seed or 0, schedule=args.schedule,
+                               n_searchers=args.searchers,
+                               rounds=args.rounds, timeout_s=args.timeout)
+        for w in r["warnings"]:
+            print(f"warning: {w}", file=sys.stderr)
+        for m0 in r["mismatches"]:
+            print(f"mismatch: {m0}", file=sys.stderr)
+        if r["ok"]:
+            print(f"ok (schedule '{r['schedule'][:60]}"
+                  f"{'...' if len(r['schedule']) > 60 else ''}')")
+        else:
+            print(f"FAILED; repro: python -m tools.racecheck --schedule "
+                  f"'{r['schedule']}'", file=sys.stderr)
+            failed = True
+    else:
+        ap.print_help()
+        return 2
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -9,6 +9,7 @@ violations survive pragma suppression.
 from __future__ import annotations
 
 import argparse
+import ast
 import json
 import sys
 from pathlib import Path
@@ -80,9 +81,45 @@ EXPLAIN = {
         "tools/staticcheck/budgets.json. More signatures than budgeted "
         "fails — the regression gate PRs 2 and 5 needed. Re-baseline "
         "with --write-budgets after intentional changes."),
+    "HMG201": (
+        "Guarded-by discipline. tools/staticcheck/registry.py GUARDED_BY "
+        "declares which shared mutable attributes of concurrent classes "
+        "(obs Registry/Histogram, CheckpointManager, Prefetcher, "
+        "WorkloadStats, the HMGIIndex modality caches) are protected by "
+        "which lock. Any read/write of a registered attribute outside "
+        "__init__ must be lexically inside 'with <obj>.<lock>' or a "
+        "registered *_locked method (whose call sites must hold the "
+        "lock). Double-checked lock-free fast paths carry a reasoned "
+        "pragma — grep the pragmas for the complete inventory of "
+        "unguarded reads. tools/racecheck.py checks the same contract "
+        "dynamically."),
+    "HMG202": (
+        "No blocking calls under a fine-grained lock: fsync, sleep, "
+        "thread/future join/result/wait, block_until_ready, device_get "
+        "inside 'with self._lock/_cache_lock' stalls every thread "
+        "touching that structure behind the I/O. The coarse "
+        "HMGIIndex._write_lock is exempt by design (single-writer: "
+        "device work under it IS the serialisation point)."),
+    "HMG203": (
+        "Lock-order. Nested with-lock blocks plus calls into known "
+        "lock-acquiring helpers (LOCK_ACQUIRING_CALLS) form a global "
+        "acquisition digraph across all checked files; a cycle is a "
+        "potential deadlock and fails the build naming the cycle and "
+        "one witness site per edge. Canonical order: "
+        "HMGIIndex._write_lock -> HMGIIndex._cache_lock -> leaf locks "
+        "(obs, WorkloadStats)."),
+    "HMG204": (
+        "Publication discipline. A class that spawns worker threads "
+        "(Thread/ThreadPoolExecutor/Timer) may not mutate undeclared "
+        "self attributes once a thread may be running — in __init__ "
+        "after the first start()/submit(), or in any other method. "
+        "Declare the attribute (and its lock) in GUARDED_BY so HMG201 "
+        "and the dynamic lockset checker cover it."),
 }
 
-_AST_RULES = {"HMG000", "HMG001", "HMG002", "HMG003", "HMG004"}
+_AST_RULES = {"HMG000", "HMG001", "HMG002", "HMG003", "HMG004",
+              "HMG201", "HMG202", "HMG204"}
+_LOCK_ORDER_RULES = {"HMG203"}
 _TRACE_RULES = {"HMG101", "HMG102"}
 _BUDGET_RULES = {"HMG103"}
 
@@ -105,6 +142,8 @@ def check_files(files: List[Path], rules: Optional[Set[str]],
     from tools.staticcheck.fixes import apply_fixes
 
     out: List[Violation] = []
+    trees = []              # (rel, ast.Module) for the cross-file pass
+    pragma_index = {}
     for f in files:
         rel = f.relative_to(REPO_ROOT).as_posix() if \
             f.is_relative_to(REPO_ROOT) else f.as_posix()
@@ -119,10 +158,22 @@ def check_files(files: List[Path], rules: Optional[Set[str]],
                 source = fixed
                 vs = check_source(rel, source, rules)
         pragmas = scan_pragmas(rel, source)
+        pragma_index[rel] = pragmas
         vs = filter_suppressed(vs, pragmas)
         if rules is None or "HMG000" in rules:
             vs = vs + pragmas.violations
         out.extend(vs)
+        if rules is None or "HMG203" in rules:
+            try:
+                trees.append((rel, ast.parse(source, filename=rel)))
+            except SyntaxError:
+                pass        # already reported as HMG000 by check_source
+    if rules is None or "HMG203" in rules:
+        from tools.staticcheck.concurrency import check_hmg203
+        cyc = check_hmg203(trees)
+        out.extend(v for v in cyc
+                   if v.path not in pragma_index
+                   or not pragma_index[v.path].is_disabled(v.rule, v.line))
     return out
 
 
@@ -179,7 +230,7 @@ def main(argv=None) -> int:
     run_budget = args.budget or args.all or args.write_budgets or bool(
         rules and rules & _BUDGET_RULES)
     run_ast = not args.write_budgets and (
-        rules is None or bool(rules & _AST_RULES))
+        rules is None or bool(rules & (_AST_RULES | _LOCK_ORDER_RULES)))
 
     violations: List[Violation] = []
     if run_ast:

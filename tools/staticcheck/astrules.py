@@ -383,11 +383,14 @@ def check_hmg004(path: str, tree: ast.Module) -> List[Violation]:
     return out
 
 
+from tools.staticcheck.concurrency import CONCURRENCY_AST_RULES  # noqa: E402
+
 ALL_AST_RULES = {
     "HMG001": check_hmg001,
     "HMG002": check_hmg002,
     "HMG003": check_hmg003,
     "HMG004": check_hmg004,
+    **CONCURRENCY_AST_RULES,
 }
 
 

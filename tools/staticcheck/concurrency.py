@@ -1,0 +1,439 @@
+"""Concurrency invariants (HMG201-HMG204): the static layer of PR 9.
+
+The serving path runs the facade from dozens of client threads (the load
+bench drives 64), so shared mutable state needs a machine-checked
+discipline, not a comment. The registry (``GUARDED_BY`` in
+``tools/staticcheck/registry.py``) declares which attributes of which
+classes are guarded by which lock; these rules enforce the declaration
+*lexically* — stdlib ``ast``, nothing imported — and
+``tools/racecheck.py`` enforces it dynamically (Eraser-style locksets +
+deterministic interleaving replay).
+
+  HMG201  guarded-by: every read/write of a registered attribute outside
+          ``__init__`` must sit inside ``with <recv>.<lock>`` or a
+          registered ``*_locked`` method (whose call sites must themselves
+          hold the lock). Double-checked fast-path reads carry a reasoned
+          pragma — the pragma inventory *is* the list of lock-free reads.
+  HMG202  no blocking calls (fsync, sleeps, joins, ``block_until_ready``,
+          future ``result``/``wait``) while a fine-grained lock is held:
+          every other thread touching that structure stalls behind the
+          I/O. The coarse single-writer lock is exempt by design.
+  HMG203  lock-order: nested ``with``-lock blocks and calls into known
+          lock-acquiring helpers form a global acquisition graph across
+          all checked files; a cycle is a potential deadlock and fails
+          the build naming the cycle.
+  HMG204  publication discipline: a class that starts worker threads may
+          not mutate undeclared ``self`` attributes once threads may be
+          running — every shared mutable must be in the registry (and
+          thereby guarded + dynamically checked), or carry a pragma.
+
+Lexical scope notes: a nested ``def`` does not inherit the enclosing
+``with``-lock (its body runs later, possibly on another thread), and only
+a class's own ``__init__``/``__post_init__`` is construction-exempt.
+"""
+from __future__ import annotations
+
+import ast
+from pathlib import PurePosixPath
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+from tools.staticcheck import Violation
+from tools.staticcheck.registry import (
+    BLOCKING_CALLS,
+    GUARDED_BY,
+    GUARDED_METHODS,
+    GuardSpec,
+    HMG202_LOCK_ATTRS,
+    LOCK_ACQUIRING_CALLS,
+    THREAD_SPAWN_CALLS,
+    THREAD_START_CALLS,
+)
+
+_INIT_NAMES = ("__init__", "__post_init__")
+
+
+def _posix(path: str) -> str:
+    return PurePosixPath(path).as_posix()
+
+
+def _specs_for(path: str,
+               guards: Iterable[GuardSpec]) -> List[GuardSpec]:
+    p = _posix(path)
+    return [s for s in guards if any(p.endswith(f) for f in s.files)]
+
+
+def _call_name(node: ast.Call) -> Tuple[Optional[str], Optional[str]]:
+    f = node.func
+    if isinstance(f, ast.Name):
+        return None, f.id
+    if isinstance(f, ast.Attribute):
+        recv = f.value.id if isinstance(f.value, ast.Name) else None
+        return recv, f.attr
+    return None, None
+
+
+def _lock_attr_of_with_item(item: ast.withitem) -> Optional[Tuple[str, str]]:
+    """(receiver, lock attr) when the context manager is ``<recv>.<attr>``
+    with a lock-ish attribute name, else None."""
+    expr = item.context_expr
+    if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name):
+        if expr.attr.endswith("lock") or expr.attr.endswith("_lock"):
+            return expr.value.id, expr.attr
+    return None
+
+
+def _locked_method_lock(cls: Optional[str], fn: Optional[str],
+                        methods: Dict[str, str]) -> Optional[str]:
+    """Lock attr a ``*_locked`` method's body holds per the registry, else
+    None (an unregistered ``*_locked`` method is its own violation)."""
+    if fn is None or not fn.endswith("_locked"):
+        return None
+    node = methods.get(f"{cls}.{fn}")
+    return node.split(".", 1)[1] if node else None
+
+
+# --------------------------------------------------------------------- HMG201
+def check_hmg201(path: str, tree: ast.Module,
+                 guards: Optional[Iterable[GuardSpec]] = None,
+                 methods: Optional[Dict[str, str]] = None
+                 ) -> List[Violation]:
+    guards = GUARDED_BY if guards is None else tuple(guards)
+    methods = GUARDED_METHODS if methods is None else methods
+    specs = _specs_for(path, guards)
+    if not specs:
+        return []
+    by_cls = {s.cls: s for s in specs}
+    by_recv = {r: s for s in specs for r in s.receivers}
+    out: List[Violation] = []
+
+    def flag(node: ast.AST, spec: GuardSpec, what: str) -> None:
+        out.append(Violation(
+            "HMG201", path, node.lineno,
+            f"{what} of guarded attribute '{node.attr}' "
+            f"({spec.cls}, guarded by {spec.lock}) outside 'with "
+            f"<obj>.{spec.lock}' — wrap it, or pragma a double-checked "
+            "fast path with the reason"))
+
+    def visit(node: ast.AST, cls: Optional[str], fnstack: Tuple[str, ...],
+              held: frozenset) -> None:
+        if isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                visit(sub, node.name, (), frozenset())
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            fn_held: Set[str] = set()
+            lk = _locked_method_lock(cls, node.name, methods)
+            if node.name.endswith("_locked"):
+                if lk is None:
+                    out.append(Violation(
+                        "HMG201", path, node.lineno,
+                        f"'{node.name}' uses the *_locked convention but "
+                        "is not in GUARDED_METHODS — register which lock "
+                        "its callers must hold"))
+                else:
+                    fn_held.add(lk)
+            # a nested def does NOT inherit the enclosing with-lock: its
+            # body runs later, possibly on another thread
+            for sub in node.body:
+                visit(sub, cls, fnstack + (node.name,), frozenset(fn_held))
+            return
+        if isinstance(node, ast.With):
+            new = set(held)
+            for item in node.items:
+                hit = _lock_attr_of_with_item(item)
+                if hit:
+                    new.add(hit[1])
+                visit(item.context_expr, cls, fnstack, held)
+            for sub in node.body:
+                visit(sub, cls, fnstack, frozenset(new))
+            return
+        in_init = len(fnstack) == 1 and fnstack[0] in _INIT_NAMES
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name):
+            recv = node.value.id
+            spec = None
+            if recv == "self" and cls in by_cls and \
+                    node.attr in by_cls[cls].attrs:
+                spec = by_cls[cls]
+                if in_init:
+                    spec = None          # construction is single-threaded
+            elif recv in by_recv and node.attr in by_recv[recv].attrs:
+                spec = by_recv[recv]
+            if spec is not None and spec.lock not in held:
+                kind = "write" if isinstance(node.ctx,
+                                             (ast.Store, ast.Del)) \
+                    else "read"
+                flag(node, spec, kind)
+        if isinstance(node, ast.Call):
+            _, name = _call_name(node)
+            if name and name.endswith("_locked"):
+                want = {m.split(".", 1)[1]
+                        for k, m in methods.items()
+                        if k.split(".", 1)[1] == name}
+                if want and not (want & held):
+                    out.append(Violation(
+                        "HMG201", path, node.lineno,
+                        f"call to '{name}' without holding "
+                        f"{'/'.join(sorted(want))} — *_locked methods "
+                        "require the caller to hold the lock"))
+        for sub in ast.iter_child_nodes(node):
+            visit(sub, cls, fnstack, held)
+
+    for top in tree.body:
+        visit(top, None, (), frozenset())
+    return out
+
+
+# --------------------------------------------------------------------- HMG202
+def check_hmg202(path: str, tree: ast.Module,
+                 blocking: Tuple[str, ...] = BLOCKING_CALLS,
+                 lock_attrs: Tuple[str, ...] = HMG202_LOCK_ATTRS,
+                 methods: Optional[Dict[str, str]] = None
+                 ) -> List[Violation]:
+    methods = GUARDED_METHODS if methods is None else methods
+    out: List[Violation] = []
+
+    def scan_body(body, lock_name: str, cls: Optional[str]) -> None:
+        # explicit stack so nested def/lambda subtrees are PRUNED (their
+        # bodies run later, without the lock) — ast.walk would descend
+        stack = list(body)
+        while stack:
+            node = stack.pop()
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+                continue                 # deferred execution
+            if isinstance(node, ast.Call):
+                _, name = _call_name(node)
+                if name in blocking:
+                    out.append(Violation(
+                        "HMG202", path, node.lineno,
+                        f"blocking call '{name}()' while holding "
+                        f"{lock_name} — every other thread touching "
+                        "that structure stalls behind it; move the "
+                        "wait outside the critical section"))
+            stack.extend(ast.iter_child_nodes(node))
+
+    def visit(node: ast.AST, cls: Optional[str]) -> None:
+        if isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                visit(sub, node.name)
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            lk = _locked_method_lock(cls, node.name, methods)
+            if lk is not None and lk in lock_attrs:
+                scan_body(node.body, f"{cls}.{lk} (via {node.name})", cls)
+        if isinstance(node, ast.With):
+            for item in node.items:
+                hit = _lock_attr_of_with_item(item)
+                if hit and hit[1] in lock_attrs:
+                    scan_body(node.body, f"{hit[0]}.{hit[1]}", cls)
+                    break
+        for sub in ast.iter_child_nodes(node):
+            visit(sub, cls)
+
+    visit(tree, None)
+    # a with-block nested in a flagged outer with would double-report the
+    # same call; dedup on (line, message)
+    seen: Set[Tuple[int, str]] = set()
+    uniq = []
+    for v in out:
+        if (v.line, v.message) not in seen:
+            seen.add((v.line, v.message))
+            uniq.append(v)
+    return uniq
+
+
+# --------------------------------------------------------------------- HMG203
+def _lock_node_id(path: str, cls: Optional[str], recv: str, attr: str,
+                  guards: Iterable[GuardSpec]) -> str:
+    """Canonical cross-module name for a lock: class-qualified when
+    resolvable (``self`` inside a class, or a registered receiver),
+    file-qualified otherwise."""
+    if recv == "self" and cls:
+        return f"{cls}.{attr}"
+    for s in guards:
+        if s.lock == attr and recv in s.receivers:
+            return f"{s.cls}.{attr}"
+    return f"{_posix(path)}:{recv}.{attr}"
+
+
+def collect_lock_edges(path: str, tree: ast.Module,
+                       guards: Optional[Iterable[GuardSpec]] = None,
+                       acquiring: Optional[Dict[str, str]] = None,
+                       methods: Optional[Dict[str, str]] = None
+                       ) -> List[Tuple[str, str, int]]:
+    """All (held_lock, acquired_lock, line) pairs in one file, from nested
+    ``with``-lock blocks and calls into known lock-acquiring helpers."""
+    guards = GUARDED_BY if guards is None else tuple(guards)
+    acquiring = LOCK_ACQUIRING_CALLS if acquiring is None else acquiring
+    methods = GUARDED_METHODS if methods is None else methods
+    edges: List[Tuple[str, str, int]] = []
+
+    def visit(node: ast.AST, cls: Optional[str],
+              held: Tuple[str, ...]) -> None:
+        if isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                visit(sub, node.name, ())
+            return
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            base: Tuple[str, ...] = ()
+            lock_node = methods.get(f"{cls}.{node.name}")
+            if lock_node:
+                base = (lock_node,)
+            for sub in node.body:
+                visit(sub, cls, base)
+            return
+        if isinstance(node, ast.With):
+            new = held
+            for item in node.items:
+                hit = _lock_attr_of_with_item(item)
+                if hit:
+                    nid = _lock_node_id(path, cls, hit[0], hit[1], guards)
+                    for h in held:
+                        if h != nid:
+                            edges.append((h, nid, node.lineno))
+                    new = new + (nid,)
+            for sub in node.body:
+                visit(sub, cls, new)
+            return
+        if isinstance(node, ast.Call) and held:
+            _, name = _call_name(node)
+            target = acquiring.get(name or "")
+            if target:
+                for h in held:
+                    if h != target:
+                        edges.append((h, target, node.lineno))
+        for sub in ast.iter_child_nodes(node):
+            visit(sub, cls, held)
+
+    for top in tree.body:
+        visit(top, None, ())
+    return edges
+
+
+def check_hmg203(files: List[Tuple[str, ast.Module]],
+                 guards: Optional[Iterable[GuardSpec]] = None,
+                 acquiring: Optional[Dict[str, str]] = None,
+                 methods: Optional[Dict[str, str]] = None
+                 ) -> List[Violation]:
+    """Global pass: build the acquisition digraph over every file and fail
+    on cycles. Each edge remembers one witness site for the report."""
+    graph: Dict[str, Set[str]] = {}
+    witness: Dict[Tuple[str, str], Tuple[str, int]] = {}
+    for path, tree in files:
+        for a, b, line in collect_lock_edges(path, tree, guards, acquiring,
+                                             methods):
+            graph.setdefault(a, set()).add(b)
+            graph.setdefault(b, set())
+            witness.setdefault((a, b), (path, line))
+
+    out: List[Violation] = []
+    WHITE, GRAY, BLACK = 0, 1, 2
+    color = {n: WHITE for n in graph}
+    stack: List[str] = []
+
+    def dfs(n: str) -> Optional[List[str]]:
+        color[n] = GRAY
+        stack.append(n)
+        for nxt in sorted(graph[n]):
+            if color[nxt] == GRAY:
+                return stack[stack.index(nxt):] + [nxt]
+            if color[nxt] == WHITE:
+                cyc = dfs(nxt)
+                if cyc:
+                    return cyc
+        stack.pop()
+        color[n] = BLACK
+        return None
+
+    for n in sorted(graph):
+        if color[n] == WHITE:
+            cyc = dfs(n)
+            if cyc:
+                path, line = witness[(cyc[0], cyc[1])]
+                sites = "; ".join(
+                    f"{a}->{b} at {witness[(a, b)][0]}:{witness[(a, b)][1]}"
+                    for a, b in zip(cyc, cyc[1:]))
+                out.append(Violation(
+                    "HMG203", path, line,
+                    "lock acquisition cycle (potential deadlock): "
+                    + " -> ".join(cyc) + f" [{sites}]"))
+                break                    # one cycle report is actionable
+    return out
+
+
+# --------------------------------------------------------------------- HMG204
+def check_hmg204(path: str, tree: ast.Module,
+                 guards: Optional[Iterable[GuardSpec]] = None
+                 ) -> List[Violation]:
+    guards = GUARDED_BY if guards is None else tuple(guards)
+    out: List[Violation] = []
+    for top in ast.walk(tree):
+        if not isinstance(top, ast.ClassDef):
+            continue
+        spawns = any(
+            isinstance(n, ast.Call) and _call_name(n)[1] in
+            THREAD_SPAWN_CALLS for n in ast.walk(top))
+        if not spawns:
+            continue
+        declared: Set[str] = set()
+        for s in guards:
+            if s.cls == top.name:
+                declared |= set(s.attrs)
+                declared.add(s.lock)
+
+        def self_stores(fn: ast.AST):
+            for n in ast.walk(fn):
+                if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                        and n is not fn:
+                    continue
+                tgts = []
+                if isinstance(n, ast.Assign):
+                    tgts = n.targets
+                elif isinstance(n, (ast.AnnAssign, ast.AugAssign)):
+                    tgts = [n.target]
+                for t in tgts:
+                    for leaf in ast.walk(t):
+                        if isinstance(leaf, ast.Attribute) and \
+                                isinstance(leaf.value, ast.Name) and \
+                                leaf.value.id == "self":
+                            yield leaf
+
+        for fn in top.body:
+            if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if fn.name in _INIT_NAMES:
+                # publication starts at the first thread start/submit
+                started_at = min(
+                    (n.lineno for n in ast.walk(fn)
+                     if isinstance(n, ast.Call)
+                     and _call_name(n)[1] in THREAD_START_CALLS),
+                    default=None)
+                if started_at is None:
+                    continue
+                for leaf in self_stores(fn):
+                    if leaf.lineno > started_at and \
+                            leaf.attr not in declared:
+                        out.append(Violation(
+                            "HMG204", path, leaf.lineno,
+                            f"'{top.name}.{leaf.attr}' mutated after the "
+                            "worker thread started but is not in the "
+                            "guarded-by registry — declare it (and its "
+                            "lock) in GUARDED_BY"))
+            else:
+                for leaf in self_stores(fn):
+                    if leaf.attr not in declared:
+                        out.append(Violation(
+                            "HMG204", path, leaf.lineno,
+                            f"'{top.name}.{leaf.attr}' mutated while "
+                            f"'{top.name}' worker threads may be running "
+                            "but is not in the guarded-by registry — "
+                            "declare it (and its lock) in GUARDED_BY"))
+    return out
+
+
+CONCURRENCY_AST_RULES = {
+    "HMG201": check_hmg201,
+    "HMG202": check_hmg202,
+    "HMG204": check_hmg204,
+}

@@ -21,7 +21,8 @@ PRAGMA = re.compile(
     r"\s*(?:\((?P<reason>[^)]*)\))?\s*$")
 
 KNOWN_RULES = {"HMG001", "HMG002", "HMG003", "HMG004",
-               "HMG101", "HMG102", "HMG103"}
+               "HMG101", "HMG102", "HMG103",
+               "HMG201", "HMG202", "HMG203", "HMG204"}
 
 
 class PragmaIndex:

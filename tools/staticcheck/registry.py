@@ -90,6 +90,106 @@ FSYNC_CALLS = ("fsync", "fsync_file", "fsync_dir", "_sync", "sync")
 RENAME_CALLS = ("rename", "replace")      # as os.<name> attributes
 
 
+# ------------------------------------------------------------- HMG201-HMG204
+# Guarded-by registry: the shared mutable attributes of the repo's
+# concurrent classes and the lock that guards each set. HMG201 enforces the
+# discipline lexically (every read/write outside __init__ must sit inside a
+# ``with <recv>.<lock>`` block or a ``*_locked`` method); the dynamic
+# lockset checker (tools/racecheck.py) enforces it at runtime, importing
+# the classes via ``module``. docs/DESIGN.md §9 renders this table.
+@dataclasses.dataclass(frozen=True)
+class GuardSpec:
+    """One concurrent class and its guarded-by contract.
+
+    ``attrs`` accessed via ``self.<attr>`` inside methods of ``cls`` — or
+    via any receiver named in ``receivers`` anywhere in ``files`` — must be
+    lexically inside ``with <recv>.<lock>`` (double-checked fast-path reads
+    carry a reasoned pragma). ``module`` lets racecheck import the class
+    for dynamic instrumentation."""
+    cls: str
+    module: str
+    lock: str
+    attrs: Tuple[str, ...]
+    files: Tuple[str, ...]
+    receivers: Tuple[str, ...] = ()       # non-self receivers to audit
+
+
+GUARDED_BY: Tuple[GuardSpec, ...] = (
+    GuardSpec("Histogram", "repro.obs.metrics", "_lock",
+              ("bucket_counts", "count", "total", "vmax", "_window",
+               "_wpos"),
+              ("src/repro/obs/metrics.py",)),
+    GuardSpec("MetricsRegistry", "repro.obs.metrics", "_lock",
+              ("_counters", "_gauges", "_histograms"),
+              ("src/repro/obs/metrics.py",)),
+    GuardSpec("CheckpointManager", "repro.checkpoint.checkpoint", "_lock",
+              ("_pending", "_error"),
+              ("src/repro/checkpoint/checkpoint.py",)),
+    GuardSpec("WorkloadStats", "repro.core.partitioner", "_lock",
+              ("hits",),
+              ("src/repro/core/partitioner.py", "src/repro/core/index.py",
+               "src/repro/query/executor.py")),
+    GuardSpec("Prefetcher", "repro.data.pipeline", "_lock",
+              ("step", "q", "_stop", "_thread"),
+              ("src/repro/data/pipeline.py",)),
+    # ModalityIndex's lazily-built caches are owned by HMGIIndex's
+    # _cache_lock (the facade builds/invalidates them; readers go through
+    # the double-checked helpers) — accesses appear as ``m.<attr>``.
+    GuardSpec("ModalityIndex", "repro.core.index", "_cache_lock",
+              ("ivf_sharded", "id_rows"),
+              ("src/repro/core/index.py", "src/repro/query/executor.py"),
+              receivers=("m",)),
+)
+
+# Methods whose callers are required (and checked) to hold a lock: the
+# ``*_locked`` suffix is the repo convention for "the caller already holds
+# it". This maps each such method to the lock its body is considered to
+# hold (HMG201 treats the body as guarded; HMG203 uses it for edges; call
+# sites outside a ``with``-lock are HMG201 violations).
+GUARDED_METHODS: Dict[str, str] = {
+    "CheckpointManager._drain_pending_locked": "CheckpointManager._lock",
+    "HMGIIndex._insert_locked": "HMGIIndex._write_lock",
+    "HMGIIndex._maintain_locked": "HMGIIndex._write_lock",
+    "HMGIIndex._ingest_locked": "HMGIIndex._write_lock",
+    "HMGIIndex._compact_locked": "HMGIIndex._write_lock",
+    "HMGIIndex._state_tree_locked": "HMGIIndex._write_lock",
+    "HMGIIndex._restore_state_locked": "HMGIIndex._write_lock",
+}
+
+# HMG202: calls that block (filesystem sync, host sync on device work,
+# timed waits, thread/future joins) — none may run while one of the
+# audited fine-grained locks is held, or every other thread touching that
+# structure stalls behind the I/O. The coarse writer lock
+# (HMGIIndex._write_lock) is deliberately NOT audited: it serialises
+# mutations, and device work under it is the single-writer design.
+BLOCKING_CALLS = ("fsync", "fsync_file", "fsync_dir", "sleep",
+                  "block_until_ready", "join", "result", "wait",
+                  "device_get")
+HMG202_LOCK_ATTRS = ("_lock", "_cache_lock")
+
+# HMG203: calls that acquire a known lock internally — lexical ``with``
+# nesting alone would miss ``obs.counter(...).inc()`` under another lock.
+# callee name -> lock node it acquires.
+LOCK_ACQUIRING_CALLS: Dict[str, str] = {
+    "counter": "MetricsRegistry._lock",
+    "gauge": "MetricsRegistry._lock",
+    "histogram": "MetricsRegistry._lock",
+    "observe": "Histogram._lock",
+    "observe_ms": "Histogram._lock",
+    "inc": "Counter._lock",
+    "record": "WorkloadStats._lock",
+    "hits_snapshot": "WorkloadStats._lock",
+    "load_hits": "WorkloadStats._lock",
+    "_ensure_sharded": "HMGIIndex._cache_lock",
+    "_modality_id_rows": "HMGIIndex._cache_lock",
+}
+
+# HMG204: markers that a class runs background threads ("publication"
+# starts at the first of these) and the constructors that create them.
+THREAD_SPAWN_CALLS = ("Thread", "ThreadPoolExecutor", "Timer")
+THREAD_START_CALLS = ("start", "submit")
+
+
 # ===========================================================================
 # trace-level registry (jax-importing; everything below is lazy)
 # ===========================================================================
