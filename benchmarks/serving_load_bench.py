@@ -1,20 +1,38 @@
-"""Open-loop serving load benchmark: QPS and p50/p99 vs concurrency.
+"""Open-loop serving load benchmark: QPS and p50/p99 vs concurrency,
+batched vs unbatched retrieval.
 
-The ROADMAP's serving deliverable: drive the query facade with N
-concurrent client streams issuing single-query searches at scheduled
-arrival times (open loop — arrivals do not wait for completions, so queue
-wait is part of latency, the way a latency SLO sees it), and report
-throughput and tail latency **from the obs registry**: each request's
-latency is observed into the ``serving.request_ms`` histogram and the
-reported p50/p99 are that histogram's exact-quantile readout.
+The ROADMAP's serving deliverable: drive the serving retrieval path
+(``repro.serving.retrieval.RetrievalService``) with N concurrent client
+streams issuing single-query searches at scheduled arrival times (open
+loop — arrivals do not wait for completions, so queue wait is part of
+latency, the way a latency SLO sees it), and report throughput and tail
+latency **from the obs registry**: each request's latency is observed
+into the ``serving.request_ms`` histogram and the reported p50/p99 are
+that histogram's exact-quantile readout.
 
-Arrival pacing: the single-stream mean service time is calibrated first;
-each stream then offers ``utilization / (t_service * max_streams)`` QPS,
-so offered load grows linearly with the stream count and reaches
-``utilization`` of single-device capacity at the largest level — low
-levels measure un-queued latency, the top level measures queueing near
-saturation. JAX releases the GIL during device execution, so
-thread-per-stream genuinely overlaps dispatch with device work.
+Two modes per level (``--batching both``, the default):
+
+- ``off`` — every request runs its own pow2-bucketed ``(1, k)`` call
+  (the pre-micro-batching serving path);
+- ``on``  — requests arriving within the micro-batch window ride one
+  ``(Q, k)`` call through ``MicroBatcher`` (``batch_q`` in the CSV is the
+  mean realised batch size from the ``serving.batch_q`` histogram).
+
+Both modes use the same bucketed entry (``search_bucketed``, floor 2), so
+with ``--check`` every response in *both* modes is validated bit-exactly
+against one precomputed solo-request reference table — the bench measures
+correctness under load and under co-batching, not just latency. The
+hot-result cache is disabled here: repeated queries would let cache hits
+masquerade as batching throughput.
+
+Arrival pacing: the single-stream unbatched service time is calibrated
+first; each stream then offers ``utilization / (t_service * max_streams)``
+QPS — the *same* interval for both modes, so the speedup line compares
+like against like. The default utilization oversubscribes the unbatched
+path (~3x calibrated capacity): the top level saturates, and each mode's
+QPS reads out its actual capacity. JAX releases the GIL during device
+execution, so thread-per-stream genuinely overlaps dispatch with device
+work.
 
 Also prints the instrumentation overhead check: single-stream query p50
 with the obs layer enabled (tracing off — the always-on configuration)
@@ -23,7 +41,7 @@ cancel drift. The enabled p50 must stay within ~5% of the disabled one
 for "cheap enough to leave always-on" to hold.
 
     PYTHONPATH=src python benchmarks/serving_load_bench.py \
-        --streams 1,8,64 --duration 5
+        --streams 1,8,64 --duration 5 --check
 """
 from __future__ import annotations
 
@@ -35,6 +53,7 @@ import numpy as np
 import jax
 
 from repro import obs
+from repro.serving.retrieval import RetrievalPlan, RetrievalService
 
 try:
     from benchmarks.common import (build_hmgi, load_corpus, make_queries,
@@ -43,6 +62,7 @@ except ImportError:                     # script-style invocation
     from common import build_hmgi, load_corpus, make_queries, primary_mod
 
 REQUEST_HIST = "serving.request_ms"
+BATCH_HIST = "serving.batch_q"
 
 
 def _one_query(index, q1, modality, k):
@@ -51,14 +71,38 @@ def _one_query(index, q1, modality, k):
     return sv, si
 
 
-def calibrate(index, queries, modality, k, warmup=8, trials=32) -> float:
-    """Mean single-stream service seconds per request (after compile)."""
+def make_services(index, modality, k, window_s):
+    """(plan, unbatched service, batched service). No cache in either —
+    repeated queries would let cache hits masquerade as batching
+    throughput."""
+    plan = RetrievalPlan(modality=modality, k=k)
+    off = RetrievalService(index, batching=False, cache=None)
+    on = RetrievalService(index, batching=True, window_s=window_s,
+                          max_batch=64, cache=None)
+    return plan, off, on
+
+
+def calibrate(service, plan, queries, warmup=8, trials=32) -> float:
+    """Mean single-stream unbatched service seconds per request (after
+    compile). Warmup also compiles the pow2 buckets the batched mode will
+    hit, so neither mode pays compiles inside a measured level."""
     for i in range(warmup):
-        _one_query(index, queries[i % len(queries)][None], modality, k)
+        service.search(plan, queries[i % len(queries)][None])
     t0 = time.perf_counter()
     for i in range(trials):
-        _one_query(index, queries[i % len(queries)][None], modality, k)
+        service.search(plan, queries[i % len(queries)][None])
     return (time.perf_counter() - t0) / trials
+
+
+def warm_buckets(index, plan, queries, max_batch=64):
+    """Compile every pow2 (Q, k) bucket up to max_batch once, so the
+    batched levels never pay a compile mid-measurement."""
+    from repro.serving.retrieval import run_plan
+    b = 2
+    while b <= max_batch:
+        run_plan(index, plan, np.stack([queries[i % len(queries)]
+                                        for i in range(b)]))
+        b *= 2
 
 
 def overhead_check(index, queries, modality, k, rounds=6, per_round=24):
@@ -80,15 +124,17 @@ def overhead_check(index, queries, modality, k, rounds=6, per_round=24):
             float(np.percentile(lat[False], 50)) * 1e3)
 
 
-def run_level(index, queries, modality, k, n_streams, duration_s,
+def run_level(service, plan, queries, mode, n_streams, duration_s,
               interval_s, check_ref=None) -> dict:
-    """One concurrency level: n_streams open-loop clients for duration_s.
-    Latency is measured from each request's *scheduled* arrival time, so a
-    request that waited on a busy device is charged its queue time.
+    """One (mode, concurrency) level: n_streams open-loop clients for
+    duration_s. Latency is measured from each request's *scheduled*
+    arrival time, so a request that waited on a busy device is charged
+    its queue time.
 
-    check_ref: optional per-query (scores, ids) precomputed single-thread
+    check_ref: optional per-query (scores, ids) precomputed solo-request
     reference — every stream then validates each response bit-exactly, so
-    the bench measures correctness under load, not just latency."""
+    the bench measures correctness under load (and, in batched mode,
+    under co-batching with whatever else arrived), not just latency."""
     obs.reset()
     barrier = threading.Barrier(n_streams + 1)
     errors = []
@@ -106,7 +152,7 @@ def run_level(index, queries, modality, k, n_streams, duration_s,
                 if sched > now:
                     time.sleep(sched - now)
                 qi = (sid + n) % len(queries)
-                sv, si = _one_query(index, queries[qi][None], modality, k)
+                sv, si = service.search(plan, queries[qi][None])
                 obs.observe_ms(REQUEST_HIST, time.perf_counter() - sched)
                 if check_ref is not None:
                     rv, ri = check_ref[qi]
@@ -114,7 +160,7 @@ def run_level(index, queries, modality, k, n_streams, duration_s,
                             and np.array_equal(np.asarray(si), ri)):
                         raise RuntimeError(
                             f"response for query {qi} diverged from the "
-                            "single-thread reference under concurrency")
+                            f"solo-request reference ({mode} mode)")
                 n += 1
         except Exception as e:          # surface, don't hang the join
             errors.append((sid, e))
@@ -136,10 +182,13 @@ def run_level(index, queries, modality, k, n_streams, duration_s,
             f"{len(errors)} of {n_streams} stream(s) failed: {detail}"
         ) from errors[0][1]
     h = obs.registry().histogram(REQUEST_HIST)
-    return {"streams": n_streams, "requests": h.count,
+    bh = obs.registry().histogram(BATCH_HIST)
+    batch_q = (bh.total / bh.count) if bh.count else 1.0
+    return {"mode": mode, "streams": n_streams, "requests": h.count,
             "qps": h.count / elapsed,
             "offered_qps": n_streams / interval_s,
-            "p50_ms": h.percentile(50), "p99_ms": h.percentile(99)}
+            "p50_ms": h.percentile(50), "p99_ms": h.percentile(99),
+            "batch_q": batch_q}
 
 
 def main():
@@ -147,26 +196,40 @@ def main():
     ap.add_argument("--streams", type=str, default="1,8,64",
                     help="comma-separated concurrency levels")
     ap.add_argument("--duration", type=float, default=5.0,
-                    help="seconds per concurrency level")
+                    help="seconds per (mode, concurrency) level")
     ap.add_argument("--dataset", type=str, default="dec-10k")
     ap.add_argument("--k", type=int, default=10)
-    ap.add_argument("--utilization", type=float, default=0.7,
-                    help="offered load at the largest level, as a fraction "
-                         "of calibrated single-stream capacity")
+    ap.add_argument("--utilization", type=float, default=3.0,
+                    help="offered load at the largest level, as a multiple "
+                         "of calibrated single-stream unbatched capacity "
+                         "(>1 saturates: QPS reads out each mode's actual "
+                         "capacity)")
+    ap.add_argument("--batching", choices=("on", "off", "both"),
+                    default="both",
+                    help="retrieval mode(s) to run at each level")
+    ap.add_argument("--window-ms", type=float, default=1.0,
+                    help="micro-batch collection window (batched mode)")
     ap.add_argument("--check", action="store_true",
                     help="validate every response bit-exactly against a "
-                         "precomputed single-thread reference")
+                         "precomputed solo-request reference")
     args = ap.parse_args()
     levels = [int(s) for s in args.streams.split(",")]
+    modes = (["off", "on"] if args.batching == "both" else [args.batching])
 
     corpus = load_corpus(args.dataset)
     modality = primary_mod(args.dataset)
     index = build_hmgi(corpus)
     queries = make_queries(corpus, modality, n=256)
 
-    t_service = calibrate(index, queries, modality, args.k)
-    print(f"# {args.dataset}: service time {t_service*1e3:.3f} ms/req, "
-          f"capacity ~{1.0/t_service:.0f} QPS")
+    plan, svc_off, svc_on = make_services(index, modality, args.k,
+                                          args.window_ms * 1e-3)
+    services = {"off": svc_off, "on": svc_on}
+
+    t_service = calibrate(svc_off, plan, queries)
+    print(f"# {args.dataset}: unbatched service time "
+          f"{t_service*1e3:.3f} ms/req, capacity ~{1.0/t_service:.0f} QPS")
+    if "on" in modes:
+        warm_buckets(index, plan, queries)
 
     en_p50, dis_p50 = overhead_check(index, queries, modality, args.k)
     delta = (en_p50 - dis_p50) / dis_p50 * 100.0
@@ -176,20 +239,33 @@ def main():
 
     check_ref = None
     if args.check:
-        check_ref = [tuple(np.asarray(x) for x in
-                           _one_query(index, q[None], modality, args.k))
+        # one reference table serves both modes: the bit-exactness
+        # contract says a request's bytes do not depend on co-batching
+        check_ref = [tuple(np.asarray(x)
+                           for x in svc_off.search(plan, q[None]))
                      for q in queries]
-        print(f"# check: {len(check_ref)} single-thread reference "
-              "responses precomputed; every stream validates bit-exactly")
+        print(f"# check: {len(check_ref)} solo-request reference "
+              "responses precomputed; every stream in every mode "
+              "validates bit-exactly")
 
-    # per-stream interval so the top level offers utilization × capacity
+    # per-stream interval so the top level offers utilization × unbatched
+    # capacity — the SAME interval for both modes
     interval_s = t_service * max(levels) / args.utilization
-    print("streams,requests,offered_qps,qps,p50_ms,p99_ms")
+    print("mode,streams,requests,offered_qps,qps,p50_ms,p99_ms,batch_q")
+    qps = {}
     for s in levels:
-        r = run_level(index, queries, modality, args.k, s, args.duration,
-                      interval_s, check_ref=check_ref)
-        print(f"{r['streams']},{r['requests']},{r['offered_qps']:.1f},"
-              f"{r['qps']:.1f},{r['p50_ms']:.3f},{r['p99_ms']:.3f}")
+        for mode in modes:
+            r = run_level(services[mode], plan, queries, mode, s,
+                          args.duration, interval_s, check_ref=check_ref)
+            qps[(mode, s)] = r["qps"]
+            print(f"{r['mode']},{r['streams']},{r['requests']},"
+                  f"{r['offered_qps']:.1f},{r['qps']:.1f},"
+                  f"{r['p50_ms']:.3f},{r['p99_ms']:.3f},"
+                  f"{r['batch_q']:.2f}")
+        if len(modes) == 2:
+            ratio = qps[("on", s)] / qps[("off", s)]
+            print(f"# speedup @{s} streams: {ratio:.2f}x QPS "
+                  "(batched vs unbatched)")
     if args.check:
         print("# check: PASS (all responses matched the reference)")
 

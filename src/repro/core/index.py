@@ -159,6 +159,25 @@ class HMGIIndex:
         self.quant_policy = AdaptiveQuantPolicy(cfg.memory_budget_bytes)
         self.n_nodes = 0
         self._metrics: Dict[str, float] = {}
+        # monotone mutation stamp: bumped by every change that can alter a
+        # search result (insert/delete/compact/applied maintenance/
+        # repartition/ingest/restore/attribute or sparse-doc swap). Serving
+        # caches key results on it — a stale entry can never be served
+        # because its stamp no longer matches. A *no-op* maintenance pass
+        # does not bump (the MaintenanceDriver ticks constantly; ticking
+        # must not flush hot caches).
+        self._version = 0
+
+    @property
+    def version(self) -> int:
+        """The mutation stamp (see ``__init__``). Read lock-free: a small
+        int is published atomically under the GIL, and a reader that sees
+        the pre-mutation value merely caches a result that the very next
+        stamp check discards — the same conservative direction as missing."""
+        return self._version
+
+    def _bump_version(self) -> None:
+        self._version += 1
 
     # ------------------------------------------------------------------ build
     def _split(self):
@@ -225,14 +244,21 @@ class HMGIIndex:
                 self.graph, self.communities)
         if node_attrs is not None:
             self.set_attributes(node_attrs)
+        self._bump_version()
 
     def set_attributes(self, node_attrs: Dict[str, np.ndarray]):
         """Attach/replace the relational attribute columns (global node id
-        keyed; see graph_store.NodeAttributes)."""
-        self.attributes = NodeAttributes.from_columns(self.n_nodes, node_attrs)
+        keyed; see graph_store.NodeAttributes). Swapping columns changes
+        every filtered result, so it bumps the version stamp."""
+        with self._write_lock:
+            self.attributes = NodeAttributes.from_columns(self.n_nodes,
+                                                          node_attrs)
+            self._bump_version()
 
     def set_sparse_docs(self, docs: rerank_mod.SparseVectors):
-        self.sparse_docs = docs
+        with self._write_lock:
+            self.sparse_docs = docs
+            self._bump_version()
 
     # ----------------------------------------------------------------- search
     def _norm_queries(self, queries) -> jax.Array:
@@ -496,6 +522,7 @@ class HMGIIndex:
                 self.maintain(modality)
             else:
                 self.compact(modality)
+        self._bump_version()
 
     def delete(self, modality: str, ids):
         """Tombstones the ids in ``modality`` (O(B) mask writes; the rows
@@ -508,6 +535,7 @@ class HMGIIndex:
             self._record_dead(m, ids_np)
             m.has_dead = True
             m.delta = delta_mod.delete(m.delta, jnp.asarray(ids, jnp.int32))
+            self._bump_version()
             if self.cfg.maint_auto:
                 self.maintain(modality)
 
@@ -537,6 +565,7 @@ class HMGIIndex:
             m.nsw = nsw_mod.build(
                 self._split(), m.vectors,
                 degree=min(self.cfg.nsw_degree, m.vectors.shape[0] - 1))
+        self._bump_version()
 
     def maybe_repartition(self, modality: str):
         """Workload-aware online adjustment (paper §3.2), as bounded work.
@@ -565,6 +594,7 @@ class HMGIIndex:
             with self._cache_lock:
                 m.ivf_sharded = None  # slots moved -> sharded replica stale
             m.workload.reset()
+            self._bump_version()
             return bool(res.get("moved", 0))
 
     def maintain(self, modality: Optional[str] = None,
@@ -656,6 +686,9 @@ class HMGIIndex:
             # the latest *applied* decision trail (a no-op pass leaves the
             # last real decision visible — that is the interesting one)
             self._metrics["maintenance"] = trail
+            # only an *applied* pass can change results: a no-op plan must
+            # not invalidate serving caches (the driver ticks constantly)
+            self._bump_version()
         return reports[modality] if modality else reports
 
     # ------------------------------------------------------- durability state
@@ -798,6 +831,7 @@ class HMGIIndex:
                 term_weights=jnp.asarray(np.asarray(tree["sparse/term_weights"])))
         else:
             self.sparse_docs = None
+        self._bump_version()
 
     # ------------------------------------------------------------------ stats
     def metrics(self) -> Dict[str, object]:

@@ -16,7 +16,7 @@ oversample loop)."""
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -250,6 +250,47 @@ def _post_filter(sv, si, node_pass):
     still carry the mask)."""
     ok = graph_mod.mask_pass(node_pass, si)
     return _topk_state(jnp.where(ok, sv, -jnp.inf), si, sv.shape[1])
+
+
+# ------------------------------------------------------- serving micro-batch
+def search_bucketed(index, queries, modality: str, *, k: int,
+                    n_probe: Optional[int] = None, where=None,
+                    n_hops: int = 0, impl: str = "auto",
+                    floor: int = 2) -> Tuple[np.ndarray, np.ndarray]:
+    """The cross-request retrieval entry: one ``(B, k)`` jitted call over
+    the pow2 bucket ``B = pow2_round(Q, lo=floor)``, rows sliced back to Q.
+
+    Padding replicates row 0 — every per-row computation in the pipeline
+    (probe assignment, scan, top-k, traversal, fusion, rescore) is
+    row-separable at fixed shape, so pad-row *content* cannot influence a
+    real row's result, and bucketing keeps the set of compiled shapes
+    O(log max_batch) (HMG102/HMG103 budgets stay flat).
+
+    The floor of 2 is load-bearing for bit-exactness: XLA:CPU specialises
+    the Q=1 contraction differently from Q>=2 (last-bit float divergence in
+    the fp32 rescore), while every B>=2 bucket computes rows identically.
+    With the floor, a request retrieved solo and the same request
+    co-batched with 63 others return byte-identical results — the oracle
+    contract tests/test_serving_batch.py pins.
+
+    Shared probe work is amortised structurally: ``run_seed`` scores the
+    centroids once per batch (one ``assign_topk`` feeds every co-batched
+    query's IVF scan), so Q requests pay one probe-assignment pass."""
+    q = np.asarray(queries, np.float32)
+    if q.ndim == 1:
+        q = q[None]
+    n_q = q.shape[0]
+    bucket = pow2_round(n_q, lo=max(int(floor), 1))
+    if bucket != n_q:
+        q = np.concatenate(
+            [q, np.broadcast_to(q[:1], (bucket - n_q,) + q.shape[1:])])
+    if n_hops > 0:
+        sv, si = index.hybrid_search(q, modality, k=k, n_hops=n_hops,
+                                     n_probe=n_probe, where=where)
+    else:
+        sv, si = index.search(q, modality, k=k, n_probe=n_probe,
+                              where=where, impl=impl)
+    return np.asarray(sv)[:n_q], np.asarray(si)[:n_q]
 
 
 # ----------------------------------------------------------------- execution

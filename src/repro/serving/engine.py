@@ -30,8 +30,10 @@ import numpy as np
 from repro import obs
 from repro.core import HMGIIndex
 from repro.models import lm
-from repro.serving.scheduler import (ContinuousBatcher, MaintenanceDriver,
-                                     Request)
+from repro.serving.cache import HotResultCache
+from repro.serving.retrieval import RetrievalPlan, RetrievalService
+from repro.serving.scheduler import (AdmissionController, ContinuousBatcher,
+                                     MaintenanceDriver, Request)
 
 
 @dataclasses.dataclass
@@ -49,17 +51,32 @@ class EngineConfig:
     # versioned snapshot when the index is a DurableHMGIIndex, bounding
     # crash-recovery replay at ~one interval's worth of ops
     snapshot_interval: int = 0
+    # retrieval path (repro.serving.retrieval.RetrievalService): micro-batch
+    # retrievals through the pow2-bucketed (Q, k) entry, with an optional
+    # version-invalidated hot-result cache (0 = no cache)
+    retrieval_batching: bool = True
+    retrieval_window_s: float = 0.001
+    retrieval_max_batch: int = 64
+    retrieval_cache_capacity: int = 256
 
 
 class RAGEngine:
     def __init__(self, lm_cfg, lm_params, index: Optional[HMGIIndex],
-                 cfg: EngineConfig = EngineConfig(), mesh=None):
+                 cfg: EngineConfig = EngineConfig(), mesh=None,
+                 admission: Optional[AdmissionController] = None):
         self.lm_cfg = lm_cfg
         self.params = lm_params
         self.index = index
         self.cfg = cfg
         self.mesh = mesh
-        self.batcher = ContinuousBatcher(cfg.n_slots)
+        self.batcher = ContinuousBatcher(cfg.n_slots, admission=admission)
+        self.retrieval = (RetrievalService(
+            index, batching=cfg.retrieval_batching,
+            window_s=cfg.retrieval_window_s,
+            max_batch=cfg.retrieval_max_batch,
+            cache=(HotResultCache(cfg.retrieval_cache_capacity)
+                   if cfg.retrieval_cache_capacity > 0 else None),
+            admission=admission) if index is not None else None)
         opts = lm.ExecOpts(q_block=0, remat=False)
         clen = lm.cache_len_for(lm_cfg, cfg.max_seq)
         self._cache, _ = lm.init_cache(lm_cfg, cfg.n_slots, clen)
@@ -88,12 +105,29 @@ class RAGEngine:
         return np.asarray(self._encode(self.params, jnp.asarray(token_batch)))
 
     # -- retrieval ------------------------------------------------------------
-    def retrieve(self, query_vecs: np.ndarray, modality: str = "text"):
+    def retrieve(self, query_vecs: np.ndarray, modality: str = "text",
+                 tenant: str = "default"):
+        """Hybrid retrieval through the serving path: pow2-bucketed batch
+        call + per-row hot-result cache (invalidated by the index version
+        stamp). Returns None when admission rejects the tenant."""
         if self.index is None:
             return None
         self.stats["retrievals"] += len(query_vecs)
-        scores, ids = self.index.hybrid_search(
-            query_vecs, modality, k=self.cfg.retrieve_k, n_hops=self.cfg.hops)
+        service = getattr(self, "retrieval", None)
+        if service is None:
+            # retrieval-only engines built without __init__ (tests, tools)
+            # keep the direct facade path
+            scores, ids = self.index.hybrid_search(
+                query_vecs, modality, k=self.cfg.retrieve_k,
+                n_hops=self.cfg.hops)
+            return np.asarray(ids)
+        plan = RetrievalPlan(modality=modality, k=self.cfg.retrieve_k,
+                             n_hops=self.cfg.hops)
+        got = service.search_many(plan, np.asarray(query_vecs),
+                                  tenant=tenant)
+        if got is None:
+            return None
+        _scores, ids = got
         return np.asarray(ids)
 
     # -- generation -----------------------------------------------------------

@@ -1,10 +1,12 @@
 """Continuous-batching scheduler: fixed decode slots, admission queue,
 per-slot sequence state (the Orca/vLLM iteration-level scheduling model,
-sized for a fixed-shape jitted decode step).
+sized for a fixed-shape jitted decode step), plus per-tenant token-bucket
+admission control shared by the decode and retrieval paths.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import deque
 from typing import Deque, Dict, List, Optional
@@ -22,6 +24,68 @@ class Request:
     generated: Optional[List[int]] = None
     done: bool = False
     submitted_s: float = 0.0           # perf_counter at submit (queue wait)
+    tenant: str = "default"            # admission-control accounting key
+
+
+# ------------------------------------------------------- per-tenant admission
+@dataclasses.dataclass(frozen=True)
+class TenantQuota:
+    """Token-bucket parameters for one tenant: ``rate`` tokens/second
+    refill into a bucket capped at ``burst``; each admitted request costs
+    one token. ``rate == burst == 0`` is the sanctioned zero-quota spelling
+    (always rejected)."""
+    rate: float
+    burst: float
+
+
+class AdmissionController:
+    """Per-tenant token-bucket admission (one shared instance gates both
+    the decode queue and the retrieval path).
+
+    ``try_admit`` is the whole protocol: refill the tenant's bucket by
+    elapsed-time x rate (capped at burst), spend one token if available.
+    Unknown tenants use ``default_quota``; with no default they are always
+    admitted (admission control is opt-in per tenant). Outcomes land in
+    the obs registry per tenant (``serving.tenant.<t>.admitted`` /
+    ``.rejected``) plus the aggregate ``serving.admission.*`` counters.
+
+    ``now`` is injectable so tests and the racecheck interleaver drive the
+    clock deterministically. One lock guards the bucket map (declared in
+    the staticcheck GUARDED_BY registry)."""
+
+    def __init__(self, quotas: Optional[Dict[str, TenantQuota]] = None,
+                 default_quota: Optional[TenantQuota] = None):
+        self.quotas = dict(quotas or {})
+        self.default_quota = default_quota
+        self._lock = threading.Lock()
+        self._buckets: Dict[str, List[float]] = {}  # tenant -> [tokens, ts]
+
+    def _quota(self, tenant: str) -> Optional[TenantQuota]:
+        return self.quotas.get(tenant, self.default_quota)
+
+    def try_admit(self, tenant: str = "default", *,
+                  now: Optional[float] = None) -> bool:
+        quota = self._quota(tenant)
+        if quota is None:
+            obs.counter(f"serving.tenant.{tenant}.admitted").inc()
+            obs.counter("serving.admission.admitted").inc()
+            return True
+        now = time.monotonic() if now is None else float(now)
+        with self._lock:
+            bucket = self._buckets.get(tenant)
+            if bucket is None:
+                bucket = [float(quota.burst), now]
+                self._buckets[tenant] = bucket
+            tokens, last = bucket
+            tokens = min(float(quota.burst),
+                         tokens + max(now - last, 0.0) * quota.rate)
+            ok = tokens >= 1.0
+            bucket[0] = tokens - 1.0 if ok else tokens
+            bucket[1] = now
+        verdict = "admitted" if ok else "rejected"
+        obs.counter(f"serving.tenant.{tenant}.{verdict}").inc()
+        obs.counter(f"serving.admission.{verdict}").inc()
+        return ok
 
 
 @dataclasses.dataclass
@@ -33,20 +97,43 @@ class Slot:
 
 
 class ContinuousBatcher:
-    """Admits requests into free slots; evicts finished ones each step."""
+    """Admits requests into free slots; evicts finished ones each step.
 
-    def __init__(self, n_slots: int):
+    With an ``AdmissionController`` attached, ``submit`` first spends one
+    of the request's tenant's tokens; with ``max_queue > 0`` the wait
+    queue is bounded and an arrival past the bound is rejected (load
+    shedding at the door instead of unbounded queue growth). A rejected
+    request is marked done with no generated tokens and counted under
+    ``serving.rejected`` (+ the per-tenant counter)."""
+
+    def __init__(self, n_slots: int,
+                 admission: Optional[AdmissionController] = None,
+                 max_queue: int = 0):
         self.slots = [Slot() for _ in range(n_slots)]
         self.queue: Deque[Request] = deque()
         self.requests: Dict[int, Request] = {}
+        self.admission = admission
+        self.max_queue = int(max_queue)
 
-    def submit(self, req: Request):
+    def submit(self, req: Request) -> bool:
         req.generated = []
         req.submitted_s = time.perf_counter()
+        if self.max_queue and len(self.queue) >= self.max_queue:
+            req.done = True
+            obs.counter("serving.rejected").inc()
+            obs.counter(f"serving.tenant.{req.tenant}.rejected").inc()
+            obs.counter("serving.rejected_queue_full").inc()
+            return False
+        if self.admission is not None \
+                and not self.admission.try_admit(req.tenant):
+            req.done = True
+            obs.counter("serving.rejected").inc()
+            return False
         self.requests[req.rid] = req
         self.queue.append(req)
         obs.counter("serving.submitted").inc()
         obs.gauge("serving.queue_depth").set(len(self.queue))
+        return True
 
     def admit(self) -> List[int]:
         """Fills free slots from the queue; returns newly admitted slot ids.
@@ -70,8 +157,9 @@ class ContinuousBatcher:
             s.remaining = req.max_new_tokens
             newly.append(i)
             obs.counter("serving.admitted").inc()
-            obs.observe_ms("serving.queue_wait",
-                           time.perf_counter() - req.submitted_s)
+            wait_s = time.perf_counter() - req.submitted_s
+            obs.observe_ms("serving.queue_wait", wait_s)
+            obs.observe_ms(f"serving.tenant.{req.tenant}.queue_wait", wait_s)
         if newly:
             obs.gauge("serving.queue_depth").set(len(self.queue))
         return newly

@@ -296,6 +296,45 @@ def test_lockset_warning_names_attribute_and_thread():
                for w in r["warnings"])
 
 
+def test_racy_result_cache_is_caught():
+    """The pre-fix serving hot-result cache shape (lock elided): some
+    schedule must expose the unguarded store."""
+    caught = 0
+    for seed in range(6):
+        r = rc.run_fixture(rc.RacyResultCache, seed=seed)
+        if r["builds"] > 1 or r["warnings"]:
+            caught += 1
+    assert caught > 0, "no schedule exposed the unguarded result cache"
+
+
+def test_guarded_result_cache_is_clean():
+    """The real HotResultCache (instrumented via the GUARDED_BY registry)
+    under the same schedules: concurrent missers may both store
+    (idempotent), but the lockset checker must stay quiet."""
+    for seed in range(6):
+        g = rc.run_fixture(rc.GuardedResultCacheFixture, seed=seed)
+        assert g["warnings"] == []
+
+
+def test_searcher_ops_cache_and_admission_paths():
+    """The canonical workload's serving state, single-threaded: a repeat
+    query hits the shared cache bit-identically, a writer mutation bumps
+    the version and the recompute still matches, and the admission
+    outcomes are the deterministic ones the workload asserts."""
+    index, queries, writes = rc._build_index()
+    cache, adm = rc._serving_state()
+    r1 = rc._searcher_ops(index, queries[0], cache=cache, admission=adm)
+    assert len(cache) == 1
+    r2 = rc._searcher_ops(index, queries[0], cache=cache, admission=adm)
+    for a, b in zip(r1, r2):
+        assert np.array_equal(a, b)
+    snaps = []
+    rc._writer_ops(index, 0, writes, snaps)      # bumps index.version
+    r3 = rc._searcher_ops(index, queries[0], cache=cache, admission=adm)
+    for a, b in zip(r1, r3):                     # modality-a unaffected
+        assert np.array_equal(a, b)
+
+
 # ----------------------------------------------- dynamic: schedules & replay
 def test_schedule_string_round_trip():
     s = rc.format_schedule(7, [0, 2, 1, 1, 0])
@@ -341,9 +380,11 @@ def test_canonical_workload_single_seed():
 
 # -------------------------------------------- tier-1 concurrent-search smoke
 def test_concurrent_search_matches_oracle():
-    """8 real (uninstrumented) threads hammer modality-"a" searches and the
-    lazily-built caches against a concurrent writer on "b"; every result
-    must be bit-identical to the single-threaded oracle."""
+    """8 real (uninstrumented) threads hammer modality-"a" searches — each
+    through the shared hot-result cache, racing hits, misses, and
+    version-stamp invalidations — and the lazily-built caches against a
+    concurrent writer on "b"; every result must be bit-identical to the
+    single-threaded oracle."""
     index, queries, writes = rc._build_index()
     oracle = [rc._searcher_ops(index, queries[i % queries.shape[0]])
               for i in range(8)]
@@ -352,6 +393,7 @@ def test_concurrent_search_matches_oracle():
     with index._cache_lock:
         m.ivf_sharded = None
         m.id_rows = None
+    cache, admission = rc._serving_state()
     errors = []
     barrier = threading.Barrier(9)
 
@@ -360,7 +402,8 @@ def test_concurrent_search_matches_oracle():
             barrier.wait()
             for _ in range(3):
                 sv, si, rows = rc._searcher_ops(
-                    index, queries[i % queries.shape[0]])
+                    index, queries[i % queries.shape[0]],
+                    cache=cache, admission=admission)
                 esv, esi, erows = oracle[i]
                 assert np.array_equal(sv, esv)
                 assert np.array_equal(si, esi)

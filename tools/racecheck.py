@@ -458,9 +458,52 @@ class GuardedLazyCache:
             return self.cache
 
 
+class RacyResultCache:
+    """The hot-result cache with its lock elided: unguarded get-then-store
+    on the entry dict plus a bare store counter. This is the pre-fix shape
+    of ``repro.serving.cache.HotResultCache`` — kept as the regression the
+    lockset checker must keep catching."""
+
+    def __init__(self):
+        self._lock = threading.Lock()        # exists, but never taken
+        self.entries: dict = {}
+        self.stores = 0
+
+    def get(self):
+        hit = self.entries.get("k")
+        if hit is None:
+            self.stores += 1
+            hit = self.entries["k"] = ("scores", self.stores)
+        return hit
+
+
+class GuardedResultCacheFixture:
+    """Drives the real serving ``HotResultCache`` (instrumented through the
+    GUARDED_BY registry) through the same lookup-or-store shape its racy
+    twin loses: concurrent missers may both compute and store — idempotent,
+    same key, same bytes — but every dict access rides ``_lock``, so the
+    lockset checker must stay quiet."""
+
+    def __init__(self):
+        import numpy as np
+        from repro.serving.cache import HotResultCache
+        self.cache = HotResultCache(capacity=4)
+        self.q = np.ones((1, 4), np.float32)
+        self.scores = np.zeros((1, 2), np.float32)
+        self.ids = np.arange(2, dtype=np.int32)[None]
+
+    def get(self):
+        hit = self.cache.lookup("plan", self.q, 0)
+        if hit is None:
+            self.cache.store("plan", self.q, 0, self.scores, self.ids)
+            hit = self.cache.lookup("plan", self.q, 0)
+        return hit
+
+
 _FIXTURE_SPECS = (
     (RacyLazyCache, ("cache", "builds"), ("_lock",)),
     (GuardedLazyCache, ("cache", "builds"), ("_lock",)),
+    (RacyResultCache, ("entries", "stores"), ("_lock",)),
 )
 
 
@@ -475,7 +518,10 @@ def run_fixture(cls, seed: int = 0, n_threads: int = 3,
         for i in range(n_threads):
             sched.spawn(obj.get, name=f"fix-{i}")
         schedule = sched.run()
-    return {"builds": obj.builds, "warnings": list(checker.warnings),
+    builds = getattr(obj, "builds", None)
+    if builds is None:
+        builds = getattr(obj, "stores", 0)
+    return {"builds": builds, "warnings": list(checker.warnings),
             "schedule": schedule}
 
 
@@ -492,6 +538,15 @@ def fixture_selftest(seeds: Sequence[int]) -> Tuple[int, int]:
             catches += 1
         g = run_fixture(GuardedLazyCache, seed=s)
         if g["builds"] != 1 or g["warnings"]:
+            guarded_failures += 1
+        r = run_fixture(RacyResultCache, seed=s)
+        if r["builds"] > 1 or r["warnings"]:
+            catches += 1
+        g = run_fixture(GuardedResultCacheFixture, seed=s)
+        # concurrent missers may legitimately both store (idempotent
+        # same-key overwrite) — only a lockset warning fails the guarded
+        # result cache
+        if g["warnings"]:
             guarded_failures += 1
     return catches, guarded_failures
 
@@ -538,12 +593,45 @@ def _build_index(seed_data: int = 0):
     return index, queries, (upd_ids, upd, del_ids)
 
 
-def _searcher_ops(index, q, k: int = 5):
+def _serving_state():
+    """The serving-layer shared state the searchers race over: one
+    hot-result cache and one admission controller with a huge-burst tenant
+    ("hot", deterministically always admitted) and a zero-quota tenant
+    ("zero", deterministically always rejected) — outcomes that cannot
+    depend on interleaving, so they assert cleanly under any schedule."""
+    from repro.serving.cache import HotResultCache
+    from repro.serving.scheduler import AdmissionController, TenantQuota
+    return (HotResultCache(capacity=8),
+            AdmissionController({"hot": TenantQuota(rate=0.0, burst=1e9),
+                                 "zero": TenantQuota(rate=0.0, burst=0.0)}))
+
+
+def _searcher_ops(index, q, k: int = 5, cache=None, admission=None):
     """One searcher round: a modality-"a" search plus direct hits on both
     lazily-built caches (the double-checked publication paths under test —
-    the facade alone cannot reach the sharded layout without a mesh)."""
+    the facade alone cannot reach the sharded layout without a mesh).
+
+    With serving state attached the search goes lookup-or-store through
+    the shared ``HotResultCache`` stamped with ``index.version`` — the
+    writer's modality-"b" mutations bump the stamp, so searchers race
+    hits, misses, and invalidations against it — and each round spends
+    admission tokens with deterministic outcomes."""
     import numpy as np
-    sv, si = index.search(q, "a", k=k)
+    if admission is not None:
+        assert admission.try_admit("hot", now=0.0), "hot tenant starved"
+        assert not admission.try_admit("zero", now=0.0), \
+            "zero-quota tenant admitted"
+    if cache is not None:
+        version = index.version
+        hit = cache.lookup(("a", k), q, version)
+        if hit is None:
+            sv, si = index.search(q, "a", k=k)
+            sv, si = np.asarray(sv), np.asarray(si)
+            cache.store(("a", k), q, version, sv, si)
+        else:
+            sv, si = hit
+    else:
+        sv, si = index.search(q, "a", k=k)
     rows = index._modality_id_rows("a")
     index._ensure_sharded("a", 1)
     return np.asarray(sv), np.asarray(si), np.asarray(rows)
@@ -586,7 +674,9 @@ def canonical_workload(seed: int = 0,
         # ---- phase 1: oracle (main thread: no scheduling, no recording)
         index, queries, writes = _build_index()
         steps = writes[0].shape[0]
-        expected = [_searcher_ops(index, queries[i % queries.shape[0]])
+        cache, admission = _serving_state()
+        expected = [_searcher_ops(index, queries[i % queries.shape[0]],
+                                  cache=cache, admission=admission)
                     for i in range(n_searchers)]
         oracle_snap = None
         oracle_snaps: List[dict] = []
@@ -601,6 +691,7 @@ def canonical_workload(seed: int = 0,
 
         # ---- phase 2: the same workload, interleaved
         index, queries, writes = _build_index()
+        cache, admission = _serving_state()
         sched = Interleaver(seed, replay=replay, timeout_s=timeout_s)
         results: Dict[int, list] = {i: [] for i in range(n_searchers)}
         snaps: List[dict] = []
@@ -608,7 +699,8 @@ def canonical_workload(seed: int = 0,
         def searcher(i: int) -> None:
             for _ in range(rounds):
                 results[i].append(
-                    _searcher_ops(index, queries[i % queries.shape[0]]))
+                    _searcher_ops(index, queries[i % queries.shape[0]],
+                                  cache=cache, admission=admission))
 
         def writer() -> None:
             for step in range(steps):

@@ -139,6 +139,18 @@ GUARDED_BY: Tuple[GuardSpec, ...] = (
               ("ivf_sharded", "id_rows"),
               ("src/repro/core/index.py", "src/repro/query/executor.py"),
               receivers=("m",)),
+    # serving layer (PR 10): the hot-result cache's LRU dict, the admission
+    # controller's token buckets, and the micro-batcher's combining-funnel
+    # state are each guarded by their own leaf lock
+    GuardSpec("HotResultCache", "repro.serving.cache", "_lock",
+              ("_entries", "_stores"),
+              ("src/repro/serving/cache.py",)),
+    GuardSpec("AdmissionController", "repro.serving.scheduler", "_lock",
+              ("_buckets",),
+              ("src/repro/serving/scheduler.py",)),
+    GuardSpec("MicroBatcher", "repro.serving.retrieval", "_lock",
+              ("_pending", "_leader"),
+              ("src/repro/serving/retrieval.py",)),
 )
 
 # Methods whose callers are required (and checked) to hold a lock: the
@@ -154,6 +166,7 @@ GUARDED_METHODS: Dict[str, str] = {
     "HMGIIndex._compact_locked": "HMGIIndex._write_lock",
     "HMGIIndex._state_tree_locked": "HMGIIndex._write_lock",
     "HMGIIndex._restore_state_locked": "HMGIIndex._write_lock",
+    "MicroBatcher._take_batch_locked": "MicroBatcher._lock",
 }
 
 # HMG202: calls that block (filesystem sync, host sync on device work,
@@ -182,6 +195,7 @@ LOCK_ACQUIRING_CALLS: Dict[str, str] = {
     "load_hits": "WorkloadStats._lock",
     "_ensure_sharded": "HMGIIndex._cache_lock",
     "_modality_id_rows": "HMGIIndex._cache_lock",
+    "try_admit": "AdmissionController._lock",
 }
 
 # HMG204: markers that a class runs background threads ("publication"
